@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def table(rows: List[Dict], columns: List[str], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(f"\n### {title}")
+    lines.append("| " + " | ".join(columns) + " |")
+    lines.append("|" + "|".join(["---"] * len(columns)) + "|")
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in columns)
+                     + " |")
+    return "\n".join(lines)
+
+
+def fmt(x, nd=4):
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return str(x)

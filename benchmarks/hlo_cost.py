@@ -1,0 +1,291 @@
+"""Loop-aware cost model over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+scan-over-layers transformer therefore reports 1-layer FLOPs (verified in
+EXPERIMENTS.md §Dry-run).  This analyzer re-walks the optimized HLO text,
+builds the call graph (fusion ``calls=``, while ``body=/condition=``,
+``to_apply=``), extracts while trip counts from the loop-condition's
+compare-against-constant, and weights every computation by the product of
+enclosing trip counts.
+
+Accounting conventions (documented for the roofline):
+* FLOPs: 2·|result|·K for every ``dot``; elementwise/reduce ops are counted
+  at 1 flop per output element (they are noise next to the dots).
+* bytes: operands + result at each instruction *call site*; fusion-internal
+  instructions contribute FLOPs but not bytes (fusions read inputs once) —
+  matching XLA's own fusion-aware traffic model.
+* collectives: operand bytes of all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute, weighted by trip counts.  (all-gather and
+  reduce-scatter report their *large* (gathered/pre-scatter) shape; wire
+  bytes per device are ~(n-1)/n of that and we leave the ratio at 1 for a
+  conservative collective term.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "u64": 8, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)|"
+                       r"body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rhs: str
+    op: str
+    result_type: str
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    flops_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective.values()))
+
+    def top_bytes(self, n=12):
+        return sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+_OPNAME_RE = re.compile(
+    r"^(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?(?:\s*,\s*"
+    r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)*)\s+([\w\-]+)\(")
+
+
+def _parse(hlo: str):
+    """-> (computations: name -> [Instr], whiles, entry_name, shapes)."""
+    comps: Dict[str, List[Instr]] = {}
+    shapes: Dict[str, str] = {}
+    cur: Optional[str] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.startswith("HloModule"):
+            continue
+        mc = _COMP_RE.match(s)
+        if mc and s.endswith("{"):
+            cur = mc.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY") or raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if s.startswith("ENTRY"):
+            mc2 = re.match(r"ENTRY\s+%?([\w\.\-]+)", s)
+            if mc2:
+                cur = mc2.group(1)
+                comps[cur] = []
+                entry = cur
+            continue
+        if s == "}":
+            continue
+        md = _DEF_RE.match(s)
+        if md and cur is not None:
+            name, rhs = md.group(1), md.group(2)
+            # result type = prefix of rhs up to the op name
+            mo = _OPNAME_RE.match(rhs)
+            op = mo.group(1) if mo else ""
+            rtype = rhs.split(op + "(")[0] if op else rhs
+            comps[cur].append(Instr(name=name, rhs=rhs, op=op,
+                                    result_type=rtype))
+            shapes[name] = rtype
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry, shapes
+
+
+def _trip_count(cond_comp: List[Instr]) -> int:
+    """Trip count heuristic: the constant compared against in the condition.
+
+    jax scans/fori_loops lower to `compare(counter, constant(N), LT)`; the
+    counter starts at 0 (scan) or the fori lower bound, so N is an upper
+    bound on trips — exact for scan, off by `lower` for fori(lower>0)."""
+    consts = []
+    for ins in cond_comp:
+        m = re.search(r"constant\((\d+)\)", ins.rhs)
+        if m and ins.result_type.strip().startswith(("s32", "s64", "u32",
+                                                     "u64")):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    dims = _shape_dims(ins.result_type)
+    out = 1.0
+    for d in dims:
+        out *= d
+    m = re.search(r"dot\(%?([\w\.\-]+),", ins.rhs)
+    k = 1.0
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+    if m and mc and m.group(1) in shapes:
+        lhs_dims = _shape_dims(shapes[m.group(1)])
+        for ci in mc.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                k *= lhs_dims[int(ci)]
+    return 2.0 * out * k
+
+
+def _param_charges(callee: List[Instr]) -> Dict[int, float]:
+    """For a fusion computation, decide per-parameter byte charges.
+
+    A parameter consumed ONLY by gather/dynamic-slice ops is charged at the
+    sum of those ops' result sizes (the rows actually touched), not the full
+    array — otherwise embedding lookups / per-round center gathers would be
+    charged at full-table size per call."""
+    params: Dict[str, int] = {}
+    for ins in callee:
+        m = re.search(r"parameter\((\d+)\)", ins.rhs)
+        if m and ins.op == "parameter":
+            params[ins.name] = int(m.group(1))
+    charges: Dict[int, float] = {}
+    for pname, pidx in params.items():
+        gathered = 0.0
+        only_gather = True
+        for ins in callee:
+            if ins.op == "parameter":
+                continue
+            ops = _OPERAND_RE.findall(
+                ins.rhs.split("(", 1)[1] if "(" in ins.rhs else "")
+            if pname not in ops:
+                continue
+            if ins.op in ("gather", "dynamic-slice"):
+                gathered += _shape_bytes(ins.result_type)
+            else:
+                only_gather = False
+                break
+        if only_gather and gathered > 0:
+            charges[pidx] = gathered
+    return charges
+
+
+def analyze_hlo(hlo: str) -> CostReport:
+    comps, entry, shapes = _parse(hlo)
+    # call graph weights
+    weights: Dict[str, float] = defaultdict(float)
+    fusion_called: set = set()
+    while_meta: Dict[str, Tuple[str, str]] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "while" or " while(" in " " + ins.rhs:
+                mw = _WHILE_RE.search(ins.rhs)
+                if mw:
+                    g = mw.groups()
+                    cond, body = (g[0], g[1]) if g[0] else (g[3], g[2])
+                    while_meta[cname + "/" + ins.name] = (cond, body)
+            for callee in _CALLS_RE.findall(ins.rhs):
+                fusion_called.add(callee)
+
+    def visit(cname: str, w: float, seen: Tuple[str, ...] = ()):
+        if cname not in comps or cname in seen:
+            return
+        weights[cname] += w
+        for ins in comps[cname]:
+            mw = _WHILE_RE.search(ins.rhs) if ("while(" in ins.rhs) else None
+            if mw:
+                g = mw.groups()
+                cond, body = (g[0], g[1]) if g[0] else (g[3], g[2])
+                trips = _trip_count(comps.get(cond, []))
+                visit(cond, w * trips, seen + (cname,))
+                visit(body, w * trips, seen + (cname,))
+            else:
+                for callee in _CALLS_RE.findall(ins.rhs):
+                    visit(callee, w, seen + (cname,))
+
+    visit(entry, 1.0)
+
+    report = CostReport()
+    for cname, instrs in comps.items():
+        w = weights.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        in_fusion = cname in fusion_called and not cname.startswith("region")
+        for ins in instrs:
+            if ins.op == "dot":
+                fl = w * _dot_flops(ins, shapes)
+                report.flops += fl
+                report.flops_by_op["dot"] += fl
+            elif ins.op in ("add", "multiply", "subtract", "divide", "tanh",
+                            "exponential", "rsqrt", "maximum", "minimum",
+                            "reduce", "convert", "select", "compare"):
+                dims = _shape_dims(ins.result_type)
+                n = 1.0
+                for d in dims:
+                    n *= d
+                report.flops += w * n
+                report.flops_by_op[ins.op] += w * n
+            # bytes: call-site accounting only
+            if in_fusion:
+                continue
+            if ins.op in _SKIP_BYTES_OPS or not ins.op:
+                continue
+            if "while(" in ins.rhs:
+                continue  # carried tuple isn't real traffic per trip
+            nbytes = _shape_bytes(ins.result_type)
+            charges: Dict[int, float] = {}
+            if ins.op == "fusion":
+                mcall = _CALLS_RE.search(ins.rhs)
+                if mcall and mcall.group(1) in comps:
+                    charges = _param_charges(comps[mcall.group(1)])
+            arglist = (ins.rhs.split("(", 1)[1].split(")", 1)[0]
+                       if "(" in ins.rhs else "")
+            operands = _OPERAND_RE.findall(arglist)
+            for oi, operand in enumerate(operands):
+                if operand in shapes:
+                    full = _shape_bytes(shapes[operand])
+                    nbytes += min(charges.get(oi, full), full)
+            report.bytes += w * nbytes
+            report.bytes_by_op[ins.op] += w * nbytes
+            for cop in COLLECTIVE_OPS:
+                if ins.op.startswith(cop) and not ins.op.endswith("-done"):
+                    report.collective[cop] += w * _shape_bytes(ins.result_type)
+                    break
+    return report

@@ -1,0 +1,108 @@
+"""Roofline aggregation: results/*.json (from launch/dryrun.py) -> the
+three-term table of EXPERIMENTS.md §Roofline.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute_s    = flops_per_device   / 197e12
+    memory_s     = bytes_per_device   / 819e9
+    collective_s = collective_bytes_per_device / 50e9
+
+(The per-device convention: dry-run numbers are per-chip after SPMD
+partitioning, so dividing by per-chip peaks gives step seconds directly —
+equivalent to the global-FLOPs/(chips×peak) formula.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_row(info: Dict) -> Dict:
+    comp = info["flops_per_device"] / PEAK_FLOPS
+    mem = info["bytes_per_device"] / HBM_BW
+    coll = info["collective_total"] / ICI_BW
+    dominant = max(("compute", comp), ("memory", mem),
+                   ("collective", coll), key=lambda kv: kv[1])
+    # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); D = tokens per device
+    toks = info.get("tokens_per_device", None)
+    model_flops = None
+    useful = None
+    if info.get("params") and toks:
+        n_active = info["params"] * info.get("active_ratio", 1.0)
+        model_flops = 6.0 * n_active * toks
+        useful = model_flops / max(info["flops_per_device"], 1.0)
+    # peak HBM: arguments + temps + the NON-ALIASED part of outputs (donated
+    # caches/params alias their inputs; counting them twice overstates peak)
+    args_b = info.get("argument_bytes", 0)
+    out_b = info.get("output_bytes", 0)
+    temp_b = info.get("temp_bytes", 0)
+    peak = args_b + temp_b + max(0, out_b - min(out_b, args_b))
+    return {
+        "arch": info["arch"], "shape": info["shape"],
+        "mesh": "2x16x16" if info.get("multi_pod") else "16x16",
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant[0],
+        "step_s_bound": max(comp, mem, coll),
+        "roofline_frac": comp / max(comp, mem, coll, 1e-30),
+        "model_flops": model_flops, "useful_ratio": useful,
+        "peak_gb": peak / 1e9,
+        "fits_hbm": (peak / 1e9) <= 16.0,
+    }
+
+
+def tokens_per_device(info: Dict) -> float:
+    """Per-device token count for MODEL_FLOPS (train/prefill: sharded over
+    data axes but replicated over model: tokens/chip = global/data_shards ×
+    (1/model) accounted in flops already — we define MODEL_FLOPS on the
+    *model-sharded* basis: global_tokens × 6N / chips."""
+    shape = info["shape"]
+    chips = info.get("chips", 256)
+    table = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+             "decode_32k": 128 * 1, "long_500k": 1 * 1}
+    for k, v in table.items():
+        if shape.startswith(k):
+            return v / chips
+    return 0
+
+
+def load_rows(result_dir: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            info = json.load(f)
+        info["tokens_per_device"] = tokens_per_device(info)
+        rows.append(roofline_row(info))
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | roofline_frac | useful_ratio | peak_GB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['roofline_frac']:.3f} | {ur} "
+            f"| {r['peak_gb']:.1f} | {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    rows = load_rows(d)
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+
+Default is the quick profile (CPU-container friendly, minutes).  ``--full``
+scales n to the paper's regimes (hours; intended for a real cluster).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import bench_mr, bench_streaming
+from benchmarks.common import table
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    t0 = time.time()
+
+    print("=" * 72)
+    print("Fig 1/2 — streaming approximation ratio vs (k, k')")
+    print("=" * 72)
+    rows = bench_streaming.run(quick=quick)
+    print(table(rows, ["dataset", "k", "k'", "approx_ratio",
+                       "throughput_pts_s"], "Streaming approximation"))
+
+    print("\n" + "=" * 72)
+    print("Fig 3 — streaming kernel throughput")
+    print("=" * 72)
+    rows = bench_streaming.run_throughput(quick=quick)
+    print(table(rows, ["dataset", "k", "k'", "throughput_pts_s"],
+                "Streaming throughput"))
+
+    print("\n" + "=" * 72)
+    print("Fig 4 / §7.2 — MapReduce approximation vs k' × parallelism")
+    print("=" * 72)
+    rows = bench_mr.run_mr_approx(quick=quick)
+    print(table(rows, ["reducers", "k'", "partition", "approx_ratio"],
+                "MR approximation"))
+
+    print("\n" + "=" * 72)
+    print("Table 4 — CPPU vs AFZ (remote-clique)")
+    print("=" * 72)
+    rows = bench_mr.run_afz(quick=quick)
+    print(table(rows, ["k", "AFZ_approx", "CPPU_approx", "AFZ_time_s",
+                       "CPPU_time_s", "speedup"], "CPPU vs AFZ"))
+
+    print("\n" + "=" * 72)
+    print("Fig 5 — scalability")
+    print("=" * 72)
+    rows = bench_mr.run_scalability(quick=quick)
+    print(table(rows, ["n", "processors", "mode", "time_s"], "Scalability"))
+
+    if not args.skip_roofline and os.path.isdir("results"):
+        print("\n" + "=" * 72)
+        print("§Roofline — dry-run derived terms (TPU v5e model)")
+        print("=" * 72)
+        from benchmarks import roofline
+        print(roofline.render(roofline.load_rows("results")))
+
+    print(f"\nTotal benchmark time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Core-set containers + the high-level single-machine driver API.
+
+``Coreset``            — explicit point core-set (fixed-capacity + validity mask,
+                         so every array is static-shape for jit).
+``GeneralizedCoreset`` — kernel points + multiplicities (§6 of the paper).
+
+The end-to-end sequential pipeline (paper §4/§5 final stage) lives here:
+``diversity_maximize`` = build core-set → run the α-approx sequential solver.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Coreset(NamedTuple):
+    points: jnp.ndarray      # (cap, d)
+    valid: jnp.ndarray       # (cap,) bool
+    weights: jnp.ndarray     # (cap,) int32  (1 for valid rows, 0 otherwise)
+    radius: jnp.ndarray      # () — proxy-distance bound r_T (telemetry)
+
+    def compact(self) -> np.ndarray:
+        """Materialize valid rows (host-side, dynamic shape)."""
+        v = np.asarray(self.valid)
+        return np.asarray(self.points)[v]
+
+    @property
+    def size(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+
+class GeneralizedCoreset(NamedTuple):
+    points: jnp.ndarray        # (kprime, d) kernel
+    multiplicity: jnp.ndarray  # (kprime,) int32 (0 = invalid row)
+    radius: jnp.ndarray        # () — delegate distance bound (Lemma 7's δ)
+
+    def compact(self):
+        m = np.asarray(self.multiplicity)
+        keep = m > 0
+        return np.asarray(self.points)[keep], m[keep]
+
+    @property
+    def expanded_size(self) -> int:
+        return int(np.asarray(self.multiplicity).sum())
+
+
+def coreset_from_points(points, weights=None) -> Coreset:
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if weights is None:
+        weights = jnp.ones((n,), jnp.int32)
+    return Coreset(points=points, valid=jnp.ones((n,), bool),
+                   weights=jnp.asarray(weights, jnp.int32),
+                   radius=jnp.asarray(0.0, points.dtype))
+
+
+def build_coreset(points, k: int, kprime: int, measure: str, *,
+                  metric="euclidean", use_pallas: bool = False,
+                  generalized: bool = False):
+    """Sequential (single-partition) core-set per the paper's recipe:
+
+    * remote-edge / remote-cycle  -> GMM(S, k')            (Thm 4)
+    * the other four              -> GMM-EXT(S, k, k')     (Thm 5)
+    * generalized=True            -> GMM-GEN(S, k, k')     (Thm 10)
+    """
+    from repro.core.gmm import gmm as _gmm, gmm_ext as _gmm_ext, gmm_gen as _gmm_gen
+    from .measures import NEEDS_INJECTIVE
+
+    points = jnp.asarray(points)
+    if generalized:
+        return _gmm_gen(points, k, kprime, metric=metric, use_pallas=use_pallas)
+    if measure in NEEDS_INJECTIVE:
+        ext = _gmm_ext(points, k, kprime, metric=metric, use_pallas=use_pallas)
+        kp, kk = ext.delegate_idx.shape
+        flat_idx = ext.delegate_idx.reshape(-1)
+        flat_valid = ext.delegate_valid.reshape(-1)
+        pts = points[flat_idx]
+        return Coreset(points=pts, valid=flat_valid,
+                       weights=flat_valid.astype(jnp.int32), radius=ext.radius)
+    res = _gmm(points, kprime, metric=metric, use_pallas=use_pallas)
+    pts = points[res.idx]
+    n = pts.shape[0]
+    return Coreset(points=pts, valid=jnp.ones((n,), bool),
+                   weights=jnp.ones((n,), jnp.int32), radius=res.radius)
+
+
+def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = None,
+                       metric="euclidean", use_pallas: bool = False):
+    """End-to-end: core-set + sequential α-approx solver.
+
+    Returns (solution_points (k,d) ndarray, value, coreset).
+    """
+    from .measures import diversity
+    from .metrics import get_metric
+    from .sequential import solve_on_coreset
+
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    kprime = min(kprime, int(np.asarray(points).shape[0]))
+    cs = build_coreset(points, k, kprime, measure, metric=metric,
+                       use_pallas=use_pallas)
+    sol = solve_on_coreset(cs, k, measure, metric=metric)
+    m = get_metric(metric)
+    dm = np.asarray(m.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
+    return sol, diversity(measure, dm), cs

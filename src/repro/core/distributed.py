@@ -1,0 +1,262 @@
+"""MapReduce diversity maximization on a jax device mesh (paper §5, §6.2).
+
+Round structure (Thm 6):
+  round 1  — every mesh device ("reducer") runs GMM / GMM-EXT / GMM-GEN on its
+             local shard (shard_map over the data axes);
+  round 2  — the per-device core-sets are aggregated with one ``all_gather``
+             (the Spark shuffle of the paper becomes a single collective whose
+             bytes we account in the roofline) and the sequential α-approx
+             solver runs replicated on the union;
+  round 3  — (generalized scheme, Thm 10) each device instantiates delegates
+             for the kernel points it owns.
+
+The recursive scheme (Thm 8) is a 2-level reduction: within-pod over the
+``data`` axis, then across pods over the ``pod`` axis.
+
+Two execution paths:
+ * ``mesh`` path — real shard_map for the production mesh / dry-run;
+ * ``simulate_reducers`` — vmap over ℓ logical reducers on one device, used by
+   the CPU benchmark suite to reproduce the paper's parallelism sweeps
+   (Fig 4/5) without hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.gmm import gmm as _gmm, gmm_ext as _gmm_ext, gmm_gen as _gmm_gen
+from .coreset import Coreset, GeneralizedCoreset
+from .measures import NEEDS_INJECTIVE, diversity
+from .metrics import get_metric
+from .sequential import instantiate, solve, solve_on_coreset
+
+
+# --------------------------------------------------------------------------
+# round 1 bodies (run per shard)
+# --------------------------------------------------------------------------
+
+def _local_coreset_plain(shard, kprime, metric, use_pallas):
+    res = _gmm(shard, kprime, metric=metric, use_pallas=use_pallas)
+    return shard[res.idx], res.radius
+
+
+def _local_coreset_ext(shard, k, kprime, metric, use_pallas):
+    ext = _gmm_ext(shard, k, kprime, metric=metric, use_pallas=use_pallas)
+    pts = shard[ext.delegate_idx.reshape(-1)]
+    valid = ext.delegate_valid.reshape(-1)
+    return pts, valid, ext.radius
+
+
+def _local_coreset_gen(shard, k, kprime, metric, use_pallas):
+    gen = _gmm_gen(shard, k, kprime, metric=metric, use_pallas=use_pallas)
+    return gen.points, gen.multiplicity, gen.radius
+
+
+# --------------------------------------------------------------------------
+# mesh path (shard_map)
+# --------------------------------------------------------------------------
+
+def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
+               *, data_axes: Sequence[str] = ("data",), metric="euclidean",
+               use_pallas: bool = False, generalized: bool = False):
+    """2-round MR core-set on a mesh.  ``points`` is globally (n, d) and gets
+    sharded over ``data_axes``; returns a replicated Coreset/GeneralizedCoreset
+    for the union T = ∪ T_i."""
+    from jax import shard_map
+
+    axes = tuple(data_axes)
+    nshards = int(np.prod([mesh.shape[a] for a in axes]))
+    n, d = points.shape
+    if n % nshards:
+        raise ValueError(f"n={n} not divisible by {nshards} reducers")
+
+    if generalized:
+        def body(shard):
+            pts, mult, radius = _local_coreset_gen(shard, k, kprime, metric,
+                                                   use_pallas)
+            g_pts = jax.lax.all_gather(pts, axes, tiled=True)
+            g_mult = jax.lax.all_gather(mult, axes, tiled=True)
+            g_rad = jax.lax.pmax(radius, axes)
+            return g_pts, g_mult, g_rad
+
+        fn = shard_map(body, mesh=mesh, in_specs=P(axes),
+                       out_specs=(P(), P(), P()), check_vma=False)
+        g_pts, g_mult, g_rad = jax.jit(fn)(points)
+        return GeneralizedCoreset(points=g_pts, multiplicity=g_mult,
+                                  radius=g_rad)
+
+    if measure in NEEDS_INJECTIVE:
+        def body(shard):
+            pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
+                                                    use_pallas)
+            g_pts = jax.lax.all_gather(pts, axes, tiled=True)
+            g_valid = jax.lax.all_gather(valid, axes, tiled=True)
+            g_rad = jax.lax.pmax(radius, axes)
+            return g_pts, g_valid, g_rad
+
+        fn = shard_map(body, mesh=mesh, in_specs=P(axes),
+                       out_specs=(P(), P(), P()), check_vma=False)
+        g_pts, g_valid, g_rad = jax.jit(fn)(points)
+        return Coreset(points=g_pts, valid=g_valid,
+                       weights=g_valid.astype(jnp.int32), radius=g_rad)
+
+    def body(shard):
+        pts, radius = _local_coreset_plain(shard, kprime, metric, use_pallas)
+        g_pts = jax.lax.all_gather(pts, axes, tiled=True)
+        g_rad = jax.lax.pmax(radius, axes)
+        return g_pts, g_rad
+
+    fn = shard_map(body, mesh=mesh, in_specs=P(axes),
+                   out_specs=(P(), P()), check_vma=False)
+    g_pts, g_rad = jax.jit(fn)(points)
+    m = g_pts.shape[0]
+    return Coreset(points=g_pts, valid=jnp.ones((m,), bool),
+                   weights=jnp.ones((m,), jnp.int32), radius=g_rad)
+
+
+def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
+                 kprime: Optional[int] = None,
+                 data_axes: Sequence[str] = ("data",), metric="euclidean",
+                 use_pallas: bool = False, three_round: bool = False):
+    """Full pipeline: 2-round (Thm 6) or 3-round generalized (Thm 10).
+
+    Returns (solution_points (k,d), value)."""
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    if not three_round:
+        cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
+                        metric=metric, use_pallas=use_pallas)
+        sol = solve_on_coreset(cs, k, measure, metric=metric)
+    else:
+        gen = mr_coreset(points, k, kprime, measure, mesh,
+                         data_axes=data_axes, metric=metric,
+                         use_pallas=use_pallas, generalized=True)
+        pts, mult = gen.compact()
+        idx = solve(measure, pts, k, weights=mult, metric=metric)
+        uniq, counts = np.unique(idx, return_counts=True)
+        # round 3: instantiate the chosen multiset against the full input
+        sol = instantiate(pts[uniq], counts, np.asarray(points),
+                          float(gen.radius), metric=metric)
+    met = get_metric(metric)
+    dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
+    return sol, diversity(measure, dm)
+
+
+def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
+                         *, metric="euclidean", use_pallas: bool = False):
+    """Thm 8: two-level reduction — per-device core-sets over ``data``,
+    re-contracted over ``pod`` (requires a ('pod','data',...) mesh)."""
+    from jax import shard_map
+
+    if "pod" not in mesh.axis_names:
+        raise ValueError("recursive scheme expects a 'pod' axis")
+    ext = measure in NEEDS_INJECTIVE
+
+    def body(shard):
+        if ext:
+            pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
+                                                    use_pallas)
+            mask = valid
+        else:
+            pts, radius = _local_coreset_plain(shard, kprime, metric,
+                                               use_pallas)
+            mask = jnp.ones((pts.shape[0],), bool)
+        # level 1: union within pod
+        pod_pts = jax.lax.all_gather(pts, "data", tiled=True)
+        pod_mask = jax.lax.all_gather(mask, "data", tiled=True)
+        # level-2 core-set of the pod-level union (mask-aware GMM)
+        res = _gmm(pod_pts, kprime, metric=metric, mask=pod_mask)
+        lvl2 = pod_pts[res.idx]
+        # level 2: union across pods
+        g_pts = jax.lax.all_gather(lvl2, "pod", tiled=True)
+        g_rad = jax.lax.pmax(jnp.maximum(radius, res.radius), ("pod", "data"))
+        return g_pts, g_rad
+
+    fn = shard_map(body, mesh=mesh, in_specs=P(("pod", "data")),
+                   out_specs=(P(), P()), check_vma=False)
+    g_pts, g_rad = jax.jit(fn)(points)
+    m = g_pts.shape[0]
+    return Coreset(points=g_pts, valid=jnp.ones((m,), bool),
+                   weights=jnp.ones((m,), jnp.int32), radius=g_rad)
+
+
+# --------------------------------------------------------------------------
+# simulated-reducer path (CPU benchmarks; paper Fig 4/5 parallelism sweeps)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "kprime", "metric", "mode"))
+def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str):
+    if mode == "plain":
+        def one(s):
+            res = _gmm(s, kprime, metric=metric)
+            return s[res.idx], jnp.ones((kprime,), bool), res.radius
+    elif mode == "ext":
+        def one(s):
+            ext = _gmm_ext(s, k, kprime, metric=metric)
+            return (s[ext.delegate_idx.reshape(-1)],
+                    ext.delegate_valid.reshape(-1), ext.radius)
+    else:  # gen
+        def one(s):
+            g = _gmm_gen(s, k, kprime, metric=metric)
+            return g.points, g.multiplicity > 0, g.radius
+
+    return jax.vmap(one)(shards)
+
+
+def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
+                kprime: Optional[int] = None, metric="euclidean",
+                generalized: bool = False, partition: str = "contiguous",
+                seed: int = 0):
+    """Simulate the ℓ-reducer 2-round MR run on one device (vmap over shards).
+
+    ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
+    adversarial = sort by first coordinate so each reducer sees a small-volume
+    region)."""
+    pts = np.asarray(points)
+    n, d = pts.shape
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    per = n // num_reducers
+    pts = pts[: per * num_reducers]
+    if partition == "random":
+        rng = np.random.default_rng(seed)
+        pts = pts[rng.permutation(per * num_reducers)]
+    elif partition == "adversarial":
+        order = np.argsort(pts[:, 0], kind="stable")
+        pts = pts[order]
+    shards = jnp.asarray(pts.reshape(num_reducers, per, d))
+
+    mode = ("gen" if generalized else
+            "ext" if measure in NEEDS_INJECTIVE else "plain")
+    g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric, mode)
+    flat_pts = g_pts.reshape(-1, d)
+    flat_valid = g_valid.reshape(-1)
+    radius = jnp.max(g_rad)
+
+    if generalized:
+        # rerun per-shard to obtain integer multiplicities
+        def one(s):
+            g = _gmm_gen(s, k, kprime, metric=metric)
+            return g.points, g.multiplicity, g.radius
+        gp, gm, gr = jax.jit(jax.vmap(one))(shards)
+        gen = GeneralizedCoreset(points=gp.reshape(-1, d),
+                                 multiplicity=gm.reshape(-1),
+                                 radius=jnp.max(gr))
+        p, m = gen.compact()
+        idx = solve(measure, p, k, weights=m, metric=metric)
+        uniq, counts = np.unique(idx, return_counts=True)
+        sol = instantiate(p[uniq], counts, pts, float(gen.radius),
+                          metric=metric)
+    else:
+        cs = Coreset(points=flat_pts, valid=flat_valid,
+                     weights=flat_valid.astype(jnp.int32), radius=radius)
+        sol = solve_on_coreset(cs, k, measure, metric=metric)
+
+    met = get_metric(metric)
+    dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
+    return sol, diversity(measure, dm)

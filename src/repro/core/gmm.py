@@ -1,0 +1,329 @@
+"""GMM (Gonzalez' greedy k-center) and the paper's extensions.
+
+``gmm``       — the kernel construction of Lemma 5 / Thm 4 (remote-edge/cycle).
+``gmm_ext``   — kernel + up-to-(k-1) delegates per cluster (Lemma 6 / Thm 5).
+``gmm_gen``   — kernel + multiplicities: generalized core-sets (Lemma 8 / Thm 10).
+
+TPU adaptation (see DESIGN.md §2): each GMM round is one fused pass over the
+local point set — distance to the newest center, running min, and argmax are
+fused so HBM traffic is one read of ``points`` per round.  The distance uses the
+``||x||² − 2x·c + ||c||²`` factorization so the bulk lands on the MXU as a
+matmul when centers are blocked.  ``use_pallas=True`` routes the inner update
+through the Pallas kernel (``repro.kernels.ops.gmm_update``); the default pure
+lax path lowers to the same fused HLO and is what the CPU test-suite exercises.
+
+All shapes are static; invalid points are handled with ``mask`` (their distance
+is pinned to −inf so they are never selected and never win an argmax).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .coreset import GeneralizedCoreset
+from .metrics import get_metric
+
+
+class GMMResult(NamedTuple):
+    idx: jnp.ndarray        # (k,) int32 — selected indices into points
+    radius: jnp.ndarray     # () — max_p d(p, T)  (range r_T of the returned set)
+    min_dist: jnp.ndarray   # (n,) — d(p, T) for every point
+    assign: jnp.ndarray     # (n,) int32 — index (into 0..k-1) of nearest center
+    sel_dist: jnp.ndarray   # (k,) — distance of each center to the prefix before it
+                            #        (anticover distances; sel_dist[0] = +inf)
+
+
+def _point_to_set_dist(metric, points, center):
+    return metric.point_to_set(points, center)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric_name", "use_pallas"))
+def _gmm_impl(points, mask, start, k: int, metric_name: str, use_pallas: bool):
+    metric = get_metric(metric_name)
+    n = points.shape[0]
+    neg_inf = jnp.asarray(-jnp.inf, points.dtype)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        def update_select(min_dist, center):
+            return kops.gmm_update_select(points, center[None, :], min_dist,
+                                          mask, metric_name)
+    else:
+        def update_select(min_dist, center):
+            d = _point_to_set_dist(metric, points, center)
+            new = jnp.minimum(min_dist, d)
+            masked = jnp.where(mask, new, neg_inf)
+            j = jnp.argmax(masked)
+            return new, j, masked[j]
+
+    def body(i, state):
+        min_dist, assign, idx, sel_dist, _ = state
+        # distance from all points to the center chosen at step i-1; fused
+        # running-min + masked argmax (one HBM sweep on the Pallas path)
+        center = points[idx[i - 1]]
+        new_dist, j, jmax = update_select(min_dist, center)
+        assign = jnp.where(new_dist < min_dist, i - 1, assign)
+        idx = idx.at[i].set(j, mode="drop")          # i == k write is dropped
+        sel_dist = sel_dist.at[i].set(jmax, mode="drop")
+        return new_dist, assign, idx, sel_dist, jmax
+
+    idx0 = jnp.zeros((k,), jnp.int32).at[0].set(start)
+    min_dist0 = jnp.full((n,), jnp.inf, points.dtype)
+    assign0 = jnp.zeros((n,), jnp.int32)
+    sel_dist0 = jnp.full((k,), jnp.inf, points.dtype)
+    min_dist, assign, idx, sel_dist, radius = jax.lax.fori_loop(
+        1, k + 1, body, (min_dist0, assign0, idx0, sel_dist0,
+                         jnp.asarray(jnp.inf, points.dtype))
+    )
+    # body ran for i = 1..k: min_dist/assign include the k-th center and
+    # ``radius`` is the masked max after the final update (= r_T).
+    return GMMResult(idx=idx, radius=radius, min_dist=min_dist, assign=assign,
+                     sel_dist=sel_dist)
+
+
+def gmm(points, k: int, *, metric="euclidean", mask=None, start=0,
+        use_pallas: bool = False) -> GMMResult:
+    """Run GMM(points, k).  Returns indices + anticover telemetry.
+
+    The returned set satisfies the anticover property: r_T <= sel_dist[k-1]
+    <= rho_T, which Fact 1 of the paper builds on.
+    """
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} out of range for n={n}")
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    return _gmm_impl(points, mask, jnp.asarray(start, jnp.int32), k,
+                     get_metric(metric).name, use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b", "metric_name"))
+def _gmm_batched_impl(points, mask, start, k: int, b: int, metric_name: str):
+    metric = get_metric(metric_name)
+    n = points.shape[0]
+    neg_inf = jnp.asarray(-jnp.inf, points.dtype)
+    rounds = k // b
+
+    def body(r, state):
+        min_dist, idx = state
+        # distance to the b centers chosen in the previous round — ONE sweep
+        # over the point set for b centers (the Pallas kernel's center block)
+        prev = jax.lax.dynamic_slice(idx, ((r - 1) * b,), (b,))
+        centers = points[prev]                        # (b, d)
+        d = metric.pairwise(points, centers)          # (n, b)
+        min_dist = jnp.minimum(min_dist, jnp.min(d, axis=1))
+        masked = jnp.where(mask, min_dist, neg_inf)
+        # lookahead-b: take the top-b candidates of the updated field, then
+        # correct *within the block* for their mutual distances (exact local
+        # GMM over the candidates)
+        cand_d, cand_i = jax.lax.top_k(masked, b)
+
+        def pick(j, carry):
+            cd, chosen = carry
+            sel = jnp.argmax(cd)
+            chosen = chosen.at[j].set(cand_i[sel])
+            dd = metric.point_to_set(points[cand_i], points[cand_i[sel]])
+            cd = jnp.minimum(cd, dd)
+            cd = cd.at[sel].set(neg_inf)
+            return cd, chosen
+
+        _, chosen = jax.lax.fori_loop(0, b, pick,
+                                      (cand_d, jnp.zeros((b,), jnp.int32)))
+        idx = jax.lax.dynamic_update_slice(idx, chosen, (r * b,))
+        return min_dist, idx
+
+    idx0 = jnp.zeros((k,), jnp.int32)
+    # round 0: exact first block seeded at `start`
+    min0 = jnp.where(mask, metric.point_to_set(points, points[start]), neg_inf)
+    idx0 = idx0.at[0].set(start)
+
+    def pick0(j, carry):
+        md, idx = carry
+        sel = jnp.argmax(jnp.where(mask, md, neg_inf))
+        idx = idx.at[j].set(sel)
+        md = jnp.minimum(md, metric.point_to_set(points, points[sel]))
+        return md, idx
+
+    min_dist, idx0 = jax.lax.fori_loop(1, b, pick0, (min0, idx0))
+    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx0))
+    # final sweep for the last block + radius
+    last = jax.lax.dynamic_slice(idx, ((rounds - 1) * b,), (b,))
+    d = metric.pairwise(points, points[last])
+    min_dist = jnp.minimum(min_dist, jnp.min(d, axis=1))
+    radius = jnp.max(jnp.where(mask, min_dist, neg_inf))
+    return idx, radius, min_dist
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b", "chunk", "metric_name"))
+def _gmm_batched_chunked_impl(points, mask, start, k: int, b: int, chunk: int,
+                              metric_name: str):
+    """Chunk-fused batched GMM: per sweep, each point chunk computes its
+    distance block, running-min update and LOCAL top-b in one pass — the
+    (n, b) distance matrix and the global sort never reach HBM (this is the
+    jax-level expression of the Pallas gmm_update kernel's fusion; see
+    EXPERIMENTS.md §Perf iteration 3)."""
+    metric = get_metric(metric_name)
+    n, d = points.shape
+    nch = n // chunk
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    rounds = k // b
+
+    def sweep(min_dist, centers):
+        """One fused pass: returns (new min_dist, cand_d (b,), cand_i (b,))."""
+        def chunk_fn(c):
+            x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+            md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
+            mk = jax.lax.dynamic_slice(mask, (c * chunk,), (chunk,))
+            dist = metric.pairwise(x, centers)            # (chunk, b)
+            new_md = jnp.minimum(md, jnp.min(dist, axis=1))
+            masked = jnp.where(mk, new_md, neg_inf)
+            cd, ci = jax.lax.top_k(masked, b)
+            return new_md, cd, (ci + c * chunk).astype(jnp.int32)
+
+        new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
+        min_dist = new_md.reshape(n)
+        flat_d, flat_i = cd.reshape(-1), ci.reshape(-1)
+        sel_d, sel = jax.lax.top_k(flat_d, b)             # (nch*b,) — tiny
+        return min_dist, sel_d, flat_i[sel]
+
+    def inblock(cand_d, cand_i):
+        """Exact local GMM over the b candidates."""
+        def pick(j, carry):
+            cd, chosen = carry
+            s = jnp.argmax(cd)
+            chosen = chosen.at[j].set(cand_i[s])
+            dd = metric.point_to_set(points[cand_i], points[cand_i[s]])
+            cd = jnp.minimum(cd, dd).at[s].set(neg_inf)
+            return cd, chosen
+        _, chosen = jax.lax.fori_loop(0, b, pick,
+                                      (cand_d, jnp.zeros((b,), jnp.int32)))
+        return chosen
+
+    def body(r, state):
+        min_dist, idx = state
+        prev = jax.lax.dynamic_slice(idx, ((r - 1) * b,), (b,))
+        min_dist, cand_d, cand_i = sweep(min_dist, points[prev])
+        idx = jax.lax.dynamic_update_slice(idx, inblock(cand_d, cand_i),
+                                           (r * b,))
+        return min_dist, idx
+
+    # round 0: seed + exact first block via b single-center sweeps
+    idx0 = jnp.zeros((k,), jnp.int32).at[0].set(start)
+    min0 = jnp.full((n,), jnp.inf, jnp.float32)
+
+    def pick0(j, carry):
+        md, idx = carry
+        md, cand_d, cand_i = sweep(md, points[idx[j - 1]][None])
+        idx = idx.at[j].set(cand_i[0])
+        return md, idx
+
+    min_dist, idx0 = jax.lax.fori_loop(1, b, pick0, (min0, idx0))
+    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx0))
+    last = jax.lax.dynamic_slice(idx, ((rounds - 1) * b,), (b,))
+    min_dist, _, _ = sweep(min_dist, points[last])
+    radius = jnp.max(jnp.where(mask, min_dist, neg_inf))
+    return idx, radius, min_dist
+
+
+def gmm_batched(points, k: int, *, b: int = 8, metric="euclidean", mask=None,
+                start=0, chunk: int = 0):
+    """Batched GMM (beyond-paper optimization, EXPERIMENTS.md §Perf).
+
+    Sequential GMM sweeps the point set once per center — arithmetic
+    intensity ~0.5 flop/byte, hopelessly memory-bound.  This variant selects
+    ``b`` centers per sweep: top-b of the running min-distance field with an
+    exact in-block correction (local GMM over the b candidates).  HBM traffic
+    drops ~b×; the selection differs from exact GMM only when a sweep's
+    farthest-point field changes rank order mid-block (tests show the
+    anticover radius within a few % of exact on benchmark distributions).
+
+    k must be a multiple of b.
+    """
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if k % b:
+        raise ValueError(f"k={k} must be a multiple of b={b}")
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    if chunk:
+        while n % chunk:
+            chunk //= 2
+        idx, radius, min_dist = _gmm_batched_chunked_impl(
+            points, mask, jnp.asarray(start, jnp.int32), k, b, chunk,
+            get_metric(metric).name)
+    else:
+        idx, radius, min_dist = _gmm_batched_impl(
+            points, mask, jnp.asarray(start, jnp.int32), k, b,
+            get_metric(metric).name)
+    return idx, radius, min_dist
+
+
+class GMMExtResult(NamedTuple):
+    kernel_idx: jnp.ndarray     # (k',) kernel (center) indices
+    delegate_idx: jnp.ndarray   # (k', k) indices; row j = center j + delegates
+    delegate_valid: jnp.ndarray # (k', k) bool
+    multiplicity: jnp.ndarray   # (k',) int32 = min(|C_j|, k)   (GMM-GEN output)
+    radius: jnp.ndarray         # () kernel range r_T'
+    assign: jnp.ndarray         # (n,) nearest-kernel-center assignment
+
+
+def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
+            start=0, use_pallas: bool = False) -> GMMExtResult:
+    """GMM-EXT (Algorithm 1): kernel of k' centers + up to k-1 delegates each.
+
+    Single scan formulation: the GMM loop already tracks the nearest-center
+    assignment, so the clustering {C_j} is free; delegates are the first
+    min(|C_j|, k) members of each cluster in index order, with the center
+    force-included in slot 0.
+    """
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    res = gmm(points, kprime, metric=metric, mask=mask, start=start,
+              use_pallas=use_pallas)
+
+    assign = jnp.where(mask, res.assign, kprime)  # invalid -> sentinel cluster
+    # force each center into its own cluster (it is, by construction: dist 0,
+    # but ties at 0 could have attached it to an earlier co-located center).
+    assign = assign.at[res.idx].set(jnp.arange(kprime, dtype=jnp.int32))
+
+    order = jnp.argsort(assign, stable=True)              # (n,)
+    sorted_assign = assign[order]
+    counts = jnp.bincount(assign, length=kprime + 1)[:kprime]
+    starts = jnp.searchsorted(sorted_assign, jnp.arange(kprime))
+
+    # delegate slot t of cluster j = order[starts[j] + t], valid while t < count
+    t_grid = jnp.arange(k)[None, :]                       # (1, k)
+    gather_pos = starts[:, None] + t_grid                 # (k', k)
+    gather_pos = jnp.clip(gather_pos, 0, n - 1)
+    cand = order[gather_pos]                              # (k', k)
+    valid = t_grid < counts[:, None]
+
+    # force-include the center in slot 0 (swap it in; if the center already
+    # appears in another slot, that slot harmlessly duplicates — dedupe by
+    # masking duplicates of slot 0)
+    cand = cand.at[:, 0].set(res.idx)
+    dup0 = (cand == res.idx[:, None]) & (jnp.arange(k)[None, :] > 0)
+    valid = valid & ~dup0
+    valid = valid.at[:, 0].set(counts > 0)
+
+    mult = jnp.minimum(counts, k).astype(jnp.int32)
+    return GMMExtResult(kernel_idx=res.idx, delegate_idx=cand,
+                        delegate_valid=valid, multiplicity=mult,
+                        radius=res.radius, assign=assign)
+
+
+def gmm_gen(points, k: int, kprime: int, *, metric="euclidean", mask=None,
+            start=0, use_pallas: bool = False) -> GeneralizedCoreset:
+    """GMM-GEN: generalized core-set of size s(T)=k', expanded size <= k·k'."""
+    ext = gmm_ext(points, k, kprime, metric=metric, mask=mask, start=start,
+                  use_pallas=use_pallas)
+    return GeneralizedCoreset(points=jnp.asarray(points)[ext.kernel_idx],
+                              multiplicity=ext.multiplicity,
+                              radius=ext.radius)

@@ -1,0 +1,375 @@
+"""SMM / SMM-EXT / SMM-GEN — the paper's streaming core-set constructions (§4, §6.1).
+
+The doubling algorithm of Charikar et al. adapted per the paper:
+
+* state is a set ``T`` of at most ``k'+1`` centers and a threshold ``d_i``;
+* each phase starts with a *merge* step — a maximal independent set of the
+  graph with edges ``d(t1,t2) <= 2 d_i`` — and continues with an *update* step
+  that discards points with ``d(p,T) <= 4 d_i`` and inserts farther points
+  until ``T`` reaches ``k'+1`` points, whereupon ``d_{i+1} = 2 d_i``;
+* the ``M`` buffer (points removed by the most recent merge) tops ``T`` up to
+  ``>= k`` points at stream end (the paper's fix after Lemma 3);
+* SMM-EXT keeps up to ``k`` delegates per center (slot 0 = the center itself);
+  on merge, a removed center's delegates are inherited by a kept center within
+  ``2 d_i`` — the paper prints ``max{|E_t1|, k-|E_t2|}`` which we read as the
+  obvious ``min`` (you cannot inherit more points than exist nor exceed the
+  capacity ``k``); on update, a discarded point joins its nearest center's
+  delegate set if there is room;
+* SMM-GEN (Thm 9, 2-pass scheme) keeps only *counts* — a generalized core-set.
+
+TPU/throughput adaptation (DESIGN.md §2): the stream is consumed in chunks; a
+single ``(chunk, |T|)`` distance matmul classifies every point, the common-case
+"all discarded" path is fully vectorized (including the capacity-respecting
+delegate scatter), and only points beyond ``4 d_i`` — at most ``k'+1`` per
+phase — fall back to an in-jit sequential insert loop.  This is an exact
+execution of the per-point algorithm (discard decisions are order-independent
+within a chunk because ``T`` only changes when a far point is inserted, and the
+sequential path takes over from the first far point onward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coreset import Coreset, GeneralizedCoreset
+from .metrics import get_metric
+
+
+class SMMState(NamedTuple):
+    T: jnp.ndarray          # (cap, d) centers
+    t_valid: jnp.ndarray    # (cap,)
+    e_pts: jnp.ndarray      # (cap, k_slots, d) delegates (slot 0 = center); (cap,1,d) when unused
+    e_cnt: jnp.ndarray      # (cap,) delegates/multiplicity count (incl. center)
+    M: jnp.ndarray          # (cap, d) last-merge-removed buffer
+    m_valid: jnp.ndarray    # (cap,)
+    d_thr: jnp.ndarray      # () current d_i
+    n_phases: jnp.ndarray   # () int32
+
+
+def _pairwise(metric_name, a, b):
+    return get_metric(metric_name).pairwise(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name",))
+def _init_threshold(T, metric_name):
+    dm = _pairwise(metric_name, T, T)
+    cap = T.shape[0]
+    off = jnp.where(jnp.eye(cap, dtype=bool), jnp.inf, dm)
+    # smallest strictly-positive pairwise distance (duplicates excluded);
+    # falls back to a tiny epsilon if all points coincide.
+    pos = jnp.where(off > 0, off, jnp.inf)
+    d1 = jnp.min(pos)
+    return jnp.where(jnp.isfinite(d1), d1, jnp.asarray(1e-30, dm.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "mode", "k"))
+def _merge(state: SMMState, metric_name: str, mode: str, k: int) -> SMMState:
+    """One merge step: MIS at threshold 2 d_i, M capture, delegate inheritance."""
+    cap = state.T.shape[0]
+    dm = _pairwise(metric_name, state.T, state.T)
+    thr = 2.0 * state.d_thr
+
+    def mis_body(j, carry):
+        keep, covered = carry
+        can = state.t_valid[j] & ~covered[j]
+        keep = keep.at[j].set(can)
+        covered = covered | (can & (dm[j] <= thr))
+        return keep, covered
+
+    keep0 = jnp.zeros((cap,), bool)
+    covered0 = jnp.zeros((cap,), bool)
+    keep, _ = jax.lax.fori_loop(0, cap, mis_body, (keep0, covered0))
+    removed = state.t_valid & ~keep
+
+    M = jnp.where(removed[:, None], state.T, 0.0)
+    m_valid = removed
+
+    e_pts, e_cnt = state.e_pts, state.e_cnt
+    if mode in ("ext", "gen"):
+        k_slots = e_pts.shape[1]
+
+        def inherit_body(j, carry):
+            e_pts, e_cnt = carry
+            is_rem = removed[j]
+            dr = jnp.where(keep, dm[j], jnp.inf)
+            t2 = jnp.argmin(dr)
+            take = jnp.minimum(e_cnt[j], k - e_cnt[t2])
+            take = jnp.where(is_rem, jnp.maximum(take, 0), 0)
+            if mode == "ext":
+                slot = jnp.arange(k_slots)
+                src_pos = jnp.clip(slot - e_cnt[t2], 0, k_slots - 1)
+                newrow = jnp.where(
+                    ((slot >= e_cnt[t2]) & (slot - e_cnt[t2] < take))[:, None],
+                    e_pts[j][src_pos],
+                    e_pts[t2],
+                )
+                e_pts = e_pts.at[t2].set(newrow)
+            e_cnt = e_cnt.at[t2].add(take)
+            e_cnt = e_cnt.at[j].set(jnp.where(is_rem, 0, e_cnt[j]))
+            return e_pts, e_cnt
+
+        e_pts, e_cnt = jax.lax.fori_loop(0, cap, inherit_body, (e_pts, e_cnt))
+    else:
+        e_cnt = jnp.where(keep, e_cnt, 0)
+
+    return state._replace(t_valid=keep, e_pts=e_pts, e_cnt=e_cnt, M=M,
+                          m_valid=m_valid, n_phases=state.n_phases + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name",))
+def _classify(state: SMMState, chunk, cvalid, metric_name):
+    """Vector phase: nearest center + far mask for a whole chunk."""
+    dm = _pairwise(metric_name, chunk, state.T)          # (c, cap)
+    dm = jnp.where(state.t_valid[None, :], dm, jnp.inf)
+    near_d = jnp.min(dm, axis=1)
+    nearest = jnp.argmin(dm, axis=1)
+    far = (near_d > 4.0 * state.d_thr) & cvalid
+    return near_d, nearest, far
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "mode", "k"))
+def _absorb_near_prefix(state: SMMState, chunk, cvalid, nearest, far, upto,
+                        metric_name: str, mode: str, k: int) -> SMMState:
+    """Commit delegate/count updates for the near points at positions < upto.
+
+    Capacity-respecting and order-preserving: the r-th near point routed to a
+    given center lands in slot e_cnt + r, provided that is < k.
+    """
+    c = chunk.shape[0]
+    cap = state.T.shape[0]
+    pos = jnp.arange(c)
+    near_mask = cvalid & ~far & (pos < upto)
+    if mode == "plain":
+        return state  # discards only
+    nst = jnp.where(near_mask, nearest, cap)             # sentinel group = cap
+    key = nst * (c + 1) + pos
+    order = jnp.argsort(key)
+    snst = nst[order]
+    starts = jnp.searchsorted(snst, jnp.arange(cap + 1))
+    rank_sorted = jnp.arange(c) - starts[jnp.clip(snst, 0, cap)]
+    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    slot = state.e_cnt[jnp.clip(nst, 0, cap - 1)] + rank
+    accept = near_mask & (slot < k)
+    adds = jax.ops.segment_sum(accept.astype(jnp.int32),
+                               jnp.where(accept, nst, cap), num_segments=cap + 1)[:cap]
+    e_cnt = jnp.minimum(state.e_cnt + adds, k)
+    e_pts = state.e_pts
+    if mode == "ext":
+        row = jnp.where(accept, nst, cap)                # OOB -> dropped
+        col = jnp.where(accept, slot, state.e_pts.shape[1])
+        e_pts = e_pts.at[row, col].set(chunk, mode="drop")
+    return state._replace(e_pts=e_pts, e_cnt=e_cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "mode", "k"))
+def _seq_insert(state: SMMState, chunk, cvalid, start, metric_name: str,
+                mode: str, k: int):
+    """Sequential per-point processing from ``start``; stops when T fills.
+
+    Returns (state, next_pos, became_full).
+    """
+    cap = state.T.shape[0]
+    c = chunk.shape[0]
+    metric = get_metric(metric_name)
+
+    def cond(carry):
+        state, pos, full = carry
+        return (pos < c) & ~full
+
+    def body(carry):
+        state, pos, full = carry
+        p = chunk[pos]
+        ok = cvalid[pos]
+        d = metric.point_to_set(state.T, p)
+        d = jnp.where(state.t_valid, d, jnp.inf)
+        nd = jnp.min(d)
+        nst = jnp.argmin(d)
+        is_far = ok & (nd > 4.0 * state.d_thr)
+
+        # --- far: insert as a new center in the first invalid slot
+        free = jnp.argmin(state.t_valid)                 # first False
+        T = state.T.at[free].set(jnp.where(is_far, p, state.T[free]))
+        t_valid = state.t_valid.at[free].set(jnp.where(is_far, True,
+                                                       state.t_valid[free]))
+        e_pts = state.e_pts
+        e_cnt = state.e_cnt
+        if mode in ("ext", "gen"):
+            if mode == "ext":
+                e_pts = e_pts.at[free, 0].set(jnp.where(is_far, p, e_pts[free, 0]))
+            e_cnt = e_cnt.at[free].set(jnp.where(is_far, 1, e_cnt[free]))
+            # --- near: delegate add if room
+            room = e_cnt[nst] < k
+            do_add = ok & ~is_far & room
+            if mode == "ext":
+                e_pts = e_pts.at[nst, jnp.clip(e_cnt[nst], 0, e_pts.shape[1] - 1)].set(
+                    jnp.where(do_add, p, e_pts[nst, jnp.clip(e_cnt[nst], 0,
+                                                             e_pts.shape[1] - 1)]))
+            e_cnt = e_cnt.at[nst].add(jnp.where(do_add, 1, 0))
+        new_state = state._replace(T=T, t_valid=t_valid, e_pts=e_pts, e_cnt=e_cnt)
+        full = jnp.sum(t_valid) >= cap
+        return new_state, pos + 1, full
+
+    state, next_pos, full = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(start, jnp.int32), jnp.asarray(False)))
+    return state, next_pos, full
+
+
+class StreamingCoreset:
+    """Host-side driver around the jitted SMM steps.
+
+    Usage::
+
+        smm = StreamingCoreset(k=16, kprime=256, dim=3, mode="ext")
+        for chunk in stream:           # numpy/jax arrays (c, dim)
+            smm.update(chunk)
+        coreset = smm.finalize()       # Coreset or GeneralizedCoreset
+    """
+
+    def __init__(self, k: int, kprime: int, dim: int, *, metric="euclidean",
+                 mode: str = "plain", dtype=jnp.float32):
+        if mode not in ("plain", "ext", "gen"):
+            raise ValueError(mode)
+        if kprime < k:
+            raise ValueError("k' must be >= k")
+        m = get_metric(metric)
+        if not m.is_metric:
+            raise ValueError(f"SMM needs a true metric, got {metric!r}")
+        self.k, self.kprime, self.dim = k, kprime, dim
+        self.metric, self.mode, self.dtype = m.name, mode, dtype
+        self.cap = kprime + 1
+        self._prefix = []        # buffers the first cap points
+        self._state: Optional[SMMState] = None
+        self.n_seen = 0
+
+    # -- init ---------------------------------------------------------------
+    def _boot(self, pts0):
+        cap, k, dim = self.cap, self.k, self.dim
+        k_slots = k if self.mode == "ext" else 1
+        T = jnp.asarray(pts0, self.dtype)
+        e_pts = jnp.zeros((cap, k_slots, dim), self.dtype)
+        if self.mode == "ext":
+            e_pts = e_pts.at[:, 0].set(T)
+        state = SMMState(
+            T=T,
+            t_valid=jnp.ones((cap,), bool),
+            e_pts=e_pts,
+            e_cnt=jnp.ones((cap,), jnp.int32),
+            M=jnp.zeros((cap, dim), self.dtype),
+            m_valid=jnp.zeros((cap,), bool),
+            d_thr=_init_threshold(T, self.metric),
+            n_phases=jnp.asarray(0, jnp.int32),
+        )
+        # T is full after initialization -> Phase 1 begins with a merge
+        self._state = self._merge_until_room(state)
+
+    def _merge_until_room(self, state: SMMState) -> SMMState:
+        state = _merge(state, self.metric, self.mode, self.k)
+        # if the MIS removed nothing (all pairwise > 2 d_i) the update step is
+        # empty: double the threshold and merge again (see module docstring).
+        while int(jnp.sum(state.t_valid)) >= self.cap:
+            state = state._replace(d_thr=state.d_thr * 2.0)
+            state = _merge(state, self.metric, self.mode, self.k)
+        return state
+
+    # -- streaming ----------------------------------------------------------
+    def update(self, chunk) -> None:
+        chunk = np.asarray(chunk, dtype=np.dtype(self.dtype.dtype.name)
+                           if hasattr(self.dtype, "dtype") else np.float32)
+        chunk = np.atleast_2d(chunk)
+        self.n_seen += chunk.shape[0]
+        if self._state is None:
+            need = self.cap - sum(len(p) for p in self._prefix)
+            self._prefix.append(chunk[:need])
+            chunk = chunk[need:]
+            if sum(len(p) for p in self._prefix) >= self.cap:
+                self._boot(np.concatenate(self._prefix, axis=0))
+                self._prefix = []
+            if chunk.shape[0] == 0:
+                return
+        self._consume(jnp.asarray(chunk, self.dtype))
+
+    def _consume(self, chunk) -> None:
+        c = chunk.shape[0]
+        pos = 0
+        state = self._state
+        while pos < c:
+            tail = chunk[pos:]
+            cvalid = jnp.ones((tail.shape[0],), bool)
+            _, nearest, far = _classify(state, tail, cvalid, self.metric)
+            far_np = np.asarray(far)
+            if not far_np.any():
+                state = _absorb_near_prefix(state, tail, cvalid, nearest, far,
+                                            tail.shape[0], self.metric,
+                                            self.mode, self.k)
+                pos = c
+                break
+            first_far = int(far_np.argmax())
+            state = _absorb_near_prefix(state, tail, cvalid, nearest, far,
+                                        first_far, self.metric, self.mode,
+                                        self.k)
+            state, consumed, full = _seq_insert(state, tail, cvalid, first_far,
+                                                self.metric, self.mode, self.k)
+            pos += int(consumed)
+            if bool(full):
+                state = state._replace(d_thr=state.d_thr * 2.0)
+                state = self._merge_until_room(state)
+        self._state = state
+
+    # -- output -------------------------------------------------------------
+    def finalize(self):
+        if self._state is None:
+            # tiny stream: everything fits in the prefix buffer
+            pts = np.concatenate(self._prefix, axis=0) if self._prefix else \
+                np.zeros((0, self.dim), np.float32)
+            if pts.shape[0] < self.k:
+                raise ValueError(f"stream had {pts.shape[0]} < k={self.k} points")
+            w = np.ones((pts.shape[0],), np.int32)
+            return Coreset(points=jnp.asarray(pts), valid=jnp.ones(len(pts), bool),
+                           weights=jnp.asarray(w), radius=jnp.asarray(0.0))
+        state = self._state
+        n_valid = int(jnp.sum(state.t_valid))
+        # top-up from M so that |T| >= k (paper's fix: M ∪ I has >= k'+1 >= k pts)
+        if n_valid < self.k:
+            state = _topup_from_M(state, self.k)
+        radius = 4.0 * state.d_thr
+        if self.mode == "plain":
+            return Coreset(points=state.T, valid=state.t_valid,
+                           weights=jnp.where(state.t_valid, 1, 0).astype(jnp.int32),
+                           radius=radius)
+        if self.mode == "gen":
+            mult = jnp.where(state.t_valid, jnp.maximum(state.e_cnt, 1), 0)
+            return GeneralizedCoreset(points=state.T, multiplicity=mult,
+                                      radius=radius)
+        # ext: union of delegate sets
+        cap, k_slots, dim = state.e_pts.shape
+        pts = state.e_pts.reshape(cap * k_slots, dim)
+        slot = jnp.tile(jnp.arange(k_slots), (cap,))
+        row = jnp.repeat(jnp.arange(cap), k_slots)
+        valid = state.t_valid[row] & (slot < state.e_cnt[row])
+        return Coreset(points=pts, valid=valid,
+                       weights=valid.astype(jnp.int32), radius=radius)
+
+    @property
+    def state(self) -> Optional[SMMState]:
+        return self._state
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topup_from_M(state: SMMState, k: int) -> SMMState:
+    cap = state.T.shape[0]
+
+    def body(j, st):
+        need = k - jnp.sum(st.t_valid)
+        use = st.m_valid[j] & (need > 0)
+        free = jnp.argmin(st.t_valid)
+        T = st.T.at[free].set(jnp.where(use, st.M[j], st.T[free]))
+        t_valid = st.t_valid.at[free].set(jnp.where(use, True, st.t_valid[free]))
+        e_cnt = st.e_cnt.at[free].set(jnp.where(use, 1, st.e_cnt[free]))
+        e_pts = st.e_pts.at[free, 0].set(jnp.where(use, st.M[j], st.e_pts[free, 0]))
+        return st._replace(T=T, t_valid=t_valid, e_cnt=e_cnt, e_pts=e_pts)
+
+    return jax.lax.fori_loop(0, cap, body, state)

@@ -1,0 +1,67 @@
+"""Diversity-driven data selection — the paper's technique as a first-class
+data-pipeline feature (DESIGN.md §2 point 2).
+
+Given a pool of examples, embed them (mean-pooled token embeddings through
+the model's own embedding table, or a seeded random projection when no model
+is at hand), then run the MR core-set construction to pick the k most diverse
+examples.  This is the standard "diverse subset for curation / dedup" loop
+the paper motivates, applicable to all 10 assigned architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diversity_maximize
+from repro.core.distributed import simulate_mr
+
+
+def embed_examples(token_batches: np.ndarray, embedding: Optional[jnp.ndarray]
+                   = None, dim: int = 64, seed: int = 0) -> np.ndarray:
+    """token_batches (N, S) int32 -> (N, dim) float32 embeddings."""
+    toks = np.asarray(token_batches)
+    if embedding is not None:
+        emb = np.asarray(embedding, np.float32)
+        pooled = emb[toks].mean(axis=1)                    # (N, D)
+        if pooled.shape[1] > dim:
+            rng = np.random.default_rng(seed)
+            proj = rng.normal(size=(pooled.shape[1], dim)).astype(np.float32)
+            proj /= np.sqrt(pooled.shape[1])
+            pooled = pooled @ proj
+        return pooled
+    # seeded random-projection sketch of token histograms
+    rng = np.random.default_rng(seed)
+    vmax = int(toks.max()) + 1
+    proj = rng.normal(size=(vmax, dim)).astype(np.float32) / np.sqrt(vmax)
+    out = np.zeros((toks.shape[0], dim), np.float32)
+    for i, row in enumerate(toks):
+        out[i] = proj[row].sum(axis=0)
+    return out
+
+
+def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
+                   kprime: Optional[int] = None, num_reducers: int = 1,
+                   metric="euclidean") -> np.ndarray:
+    """Returns indices of the k selected examples."""
+    pts = np.asarray(embeddings, np.float32)
+    if num_reducers > 1:
+        sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
+                             kprime=kprime, metric=metric)
+    else:
+        sol, _, _ = diversity_maximize(pts, k, measure, kprime=kprime,
+                                       metric=metric)
+    # map solution points back to indices (exact match by row)
+    idx = []
+    seen = set()
+    for s in sol:
+        d = np.linalg.norm(pts - s[None, :], axis=1)
+        order = np.argsort(d)
+        for j in order:
+            if j not in seen:
+                idx.append(int(j))
+                seen.add(int(j))
+                break
+    return np.asarray(idx[:k])

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the core-set hot spots (validated via interpret mode
+on CPU; see tests/test_kernels.py for the shape/dtype sweeps vs ref.py)."""
+from . import ops, ref
+from .gmm_update import gmm_update_select_pallas
+from .pairwise import pairwise_pallas
+
+__all__ = ["ops", "ref", "gmm_update_select_pallas", "pairwise_pallas"]

@@ -1,0 +1,100 @@
+"""Fused batched-GMM round Pallas kernel: distance block + running min +
+per-block TOP-B in a single VMEM pass.
+
+This is the production-TPU form of §Perf iteration 4 (the chunk-fused sweep
+in `core/gmm.gmm_batched(chunk=...)`): per grid step, one (bn, d) point tile
+meets a (b, d) center block on the MXU, the running min-distance update
+happens in registers, and each tile emits its local top-b (value, index)
+pairs.  The cross-tile merge — top-b of (grid·b) candidates — is O(n/bn · b)
+and runs in the jit wrapper.  The (n, b) distance matrix never exists in
+HBM, which is what makes the batched sweep bandwidth-optimal (one point-set
+read per b centers).
+
+Chunk-local top-b followed by a global top-b over tile winners is exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topb_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
+                 min_out_ref, val_ref, idx_ref, *, mode, bn, b):
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (bn, d)
+    c = c_ref[...]                                   # (b, d)
+    dot = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if mode in ("sqeuclidean", "euclidean"):
+        d2 = xsq_ref[...][:, None] + csq_ref[...][None, :] - 2.0 * dot
+        d2 = jnp.maximum(d2, 0.0)
+        dist = jnp.sqrt(d2) if mode == "euclidean" else d2
+    elif mode == "dot":
+        dist = -dot
+    elif mode == "cosine":
+        dist = jnp.arccos(jnp.clip(dot, -1.0, 1.0))
+    else:
+        raise ValueError(mode)
+    new_min = jnp.minimum(min_ref[...], jnp.min(dist, axis=1))
+    min_out_ref[...] = new_min
+    masked = jnp.where(mask_ref[...], new_min, -jnp.inf)
+    vals, idxs = jax.lax.top_k(masked, b)            # tile-local top-b
+    val_ref[...] = vals
+    idx_ref[...] = (idxs + i * bn).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "interpret"))
+def gmm_topb_pallas(points, centers, min_in, mask, *, mode: str = "euclidean",
+                    bn: int = 1024, interpret: bool = True):
+    """Fused batched round.  points (n, d) [n % bn == 0], centers (b, d),
+    min_in (n,), mask (n,) -> (min_out (n,), cand_val (b,), cand_idx (b,)).
+
+    cand_* are the exact global top-b of the updated masked min-distance
+    field (tile-local top-b + cross-tile merge)."""
+    n, d = points.shape
+    b = centers.shape[0]
+    assert n % bn == 0 and bn >= b, (n, bn, b)
+    xsq = jnp.sum(points * points, axis=-1)
+    csq = jnp.sum(centers * centers, axis=-1)
+    grid = (n // bn,)
+    min_out, vals, idxs = pl.pallas_call(
+        functools.partial(_topb_kernel, mode=mode, bn=bn, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0] * b,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0] * b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(points, centers, xsq, csq, min_in, mask)
+    # cross-tile merge: top-b of (grid*b) winners — exact global top-b
+    mvals, sel = jax.lax.top_k(vals, b)
+    return min_out, mvals, idxs[sel]
+
+
+def gmm_topb_ref(points, centers, min_in, mask, mode: str = "euclidean",
+                 b: int = None):
+    """Pure-jnp oracle."""
+    from .ref import pairwise_ref
+    b = b if b is not None else centers.shape[0]
+    d = pairwise_ref(points, centers, mode)
+    new_min = jnp.minimum(min_in, jnp.min(d, axis=1))
+    masked = jnp.where(mask, new_min, -jnp.inf)
+    vals, idxs = jax.lax.top_k(masked, b)
+    return new_min, vals, idxs.astype(jnp.int32)

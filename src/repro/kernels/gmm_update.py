@@ -1,0 +1,92 @@
+"""Fused GMM-round Pallas kernel.
+
+One GMM round = "distance from every point to the newest center, running min
+with the incumbent distances, global argmax of the result".  A naive lowering
+reads ``points`` for the distance, ``min_dist`` twice (min + argmax) and
+writes ``min_dist`` once — ~3 HBM sweeps.  This kernel performs the whole
+round in a single sweep: each grid step loads one (bn, d) point tile plus its
+(bn,) incumbent distances, hits the MXU for ``x @ cᵀ`` against a *block* of
+``b`` candidate centers, reduces over centers, and emits the tile's running
+min together with a per-block (max, argmax) pair.  The cross-block reduction
+(grid-many scalars) happens in the jit'd wrapper — O(n / bn) elements.
+
+Arithmetic intensity of a round is ~2·b·d FLOPs per 4·(d+2) bytes of point
+row, i.e. memory-bound at b=1 — exactly why the single-sweep fusion (and the
+``b>1`` center blocking used by the batched-GMM optimization in
+EXPERIMENTS.md §Perf) is the right TPU shape for the paper's hot loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
+                min_out_ref, bmax_ref, barg_ref, *, mode, bn):
+    i = pl.program_id(0)
+    x = x_ref[...]                               # (bn, d)
+    c = c_ref[...]                               # (b, d)
+    dot = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (bn, b)
+    if mode in ("sqeuclidean", "euclidean"):
+        d2 = xsq_ref[...][:, None] + csq_ref[...][None, :] - 2.0 * dot
+        d2 = jnp.maximum(d2, 0.0)
+        dist = jnp.sqrt(d2) if mode == "euclidean" else d2
+    elif mode == "dot":
+        dist = -dot
+    elif mode == "cosine":
+        dist = jnp.arccos(jnp.clip(dot, -1.0, 1.0))
+    else:
+        raise ValueError(mode)
+    dist = jnp.min(dist, axis=1)                 # reduce over center block
+    new_min = jnp.minimum(min_ref[...], dist)
+    min_out_ref[...] = new_min
+    masked = jnp.where(mask_ref[...], new_min, -jnp.inf)
+    j = jnp.argmax(masked)
+    bmax_ref[0] = masked[j]
+    barg_ref[0] = (j + i * bn).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "bn", "interpret"))
+def gmm_update_select_pallas(points, centers, min_in, mask, *,
+                             mode: str = "euclidean", bn: int = 1024,
+                             interpret: bool = True):
+    """Fused round.  points (n,d) [n % bn == 0], centers (b,d), min_in (n,),
+    mask (n,) -> (min_out (n,), argmax (), max ())."""
+    n, d = points.shape
+    b = centers.shape[0]
+    assert n % bn == 0, (n, bn)
+    xsq = jnp.sum(points * points, axis=-1)
+    csq = jnp.sum(centers * centers, axis=-1)
+    grid = (n // bn,)
+    min_out, bmax, barg = pl.pallas_call(
+        functools.partial(_gmm_kernel, mode=mode, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(points, centers, xsq, csq, min_in, mask)
+    # cross-block reduction: O(n/bn) scalars
+    g = jnp.argmax(bmax)
+    return min_out, barg[g], bmax[g]

@@ -1,0 +1,92 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile boundaries, metric-name -> kernel-mode translation
+(cosine pre-normalizes once so the kernel is a pure dot+arccos), and the
+CPU-interpret switch: on the CPU test/dev container every kernel runs under
+``interpret=True`` (the kernel body executed by the Pallas interpreter); on
+TPU the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gmm_update import gmm_update_select_pallas
+from .pairwise import pairwise_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def _metric_to_mode(metric_name: str):
+    """-> (mode, needs_normalize)."""
+    if metric_name in ("euclidean", "sqeuclidean", "dot"):
+        return metric_name, False
+    if metric_name == "cosine":
+        return "cosine", True
+    raise ValueError(f"no Pallas path for metric {metric_name!r}")
+
+
+def _normalize(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "bm", "bn"))
+def pairwise(x, y, metric_name: str = "sqeuclidean", bm: int = 256,
+             bn: int = 256):
+    """Distance matrix (m, n) with padding handled."""
+    mode, norm = _metric_to_mode(metric_name)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    if norm:
+        x, y = _normalize(x), _normalize(y)
+    m, d = x.shape
+    n, _ = y.shape
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm_), _round_up(n, bn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    yp = jnp.pad(y, ((0, np_ - n), (0, 0)))
+    out = pairwise_pallas(xp, yp, mode=mode, bm=bm_, bn=bn_,
+                          interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "bn"))
+def gmm_update_select(points, centers, min_in, mask, metric_name: str,
+                      bn: int = 1024):
+    """Fused GMM round on (n, d) points vs (b, d) centers.
+
+    Returns (min_out (n,), argmax () int32, max ()).  Padded rows are masked
+    out, so argmax/max are exact over the original n points.
+    """
+    mode, norm = _metric_to_mode(metric_name)
+    points = jnp.asarray(points, jnp.float32)
+    centers = jnp.atleast_2d(jnp.asarray(centers, jnp.float32))
+    if norm:
+        points, centers = _normalize(points), _normalize(centers)
+    n, d = points.shape
+    bn_ = min(bn, _round_up(n, 8))
+    npad = _round_up(n, bn_)
+    pp = jnp.pad(points, ((0, npad - n), (0, 0)))
+    mi = jnp.pad(min_in, (0, npad - n), constant_values=jnp.inf)
+    mk = jnp.pad(mask, (0, npad - n), constant_values=False)
+    min_out, arg, mx = gmm_update_select_pallas(pp, centers, mi, mk,
+                                                mode=mode, bn=bn_,
+                                                interpret=_interpret())
+    return min_out[:n], arg, mx
+
+
+def gmm_update(points, center, min_in, metric_name: str):
+    """Running-min only (compat wrapper used by the lax GMM path)."""
+    n = points.shape[0]
+    mask = jnp.ones((n,), bool)
+    min_out, _, _ = gmm_update_select(points, center, min_in, mask, metric_name)
+    return min_out

@@ -1,0 +1,52 @@
+"""Serving launcher: batched generation + diverse re-ranking.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --requests 8 --new-tokens 16 --diverse-k 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+import repro.models as M
+from repro.configs import get_config
+from repro.data import embed_examples
+from repro.models.common import ShardingRules
+from repro.serving import Request, ServingEngine, diverse_rerank
+
+RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
+                      vocab=None, experts=None, fsdp=None, head_dim=None,
+                      state=None, act_heads=None)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--diverse-k", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, RULES, params, batch=4,
+                           capacity=args.new_tokens + 32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab_size, size=8)
+                    .astype(np.int32), max_new_tokens=args.new_tokens)
+            for _ in range(args.requests)]
+    done = engine.generate(reqs)
+    for i, r in enumerate(done):
+        print(f"req {i}: {r.out.tolist()}")
+    if args.diverse_k:
+        outs = np.stack([r.out for r in done])
+        emb = embed_examples(outs, dim=16)
+        top = diverse_rerank(emb, args.diverse_k)
+        print(f"\nmost diverse {args.diverse_k}: requests {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Per-(arch × shape × mesh) sharding decisions (DESIGN.md §4).
+
+``rules_for`` picks the ShardingRules; ``batch_struct`` builds the input
+ShapeDtypeStructs + PartitionSpecs for every shape cell.  The same functions
+drive the dry-run, the trainer and the tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.models as M
+from repro.configs.shapes import ShapeCell
+from repro.models.common import ModelConfig, ShardingRules
+from .mesh import data_axes
+
+
+def rules_for(cfg: ModelConfig, cell: ShapeCell, mesh) -> ShardingRules:
+    daxes = data_axes(mesh)
+    batch_axes: Tuple[str, ...] = daxes
+    kv_seq = None
+    # Batched serving keeps weights RESIDENT (no ZeRO-3): per-token FSDP
+    # re-gathers dominate the decode collective term, and the full-weight HBM
+    # read amortizes over the per-device batch (§Perf iteration 8).  Keeps
+    # fsdp when (a) batch < 2 sequences per data shard (batch=1 long-context:
+    # the resident read would EXCEED the gather cost — measured, see
+    # EXPERIMENTS.md) or (b) TP-only weights bust HBM (arctic: 60 GB/chip).
+    fsdp = "data"
+    if cell.kind == "decode":
+        tp = mesh.shape.get("model", 1)
+        dshards = int(np.prod([mesh.shape[a] for a in daxes]))
+        if (cell.global_batch >= 2 * dshards
+                and 2 * M.count_params(cfg) / tp <= 6e9):
+            fsdp = None
+    if cell.kind == "decode" and cell.global_batch < 2 * len(mesh.devices) \
+            and cell.global_batch <= 16:
+        # long-context single-sequence decode: context parallelism — KV cache
+        # sequence shards over the data axes, batch replicated
+        batch_axes = ()
+        kv_seq = "data"
+    elif cell.kind == "decode" and cfg.attn_shard == "pad_heads":
+        # split-KV decode (flash-decoding): the cache sequence shards over
+        # the TP axis — no head padding/repeat needed at Sq=1 (§Perf)
+        kv_seq = "model"
+    return ShardingRules(
+        batch=batch_axes,
+        seq=None,
+        # param head axes shard only when the published counts divide TP
+        heads="model" if cfg.attn_shard == "heads" else None,
+        # activation head axes (incl. the padded/repeated heads of pad_heads)
+        act_heads="model" if cfg.attn_shard in ("heads", "pad_heads")
+        else None,
+        # pad_heads: the CACHE keeps the published (non-divisible) KV-head
+        # count unsharded; the repeated padded heads shard via `act_heads`
+        kv_heads="model" if cfg.attn_shard == "heads" else None,
+        head_dim="model" if cfg.attn_shard == "head_dim" else None,
+        d_model=None,
+        d_ff="model",
+        vocab="model",
+        experts="model",
+        state="model" if cfg.family == "ssm" else None,
+        kv_seq=kv_seq,
+        fsdp=fsdp,
+    )
+
+
+def _enc_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    return cell.seq_len // 2
+
+
+def _text_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cfg.family == "vlm":
+        return max(cell.seq_len - cfg.num_patches, 1)
+    return cell.seq_len
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell, rules: ShardingRules):
+    """-> (shapes pytree, specs pytree) for the train/prefill batch dict."""
+    B = cell.global_batch
+    bt = rules.resolve("batch")
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        T, S = _enc_len(cfg, cell), cell.seq_len // 2
+        shapes = {
+            "frames": jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.float32),
+            "dec_tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        specs = {"frames": P(bt, None, None), "dec_tokens": P(bt, None),
+                 "labels": P(bt, None)}
+    elif cfg.family == "vlm":
+        from repro.models.vlm import D_VISION
+        S = _text_len(cfg, cell)
+        shapes = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, D_VISION), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        specs = {"tokens": P(bt, None), "patch_embeds": P(bt, None, None),
+                 "labels": P(bt, None)}
+    else:
+        S = cell.seq_len
+        shapes = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                  "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        specs = {"tokens": P(bt, None), "labels": P(bt, None)}
+    if cell.kind != "train":
+        shapes.pop("labels")
+        specs.pop("labels")
+    return shapes, specs
+
+
+def cache_struct(cfg: ModelConfig, cell: ShapeCell, rules: ShardingRules,
+                 split_local_global: bool = True):
+    """Decode/prefill cache ShapeDtypeStructs + specs."""
+    capacity = cell.seq_len
+    t_enc = _enc_len(cfg, cell)
+    shapes = M.make_cache(cfg, cell.global_batch, capacity, shapes_only=True,
+                          t_enc=t_enc, split_local_global=split_local_global)
+    specs = M.cache_specs(cfg, rules)
+    if isinstance(shapes, dict):
+        specs = {k: specs for k in shapes}
+    return shapes, specs
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

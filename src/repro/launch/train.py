@@ -1,0 +1,81 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 100 --batch 8 --seq 128 [--ckpt-dir /tmp/ckpt] [--reduced]
+
+On a real pod this runs under the production mesh with the per-arch sharding
+rules; on the CPU container use --reduced (the default mesh is whatever
+devices exist).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config
+from repro.data import lm_batch
+from repro.distributed import TrainingSupervisor
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import rules_for
+from repro.models.common import ShardingRules, set_current_mesh
+from repro.train import default_lr, default_optimizer, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_host_mesh()
+    set_current_mesh(mesh if len(jax.devices()) > 1 else None)
+    rules = (rules_for(cfg, SHAPES["train_4k"], mesh)
+             if len(jax.devices()) > 1 else
+             ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
+                           vocab=None, experts=None, fsdp=None,
+                           head_dim=None, state=None, act_heads=None))
+    print(f"arch={cfg.arch} params={M.count_params(cfg):,} "
+          f"devices={len(jax.devices())}")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = default_optimizer(cfg)
+    state = (params, opt.init(params))
+    raw = jax.jit(make_train_step(cfg, rules, opt, default_lr(cfg, args.steps),
+                                  accum_steps=args.accum))
+
+    def step_fn(state, batch, step):
+        p, o, m = raw(state[0], state[1], batch, step)
+        return (p, o), m
+
+    def batch_fn(step):
+        return lm_batch(cfg, seed=17, step=step, batch=args.batch,
+                        seq=args.seq, t_enc=args.seq // 2)
+
+    if args.ckpt_dir:
+        sup = TrainingSupervisor(CheckpointManager(args.ckpt_dir, keep_k=3),
+                                 ckpt_every=args.ckpt_every)
+        sup.run(state, step_fn, args.steps, batch_fn)
+        print(f"done: {sup.report.final_step} steps, "
+              f"loss {sup.report.losses[-1]:.4f}")
+    else:
+        for step in range(args.steps):
+            state, m = step_fn(state, batch_fn(step), step)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
+                      f"lr {float(m['lr']):.2e}")
+
+
+if __name__ == "__main__":
+    main()

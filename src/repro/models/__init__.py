@@ -1,0 +1,200 @@
+"""Model registry: family dispatch for init / loss / serving entry points.
+
+Every family exposes the same meta-API:
+
+* ``init_params(cfg, key)`` / ``param_shapes(cfg)`` / ``param_specs(cfg, rules)``
+* ``loss_fn(params, cfg, rules, batch) -> scalar``  (teacher-forced CE)
+* ``make_prefill(cfg, rules)``, ``make_decode(cfg, rules)`` serving callables
+* ``make_cache(cfg, batch, capacity, shapes_only)`` + ``cache_specs``
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, encdec, rglru, ssd, transformer, vlm
+from .common import (InitBuilder, ModelConfig, ShapeBuilder, ShardingRules,
+                     SpecBuilder, shard)
+
+_BUILDERS = {
+    "dense": transformer.build_params,
+    "moe": transformer.build_params,
+    "vlm": vlm.build_params,
+    "ssm": ssd.build_params,
+    "hybrid": rglru.build_params,
+    "encdec": encdec.build_params,
+}
+
+
+def init_params(cfg: ModelConfig, key):
+    return _BUILDERS[cfg.family](cfg, InitBuilder(key, cfg.param_dtype))
+
+
+def param_shapes(cfg: ModelConfig):
+    return _BUILDERS[cfg.family](cfg, ShapeBuilder(cfg.param_dtype))
+
+
+def param_specs(cfg: ModelConfig, rules: ShardingRules):
+    return _BUILDERS[cfg.family](cfg, SpecBuilder(rules))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import numpy as np
+    shapes = param_shapes(cfg)
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+def active_param_ratio(cfg: ModelConfig) -> float:
+    """active / total params (MoE top-k accounting for MODEL_FLOPS)."""
+    if cfg.num_experts == 0:
+        return 1.0
+    import numpy as np
+    shapes = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        name = jax.tree_util.keystr(path)
+        if any(t in name for t in ("e_gate", "e_up", "e_down")):
+            active += n * cfg.num_experts_per_tok / cfg.num_experts
+        else:
+            active += n
+    return active / total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels, mask=None):
+    """logits (B,S,V) fp32, labels (B,S) int32.  Mean CE over valid tokens."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, rules: ShardingRules,
+            batch: Dict[str, Any]):
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, _ = transformer.forward(params, cfg, rules, batch["tokens"],
+                                        positions)
+        return _xent(logits, batch["labels"])
+    if fam == "ssm":
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, _ = ssd.forward(params, cfg, rules, batch["tokens"], positions)
+        return _xent(logits, batch["labels"])
+    if fam == "hybrid":
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, _ = rglru.forward(params, cfg, rules, batch["tokens"],
+                                  positions)
+        return _xent(logits, batch["labels"])
+    if fam == "vlm":
+        logits, _ = vlm.forward_train(params, cfg, rules, batch["tokens"],
+                                      batch["patch_embeds"])
+        # loss only on text positions (patches carry no labels)
+        P = batch["patch_embeds"].shape[1]
+        return _xent(logits[:, P:], batch["labels"])
+    if fam == "encdec":
+        logits, _ = encdec.forward_train(params, cfg, rules, batch["frames"],
+                                         batch["dec_tokens"])
+        return _xent(logits, batch["labels"])
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# serving dispatch
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, capacity: int, *,
+               shapes_only: bool = False, t_enc: int = 0,
+               split_local_global: bool = False):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        fn = attention.cache_shapes if shapes_only else attention.init_kv_cache
+        if (split_local_global and cfg.local_global_period == 2
+                and capacity > cfg.window > 0):
+            # §Perf hillclimb #3 (gemma2 long-context): local layers hold
+            # window-sized ring buffers, only global layers hold full KV
+            G = cfg.num_layers // 2
+            return {"local": fn(G, batch, cfg.window, cfg),
+                    "global": fn(G, batch, capacity, cfg)}
+        cap = capacity
+        if cfg.window and not cfg.local_global_period:
+            cap = min(capacity, cfg.window)
+        return fn(cfg.num_layers, batch, cap, cfg)
+    if fam == "ssm":
+        fn = ssd.cache_shapes if shapes_only else ssd.init_cache
+        return fn(cfg, batch)
+    if fam == "hybrid":
+        fn = rglru.cache_shapes if shapes_only else rglru.init_cache
+        return fn(cfg, batch, capacity)
+    if fam == "encdec":
+        fn = encdec.cache_shapes if shapes_only else encdec.init_cache
+        return fn(cfg, batch, capacity, t_enc)
+    raise ValueError(fam)
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return attention.cache_specs(rules)
+    if fam == "ssm":
+        return ssd.cache_specs(rules)
+    if fam == "hybrid":
+        return rglru.cache_specs(cfg, rules)
+    if fam == "encdec":
+        return encdec.cache_specs(rules)
+    raise ValueError(fam)
+
+
+def prefill_fn(params, cfg: ModelConfig, rules: ShardingRules,
+               batch: Dict[str, Any], cache):
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return transformer.prefill(params, cfg, rules, batch["tokens"], cache)
+    if fam == "vlm":
+        return vlm.prefill(params, cfg, rules, batch["tokens"],
+                           batch["patch_embeds"], cache)
+    if fam == "ssm":
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        return ssd.forward(params, cfg, rules, batch["tokens"], positions,
+                           cache=cache)
+    if fam == "hybrid":
+        S = batch["tokens"].shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        return rglru.forward(params, cfg, rules, batch["tokens"], positions,
+                             cache=cache)
+    if fam == "encdec":
+        return encdec.prefill(params, cfg, rules, batch["frames"],
+                              batch["dec_tokens"], cache)
+    raise ValueError(fam)
+
+
+def decode_fn(params, cfg: ModelConfig, rules: ShardingRules, tokens, pos,
+              cache):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.decode_step(params, cfg, rules, tokens, pos, cache)
+    if fam == "ssm":
+        return ssd.forward(params, cfg, rules, tokens,
+                           pos[None].astype(jnp.int32), cache=cache)
+    if fam == "hybrid":
+        return rglru.forward(params, cfg, rules, tokens,
+                             pos[None].astype(jnp.int32), cache=cache)
+    if fam == "encdec":
+        return encdec.decode_step(params, cfg, rules, tokens, pos, cache)
+    raise ValueError(fam)

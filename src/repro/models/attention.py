@@ -1,0 +1,196 @@
+"""GQA/MQA attention with the variants the assigned archs need:
+causal full, sliding-window (local), local/global alternation, attention-logit
+softcap (gemma2), RoPE, and position-indexed KV caches (full + rolling-window)
+for serving.
+
+Positions are explicit everywhere: masks are built from absolute positions of
+queries and cache slots, so the same code path serves training (iota
+positions), prefill, full-cache decode and rolling-window decode (slot
+positions, -1 = empty).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ShardingRules, rope, shard, softcap
+
+
+def qkv_project(x, wq, wk, wv, cfg: ModelConfig, rules: ShardingRules,
+                positions):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.attn_shard == "heads":
+        q = shard(q, rules, "batch", "seq", "act_heads", None)
+        k = shard(k, rules, "batch", "seq", "kv_heads", None)
+        v = shard(v, rules, "batch", "seq", "kv_heads", None)
+    elif cfg.attn_shard == "pad_heads":
+        # pad/repeat happens inside attend() so caches keep the published
+        # KV-head count; here only the batch layout is constrained
+        q = shard(q, rules, "batch", "seq", None, None)
+        k = shard(k, rules, "batch", "seq", None, None)
+        v = shard(v, rules, "batch", "seq", None, None)
+    else:  # head_dim sharding (baseline; psums the score tensor)
+        q = shard(q, rules, "batch", "seq", None, "head_dim")
+        k = shard(k, rules, "batch", "seq", None, "head_dim")
+        v = shard(v, rules, "batch", "seq", None, "head_dim")
+    return q, k, v
+
+
+def _as_heads_mode(cfg: ModelConfig) -> ModelConfig:
+    """cfg view with attn_shard='heads' (used after pad/repeat)."""
+    import dataclasses
+    return dataclasses.replace(cfg, attn_shard="heads")
+
+
+def _pick_chunk(sq: int, want: int) -> int:
+    qc = min(want, sq)
+    while sq % qc:
+        qc -= 1
+    return qc
+
+
+def attend(q, k, v, q_pos, kv_pos, cfg: ModelConfig, rules: ShardingRules, *,
+           window: int = 0, is_causal: bool = True, q_chunk: int = 512):
+    """Core attention, query-chunked so the live score block is
+    (B, H, qc, Skv) instead of (B, H, Sq, Skv) — the flash-style shape that
+    keeps long-sequence training inside VMEM/HBM budgets.
+
+    q (B,Sq,H,hd); k,v (B,Skv,KV,hd); q_pos (Sq,), kv_pos (Skv,) absolute
+    positions (-1 marks empty cache slots)."""
+    B, Sq, H, hd = q.shape
+    if cfg.attn_shard == "pad_heads" and Sq > 1:
+        # (decode takes the plain GQA path below: its parallelism comes from
+        # split-KV cache-sequence sharding — flash-decoding style — which
+        # needs no head padding/repeat; see launch/sharding.rules_for)
+        # pad Q heads to attn_pad_to and repeat KV per padded head: the flat
+        # head axis then shards over TP with NO score-tensor psum (the
+        # head_dim baseline all-reduces (B,H,Sq,Skv) scores — §Perf #2).
+        # Padding is activation-level only; params keep published geometry.
+        Hp = cfg.attn_pad_to or H
+        KV0 = k.shape[2]
+        qpk0 = H // max(KV0, 1)
+        if Hp > H:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+        kv_map = jnp.concatenate([
+            jnp.arange(H, dtype=jnp.int32) // qpk0,
+            jnp.zeros((Hp - H,), jnp.int32)])
+        k = jnp.take(k, kv_map, axis=2)
+        v = jnp.take(v, kv_map, axis=2)
+        q = shard(q, rules, "batch", "seq", "act_heads", None)
+        k = shard(k, rules, "batch", "seq", "act_heads", None)
+        v = shard(v, rules, "batch", "seq", "act_heads", None)
+        out = attend(q, k, v, q_pos, kv_pos,
+                     _as_heads_mode(cfg), rules, window=window,
+                     is_causal=is_causal, q_chunk=q_chunk)
+        return out[:, :, :H]
+    Skv, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    scale = hd ** -0.5
+    qc = _pick_chunk(Sq, q_chunk)
+    nq = Sq // qc
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, KV, qpk, hd), 1, 0)   # (nq,B,qc,KV,qpk,hd)
+    pr = q_pos.reshape(nq, qc)
+
+    h_ax = "act_heads" if cfg.attn_shard == "heads" else None
+
+    def one_chunk(args):
+        qb, pb = args                                            # (B,qc,KV,qpk,hd), (qc,)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qb * scale, k,
+                            preferred_element_type=jnp.float32)
+        # keep the score block sharded on KV-heads inside the chunk loop —
+        # GSPMD loses the propagation through the loop body otherwise
+        # (EXPERIMENTS.md §Perf hillclimb #2, iteration 4)
+        scores = shard(scores, rules, "batch", h_ax and "act_heads",
+                       None, None, None)
+        scores = softcap(scores, cfg.attn_softcap)
+        mask = kv_pos[None, :] >= 0
+        if is_causal:
+            mask = mask & (kv_pos[None, :] <= pb[:, None])
+        if window > 0:
+            mask = mask & (kv_pos[None, :] > pb[:, None] - window)
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        probs = shard(probs, rules, "batch", h_ax and "act_heads",
+                      None, None, None)
+        ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                         preferred_element_type=jnp.float32)
+        return ctx.reshape(B, qc, H, hd).astype(q.dtype)
+
+    if nq == 1:
+        ctx = one_chunk((qr[0], pr[0]))[:, None]
+    else:
+        ctx = jax.lax.map(one_chunk, (qr, pr))                   # (nq,B,qc,H,hd)
+        ctx = jnp.moveaxis(ctx, 0, 1)
+    return ctx.reshape(B, Sq, H, hd)
+
+
+def out_project(ctx, wo, rules: ShardingRules):
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wo)
+    return shard(out, rules, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Per-layer-stack cache: k/v (L, B, C, KV, hd); slot_pos (L, C) absolute
+    positions of the stored entries (-1 empty); ``window > 0`` makes C a
+    rolling buffer."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray
+
+
+def init_kv_cache(num_layers: int, batch: int, capacity: int, cfg: ModelConfig,
+                  dtype=jnp.bfloat16):
+    shape = (num_layers, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   slot_pos=jnp.full((num_layers, capacity), -1, jnp.int32))
+
+
+def cache_shapes(num_layers: int, batch: int, capacity: int, cfg: ModelConfig,
+                 dtype=jnp.bfloat16):
+    shape = (num_layers, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jax.ShapeDtypeStruct(shape, dtype),
+                   v=jax.ShapeDtypeStruct(shape, dtype),
+                   slot_pos=jax.ShapeDtypeStruct((num_layers, capacity),
+                                                 jnp.int32))
+
+
+def cache_specs(rules: ShardingRules, kv_sharded: bool = True) -> KVCache:
+    from jax.sharding import PartitionSpec as P
+    kv = rules.kv_heads if kv_sharded else None
+    spec = P(None, rules.resolve("batch"), rules.kv_seq, kv, None)
+    return KVCache(k=spec, v=spec, slot_pos=P(None, rules.kv_seq))
+
+
+def cache_write(layer_k, layer_v, layer_pos, k_new, v_new, positions,
+                window: int):
+    """Write S_new entries at their (possibly wrapped) slots.  Returns the
+    updated (k, v, slot_pos) for ONE layer: k/v (B, C, KV, hd).
+
+    Rolling buffers (window > 0): if more entries than the capacity arrive at
+    once (windowed prefill), only the last C survive — they are sliced before
+    the scatter so slot indices never repeat."""
+    C = layer_k.shape[1]
+    S = k_new.shape[1]
+    if window > 0:
+        if S > C:
+            k_new, v_new = k_new[:, -C:], v_new[:, -C:]
+            positions = positions[-C:]
+        slots = positions % C
+    else:
+        slots = positions
+    layer_k = layer_k.at[:, slots].set(k_new.astype(layer_k.dtype))
+    layer_v = layer_v.at[:, slots].set(v_new.astype(layer_v.dtype))
+    layer_pos = layer_pos.at[slots].set(positions.astype(jnp.int32))
+    return layer_k, layer_v, layer_pos

@@ -1,0 +1,266 @@
+"""Shared model substrate: config, param builders, norms, RoPE, MLPs,
+logical-axis sharding.
+
+Param system: one structure function (`build_params`) walked by three
+builders — array init (training), PartitionSpec (sharding), and
+ShapeDtypeStruct (dry-run, zero allocation).  Logical axes on every param and
+a per-run `ShardingRules` mapping logical axis -> mesh axis keep the model
+code mesh-agnostic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # --- attention flavour
+    rope_theta: float = 10000.0
+    window: int = 0                  # >0: sliding-window (local) attention
+    local_global_period: int = 0     # gemma2: alternate local/global with this period
+    logit_softcap: float = 0.0       # gemma2 final-logit softcap
+    attn_softcap: float = 0.0        # gemma2 attention-logit softcap
+    mlp_act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU)
+    mlp_type: str = "glu"            # glu | plain (starcoder2-style 2-matrix)
+    tie_embeddings: bool = True
+    embed_scale: bool = False        # gemma family: x *= sqrt(d_model)
+    # --- MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_dense_residual: bool = False # arctic: dense MLP residual in parallel
+    moe_dense_ff: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # --- RG-LRU hybrid (recurrentgemma)
+    rnn_width: int = 0
+    rnn_block_period: int = 0        # (rec, rec, attn) period = 3
+    # --- enc-dec
+    num_decoder_layers: int = 0
+    # --- vlm
+    num_patches: int = 0
+    # --- numerics / training
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: str = "dots"              # none | dots | full
+    # --- sharding overrides (logical -> mesh axis name or None)
+    # heads:     shard Q/KV heads over TP (H and KV both divide the axis)
+    # head_dim:  shard the head dim (psums the score tensor — baseline only)
+    # pad_heads: pad Q heads to attn_pad_to + repeat KV per-head, shard the
+    #            padded flat head axis (EXPERIMENTS.md §Perf hillclimb #2)
+    attn_shard: str = "heads"
+    attn_pad_to: int = 0             # padded head count for pad_heads mode
+    # sub-quadratic flag for the long_500k cell
+    supports_long_context: bool = False
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:        # ssm
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    batch: Tuple[str, ...] = ("data",)
+    seq: Optional[str] = None            # set to "data" for sequence parallelism
+    heads: Optional[str] = "model"          # param head axes
+    act_heads: Optional[str] = "model"      # activation head axes (pad_heads)
+    kv_heads: Optional[str] = "model"
+    head_dim: Optional[str] = None
+    d_model: Optional[str] = None
+    d_ff: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    experts: Optional[str] = "model"
+    state: Optional[str] = None
+    kv_seq: Optional[str] = None         # decode-time KV-cache sequence shards
+    fsdp: Optional[str] = "data"         # weight-matrix d_model dim (ZeRO-3)
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        v = getattr(self, logical)
+        return v
+
+    def spec(self, *logicals) -> P:
+        return P(*[self.resolve(l) for l in logicals])
+
+
+def shard(x, rules: ShardingRules, *logicals):
+    """with_sharding_constraint on logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*logicals))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# param builders
+# ---------------------------------------------------------------------------
+
+class Builder:
+    """Visitor handed to ``build_params`` implementations."""
+
+    def __call__(self, name: str, shape: Sequence[int],
+                 axes: Sequence[Optional[str]], *, scale: float = 1.0,
+                 init: str = "normal", dtype=None):
+        raise NotImplementedError
+
+
+class InitBuilder(Builder):
+    def __init__(self, key, param_dtype):
+        self._key = key
+        self._dtype = param_dtype
+
+    def __call__(self, name, shape, axes, *, scale=1.0, init="normal",
+                 dtype=None):
+        dtype = dtype or self._dtype
+        self._key, sub = jax.random.split(self._key)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        std = scale / math.sqrt(fan_in)
+        return (jax.random.normal(sub, shape, jnp.float32) * std).astype(dtype)
+
+
+class SpecBuilder(Builder):
+    def __init__(self, rules: ShardingRules):
+        self._rules = rules
+
+    def __call__(self, name, shape, axes, *, scale=1.0, init="normal",
+                 dtype=None):
+        return P(*[self._rules.resolve(a) for a in axes])
+
+
+class ShapeBuilder(Builder):
+    def __init__(self, param_dtype):
+        self._dtype = param_dtype
+
+    def __call__(self, name, shape, axes, *, scale=1.0, init="normal",
+                 dtype=None):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype or self._dtype)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x (..., S, H, hd) rotated by `positions` (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    ang = ang[..., None, :]                                    # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda v: jax.nn.gelu(v, approximate=True)}[name]
+
+
+def glu_mlp(x, w_gate, w_up, w_down, act_name: str, rules: ShardingRules):
+    """SwiGLU / GeGLU, TP column->row sharded."""
+    act = _act(act_name)
+    h = act(x @ w_gate) * (x @ w_up)
+    h = shard(h, rules, "batch", "seq", "d_ff")
+    out = h @ w_down
+    return shard(out, rules, "batch", "seq", "d_model")
+
+
+def plain_mlp(x, w_up, w_down, act_name: str, rules: ShardingRules):
+    """Classic 2-matrix MLP (starcoder2)."""
+    h = _act(act_name)(x @ w_up)
+    h = shard(h, rules, "batch", "seq", "d_ff")
+    out = h @ w_down
+    return shard(out, rules, "batch", "seq", "d_model")
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def embed_tokens(tokens, emb, rules: ShardingRules, scale: bool = False):
+    x = jnp.take(emb, tokens, axis=0)
+    if scale:
+        x = x * math.sqrt(emb.shape[1])
+    return shard(x.astype(jnp.bfloat16), rules, "batch", "seq", "d_model")
+
+
+def lm_head(x, emb_or_head, cfg: ModelConfig, rules: ShardingRules):
+    logits = x @ emb_or_head            # (..., vocab), vocab-sharded
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return shard(logits, rules, "batch", "seq", "vocab")
+
+
+import contextvars
+
+_CURRENT_MESH: "contextvars.ContextVar" = contextvars.ContextVar(
+    "repro_current_mesh", default=None)
+
+
+def set_current_mesh(mesh):
+    """Launcher hook: lets layers (MoE) use explicit shard_map dispatch when
+    a mesh is active.  None => pure-GSPMD single-device path (tests)."""
+    _CURRENT_MESH.set(mesh)
+
+
+def current_mesh():
+    return _CURRENT_MESH.get()
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(cfg))

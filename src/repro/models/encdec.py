@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/text modality frontend is a STUB per the assignment: the encoder
+consumes precomputed frame embeddings (B, T, D) from ``input_specs``; the
+decoder is a standard causal stack with cross-attention into the encoder
+output.  Serving: ``prefill`` encodes + caches decoder self-attn and the
+cross-attention K/V (computed once); ``decode_step`` extends only the
+decoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import (Builder, ModelConfig, ShardingRules, embed_tokens,
+                     glu_mlp, lm_head, maybe_remat, rms_norm, shard)
+
+
+class EncDecCache(NamedTuple):
+    self_kv: attn.KVCache      # (L_dec, B, C, KV, hd)
+    cross_k: jnp.ndarray       # (L_dec, B, T_enc, KV, hd)
+    cross_v: jnp.ndarray
+    enc_pos: jnp.ndarray       # (T_enc,) positions (static arange, kept for mask)
+    pos: jnp.ndarray
+
+
+def _enc_layer_params(b: Builder, name: str, n: int, cfg: ModelConfig):
+    D, H, KV, hd, F = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    return {
+        "ln1": b(f"{name}.ln1", (n, D), (None, None), init="zeros"),
+        "wq": b(f"{name}.wq", (n, D, H, hd), (None, "fsdp", "heads", "head_dim")),
+        "wk": b(f"{name}.wk", (n, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "wv": b(f"{name}.wv", (n, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "wo": b(f"{name}.wo", (n, H, hd, D), (None, "heads", "head_dim", "fsdp")),
+        "ln2": b(f"{name}.ln2", (n, D), (None, None), init="zeros"),
+        "w_gate": b(f"{name}.w_gate", (n, D, F), (None, "fsdp", "d_ff")),
+        "w_up": b(f"{name}.w_up", (n, D, F), (None, "fsdp", "d_ff")),
+        "w_down": b(f"{name}.w_down", (n, F, D), (None, "d_ff", "fsdp")),
+    }
+
+
+def build_params(cfg: ModelConfig, b: Builder) -> Dict[str, Any]:
+    Le, Ld = cfg.num_layers, cfg.num_decoder_layers or cfg.num_layers
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dec = _enc_layer_params(b, "dec", Ld, cfg)
+    dec.update({
+        "lnx": b("dec.lnx", (Ld, D), (None, None), init="zeros"),
+        "xq": b("dec.xq", (Ld, D, H, hd), (None, "fsdp", "heads", "head_dim")),
+        "xk": b("dec.xk", (Ld, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "xv": b("dec.xv", (Ld, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "xo": b("dec.xo", (Ld, H, hd, D), (None, "heads", "head_dim", "fsdp")),
+    })
+    return {
+        "embed": b("embed", (cfg.vocab_size, D), ("vocab", "fsdp")),
+        "enc_norm": b("enc_norm", (D,), (None,), init="zeros"),
+        "final_norm": b("final_norm", (D,), (None,), init="zeros"),
+        "encoder": _enc_layer_params(b, "enc", Le, cfg),
+        "decoder": dec,
+    }
+
+
+def encode(params, cfg: ModelConfig, rules: ShardingRules, frames):
+    """frames (B, T, D) precomputed frontend embeddings -> (B, T, D)."""
+    x = shard(frames.astype(cfg.dtype), rules, "batch", "seq", "d_model")
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = attn.qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, rules,
+                                   positions)
+        ctx = attn.attend(q, k, v, positions, positions, cfg, rules,
+                          is_causal=False)
+        x = x + attn.out_project(ctx, lp["wo"], rules)
+        h2 = rms_norm(x, lp["ln2"])
+        x = x + glu_mlp(h2, lp["w_gate"], lp["w_up"], lp["w_down"],
+                        cfg.mlp_act, rules)
+        return x, None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["encoder"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _decode_stack(params, cfg, rules, x, positions, enc_out=None,
+                  cache: Optional[EncDecCache] = None):
+    """Decoder over x (B,S,D).  Either enc_out (train/prefill: cross K/V
+    computed here) or cache with precomputed cross K/V."""
+    use_cache = cache is not None
+    T_enc = (enc_out.shape[1] if enc_out is not None
+             else cache.cross_k.shape[2])
+    enc_pos = jnp.arange(T_enc, dtype=jnp.int32)
+
+    xs = {"lp": params["decoder"]}
+    if use_cache:
+        xs["sk"], xs["sv"], xs["sp"] = (cache.self_kv.k, cache.self_kv.v,
+                                        cache.self_kv.slot_pos)
+        xs["xk"], xs["xv"] = cache.cross_k, cache.cross_v
+
+    def body(x, row):
+        lp = row["lp"]
+        ys = {}
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = attn.qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, rules,
+                                   positions)
+        if use_cache:
+            ck, cv, cpos = attn.cache_write(row["sk"], row["sv"], row["sp"],
+                                            k, v, positions, 0)
+            ctx = attn.attend(q, ck, cv, positions, cpos, cfg, rules)
+            ys.update(sk=ck, sv=cv, sp=cpos)
+        else:
+            ctx = attn.attend(q, k, v, positions, positions, cfg, rules)
+        x = x + attn.out_project(ctx, lp["wo"], rules)
+
+        hx = rms_norm(x, lp["lnx"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xq"])
+        if use_cache:
+            xk, xv = row["xk"], row["xv"]
+            ys.update(xk=xk, xv=xv)
+        else:
+            xk = jnp.einsum("btd,dhk->bthk", enc_out, lp["xk"])
+            xv = jnp.einsum("btd,dhk->bthk", enc_out, lp["xv"])
+        ctxx = attn.attend(qx, xk, xv, positions, enc_pos, cfg, rules,
+                           is_causal=False)
+        x = x + attn.out_project(ctxx, lp["xo"], rules)
+
+        h2 = rms_norm(x, lp["ln2"])
+        x = x + glu_mlp(h2, lp["w_gate"], lp["w_up"], lp["w_down"],
+                        cfg.mlp_act, rules)
+        return x, (ys or None)
+
+    x, ys = jax.lax.scan(maybe_remat(body, cfg), x, xs)
+    new_cache = None
+    if use_cache:
+        new_cache = EncDecCache(
+            self_kv=attn.KVCache(k=ys["sk"], v=ys["sv"], slot_pos=ys["sp"]),
+            cross_k=ys["xk"], cross_v=ys["xv"], enc_pos=cache.enc_pos,
+            pos=cache.pos + x.shape[1])
+    return x, new_cache
+
+
+def forward_train(params, cfg: ModelConfig, rules: ShardingRules, frames,
+                  dec_tokens):
+    """Training: encode frames, teacher-forced decode, return logits."""
+    enc_out = encode(params, cfg, rules, frames)
+    S = dec_tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(dec_tokens, params["embed"], rules, scale=cfg.embed_scale)
+    x, _ = _decode_stack(params, cfg, rules, x, positions, enc_out=enc_out)
+    x = rms_norm(x, params["final_norm"])
+    return lm_head(x, params["embed"].T, cfg, rules), None
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, frames,
+            dec_tokens, cache: EncDecCache):
+    """Encode + build cross K/V + run decoder prefill through the cache."""
+    enc_out = encode(params, cfg, rules, frames)
+
+    def cross_kv(lp):
+        xk = jnp.einsum("btd,dhk->bthk", enc_out, lp["xk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_out, lp["xv"])
+        return xk, xv
+
+    xks, xvs = jax.vmap(cross_kv)(
+        {"xk": params["decoder"]["xk"], "xv": params["decoder"]["xv"]})
+    cache = cache._replace(cross_k=xks.astype(cache.cross_k.dtype),
+                           cross_v=xvs.astype(cache.cross_v.dtype))
+    S = dec_tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(dec_tokens, params["embed"], rules, scale=cfg.embed_scale)
+    x, new_cache = _decode_stack(params, cfg, rules, x, positions, cache=cache)
+    x = rms_norm(x, params["final_norm"])
+    return lm_head(x, params["embed"].T, cfg, rules), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, tokens, pos,
+                cache: EncDecCache):
+    positions = pos[None].astype(jnp.int32)
+    x = embed_tokens(tokens, params["embed"], rules, scale=cfg.embed_scale)
+    x, new_cache = _decode_stack(params, cfg, rules, x, positions, cache=cache)
+    x = rms_norm(x, params["final_norm"])
+    return lm_head(x, params["embed"].T, cfg, rules), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, t_enc: int,
+               dtype=jnp.bfloat16) -> EncDecCache:
+    Ld = cfg.num_decoder_layers or cfg.num_layers
+    kvshape = (Ld, batch, t_enc, cfg.num_kv_heads, cfg.head_dim)
+    return EncDecCache(
+        self_kv=attn.init_kv_cache(Ld, batch, capacity, cfg, dtype),
+        cross_k=jnp.zeros(kvshape, dtype), cross_v=jnp.zeros(kvshape, dtype),
+        enc_pos=jnp.arange(t_enc, dtype=jnp.int32),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int, t_enc: int,
+                 dtype=jnp.bfloat16) -> EncDecCache:
+    Ld = cfg.num_decoder_layers or cfg.num_layers
+    kvshape = (Ld, batch, t_enc, cfg.num_kv_heads, cfg.head_dim)
+    return EncDecCache(
+        self_kv=attn.cache_shapes(Ld, batch, capacity, cfg, dtype),
+        cross_k=jax.ShapeDtypeStruct(kvshape, dtype),
+        cross_v=jax.ShapeDtypeStruct(kvshape, dtype),
+        enc_pos=jax.ShapeDtypeStruct((t_enc,), jnp.int32),
+        pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cache_specs(rules: ShardingRules) -> EncDecCache:
+    from jax.sharding import PartitionSpec as Pspec
+    bt = rules.resolve("batch")
+    kv = rules.kv_heads
+    return EncDecCache(
+        self_kv=attn.cache_specs(rules),
+        cross_k=Pspec(None, bt, rules.kv_seq, kv, None),
+        cross_v=Pspec(None, bt, rules.kv_seq, kv, None),
+        enc_pos=Pspec(None), pos=Pspec())

@@ -1,0 +1,282 @@
+"""RecurrentGemma / Griffin hybrid — RG-LRU recurrent blocks + local MQA
+attention in a (rec, rec, attn)-style 1:2 pattern (arXiv:2402.19427).
+
+Layer layout for 38 layers: 2 leading recurrent layers (explicit params) +
+12 scanned groups of (attn, rec, rec) — attention every third layer, 26
+recurrent / 12 attention total.
+
+The RG-LRU is a gated linear recurrence
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(-c · softplus(Λ) · σ(W_a x_t))
+computed with ``jax.lax.associative_scan`` for training (log₂ S depth) and a
+single-step recurrence for decode — bounded state is what qualifies this arch
+for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import (Builder, ModelConfig, ShardingRules, embed_tokens,
+                     glu_mlp, lm_head, maybe_remat, rms_norm, shard)
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+class HybridCache(NamedTuple):
+    kv: attn.KVCache          # attention layers only (n_attn, B, W, KV, hd)
+    state: jnp.ndarray        # (n_rec, B, rnn_width) RG-LRU states
+    conv: jnp.ndarray         # (n_rec, B, K-1, rnn_width)
+    pos: jnp.ndarray
+
+
+def _layout(cfg: ModelConfig):
+    """-> (n_lead_rec, n_groups); group = (attn, rec, rec)."""
+    period = cfg.rnn_block_period or 3
+    lead = cfg.num_layers % period
+    return lead, cfg.num_layers // period
+
+
+def _rec_param_group(b: Builder, name: str, n: int, cfg: ModelConfig):
+    D, R = cfg.d_model, cfg.rnn_width or cfg.d_model
+    K = 4
+    return {
+        "ln": b(f"{name}.ln", (n, D), (None, None), init="zeros"),
+        "w_y": b(f"{name}.w_y", (n, D, R), (None, "fsdp", "d_ff")),
+        "w_x": b(f"{name}.w_x", (n, D, R), (None, "fsdp", "d_ff")),
+        "conv_w": b(f"{name}.conv_w", (n, K, R), (None, None, "d_ff")),
+        "conv_b": b(f"{name}.conv_b", (n, R), (None, "d_ff"), init="zeros"),
+        "w_a": b(f"{name}.w_a", (n, R, R), (None, "d_ff", None)),
+        "w_i": b(f"{name}.w_i", (n, R, R), (None, "d_ff", None)),
+        "lam": b(f"{name}.lam", (n, R), (None, "d_ff"), init="ones"),
+        "w_out": b(f"{name}.w_out", (n, R, D), (None, "d_ff", "fsdp")),
+        "ln2": b(f"{name}.ln2", (n, D), (None, None), init="zeros"),
+        "m_gate": b(f"{name}.m_gate", (n, D, cfg.d_ff), (None, "fsdp", "d_ff")),
+        "m_up": b(f"{name}.m_up", (n, D, cfg.d_ff), (None, "fsdp", "d_ff")),
+        "m_down": b(f"{name}.m_down", (n, cfg.d_ff, D), (None, "d_ff", "fsdp")),
+    }
+
+
+def _attn_param_group(b: Builder, name: str, n: int, cfg: ModelConfig):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "ln": b(f"{name}.ln", (n, D), (None, None), init="zeros"),
+        "wq": b(f"{name}.wq", (n, D, H, hd), (None, "fsdp", "heads", "head_dim")),
+        "wk": b(f"{name}.wk", (n, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "wv": b(f"{name}.wv", (n, D, KV, hd), (None, "fsdp", "kv_heads", "head_dim")),
+        "wo": b(f"{name}.wo", (n, H, hd, D), (None, "heads", "head_dim", "fsdp")),
+        "ln2": b(f"{name}.ln2", (n, D), (None, None), init="zeros"),
+        "m_gate": b(f"{name}.m_gate", (n, D, cfg.d_ff), (None, "fsdp", "d_ff")),
+        "m_up": b(f"{name}.m_up", (n, D, cfg.d_ff), (None, "fsdp", "d_ff")),
+        "m_down": b(f"{name}.m_down", (n, cfg.d_ff, D), (None, "d_ff", "fsdp")),
+    }
+
+
+def build_params(cfg: ModelConfig, b: Builder) -> Dict[str, Any]:
+    lead, G = _layout(cfg)
+    params = {
+        "embed": b("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "fsdp")),
+        "final_norm": b("final_norm", (cfg.d_model,), (None,), init="zeros"),
+        "groups": {
+            "attn": _attn_param_group(b, "g.attn", G, cfg),
+            "rec_a": _rec_param_group(b, "g.rec_a", G, cfg),
+            "rec_b": _rec_param_group(b, "g.rec_b", G, cfg),
+        },
+    }
+    if lead:
+        params["lead"] = _rec_param_group(b, "lead", lead, cfg)
+    return params
+
+
+def _rg_lru(x, gates_a, gates_i, lam, h0=None):
+    """x (B,S,R); returns (y (B,S,R), h_last (B,R)).  fp32 internals."""
+    a_log = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(gates_a.astype(jnp.float32))               # (B,S,R) log a_t
+    a = jnp.exp(a_log)
+    gated_x = x.astype(jnp.float32) * jax.nn.sigmoid(gates_i.astype(jnp.float32))
+    # eps floor: d/da sqrt(1-a²) = -a/sqrt(1-a²) blows up as a -> 1 (strongly
+    # negative recurrence gates); Griffin clips the same way
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * gated_x
+    if h0 is not None:
+        b_t = b_t.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b_t), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rec_sublayer(x, lp, cfg: ModelConfig, rules: ShardingRules, cache_row=None):
+    B, S, D = x.shape
+    h = rms_norm(x, lp["ln"])
+    y_branch = jax.nn.gelu(h @ lp["w_y"], approximate=True)
+    xb = h @ lp["w_x"]
+    xb = shard(xb, rules, "batch", "seq", "d_ff")
+    # depthwise causal conv (k=4)
+    K = lp["conv_w"].shape[0]
+    prev = None if cache_row is None else cache_row["conv"]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, xb.shape[-1]), xb.dtype)
+    full = jnp.concatenate([prev, xb], axis=1)
+    xb = sum(full[:, i:i + S] * lp["conv_w"][i][None, None, :] for i in range(K))
+    xb = xb + lp["conv_b"][None, None, :]
+    new_conv = full[:, -(K - 1):]
+
+    gates_a = xb @ lp["w_a"]
+    gates_i = xb @ lp["w_i"]
+    h0 = None if cache_row is None else cache_row["state"]
+    y, h_last = _rg_lru(xb, gates_a, gates_i, lp["lam"], h0)
+    out = (y * y_branch) @ lp["w_out"]
+    x = x + shard(out, rules, "batch", "seq", "d_model")
+    # MLP block
+    h2 = rms_norm(x, lp["ln2"])
+    x = x + glu_mlp(h2, lp["m_gate"], lp["m_up"], lp["m_down"], "gelu", rules)
+    new_row = None
+    if cache_row is not None:
+        new_row = {"state": h_last.astype(cache_row["state"].dtype),
+                   "conv": new_conv}
+    return x, new_row
+
+
+def _attn_sublayer(x, lp, cfg: ModelConfig, rules: ShardingRules, positions,
+                   cache_row=None):
+    h = rms_norm(x, lp["ln"])
+    q, k, v = attn.qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, rules,
+                               positions)
+    if cache_row is None:
+        ctx = attn.attend(q, k, v, positions, positions, cfg, rules,
+                          window=cfg.window)
+        new_row = None
+    else:
+        ck, cv, cpos = attn.cache_write(cache_row["k"], cache_row["v"],
+                                        cache_row["slot_pos"], k, v, positions,
+                                        cfg.window)
+        if positions.shape[0] > 1:
+            # prefill-from-scratch: the rolling buffer only retains the last
+            # W entries, but early queries need their own in-window keys —
+            # attend over the fresh K/V (window mask handles locality) and
+            # use the cache only for subsequent decode steps
+            ctx = attn.attend(q, k, v, positions, positions, cfg, rules,
+                              window=cfg.window)
+        else:
+            ctx = attn.attend(q, ck, cv, positions, cpos, cfg, rules,
+                              window=cfg.window)
+        new_row = {"k": ck, "v": cv, "slot_pos": cpos}
+    x = x + attn.out_project(ctx, lp["wo"], rules)
+    h2 = rms_norm(x, lp["ln2"])
+    x = x + glu_mlp(h2, lp["m_gate"], lp["m_up"], lp["m_down"], "gelu", rules)
+    return x, new_row
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens, positions,
+            cache: Optional[HybridCache] = None, inputs_embeds=None):
+    lead, G = _layout(cfg)
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(cfg.dtype)
+    else:
+        x = embed_tokens(tokens, params["embed"], rules, scale=cfg.embed_scale)
+    use_cache = cache is not None
+
+    lead_rows = []
+    if lead:
+        for i in range(lead):
+            lp = jax.tree.map(lambda a: a[i], params["lead"])
+            cr = None
+            if use_cache:
+                cr = {"state": cache.state[i], "conv": cache.conv[i]}
+            x, nr = _rec_sublayer(x, lp, cfg, rules, cr)
+            lead_rows.append(nr)
+
+    xs = {"lp": params["groups"]}
+    if use_cache:
+        xs["kv_k"] = cache.kv.k
+        xs["kv_v"] = cache.kv.v
+        xs["kv_pos"] = cache.kv.slot_pos
+        xs["st"] = cache.state[lead:].reshape(G, 2, *cache.state.shape[1:])
+        xs["cv"] = cache.conv[lead:].reshape(G, 2, *cache.conv.shape[1:])
+
+    def group_body(x, row):
+        glp = row["lp"]
+        ys = {}
+        cr = None
+        if use_cache:
+            cr = {"k": row["kv_k"], "v": row["kv_v"], "slot_pos": row["kv_pos"]}
+        x, nr = _attn_sublayer(x, glp["attn"], cfg, rules, positions, cr)
+        if use_cache:
+            ys.update(kv_k=nr["k"], kv_v=nr["v"], kv_pos=nr["slot_pos"])
+        sts, cvs = [], []
+        for j, name in enumerate(("rec_a", "rec_b")):
+            cr = None
+            if use_cache:
+                cr = {"state": row["st"][j], "conv": row["cv"][j]}
+            x, nr = _rec_sublayer(x, glp[name], cfg, rules, cr)
+            if use_cache:
+                sts.append(nr["state"])
+                cvs.append(nr["conv"])
+        if use_cache:
+            ys["st"] = jnp.stack(sts)
+            ys["cv"] = jnp.stack(cvs)
+        return x, (ys or None)
+
+    x, ys = jax.lax.scan(maybe_remat(group_body, cfg), x, xs)
+    x = rms_norm(x, params["final_norm"])
+    logits = lm_head(x, params["embed"].T, cfg, rules)
+
+    new_cache = None
+    if use_cache:
+        states = [r["state"] for r in lead_rows] if lead else []
+        convs = [r["conv"] for r in lead_rows] if lead else []
+        state = jnp.concatenate(
+            [jnp.stack(states)] * bool(lead) +
+            [ys["st"].reshape(G * 2, *ys["st"].shape[2:])], axis=0) \
+            if lead else ys["st"].reshape(G * 2, *ys["st"].shape[2:])
+        conv = jnp.concatenate(
+            [jnp.stack(convs)] * bool(lead) +
+            [ys["cv"].reshape(G * 2, *ys["cv"].shape[2:])], axis=0) \
+            if lead else ys["cv"].reshape(G * 2, *ys["cv"].shape[2:])
+        new_cache = HybridCache(
+            kv=attn.KVCache(k=ys["kv_k"], v=ys["kv_v"], slot_pos=ys["kv_pos"]),
+            state=state, conv=conv, pos=cache.pos + tokens.shape[1])
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=jnp.bfloat16) -> HybridCache:
+    lead, G = _layout(cfg)
+    n_rec, n_attn = lead + 2 * G, G
+    R = cfg.rnn_width or cfg.d_model
+    cap = min(capacity, cfg.window) if cfg.window else capacity
+    return HybridCache(
+        kv=attn.init_kv_cache(n_attn, batch, cap, cfg, dtype),
+        state=jnp.zeros((n_rec, batch, R), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, 3, R), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int,
+                 dtype=jnp.bfloat16) -> HybridCache:
+    lead, G = _layout(cfg)
+    n_rec, n_attn = lead + 2 * G, G
+    R = cfg.rnn_width or cfg.d_model
+    cap = min(capacity, cfg.window) if cfg.window else capacity
+    return HybridCache(
+        kv=attn.cache_shapes(n_attn, batch, cap, cfg, dtype),
+        state=jax.ShapeDtypeStruct((n_rec, batch, R), jnp.float32),
+        conv=jax.ShapeDtypeStruct((n_rec, batch, 3, R), dtype),
+        pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules) -> HybridCache:
+    from jax.sharding import PartitionSpec as Pspec
+    bt = rules.resolve("batch")
+    return HybridCache(
+        kv=attn.cache_specs(rules),
+        state=Pspec(None, bt, rules.resolve("d_ff")),
+        conv=Pspec(None, bt, None, rules.resolve("d_ff")),
+        pos=Pspec())

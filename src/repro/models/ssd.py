@@ -1,0 +1,236 @@
+"""Mamba-2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training path uses the chunked SSD algorithm (the paper's Listing 1, in jnp):
+intra-chunk quadratic term + inter-chunk state recurrence via lax.scan over
+chunk states — O(S·l) work with chunk l, never materializing an (S, S)
+matrix.  Decode path is the O(1)-state recurrence, which is what makes
+mamba2 eligible for the long_500k cell.
+
+Sharding: the SSM state dimension N (=128) shards over 'model'; projections
+are FSDP-sharded over 'data'.  (mamba2-130m has 24 heads — not divisible by a
+16-way TP axis — so heads stay local; DESIGN.md §Arch-applicability.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Builder, ModelConfig, ShardingRules, embed_tokens,
+                     lm_head, maybe_remat, rms_norm, shard)
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray   # (L, B, H, P, N) recurrent state
+    conv: jnp.ndarray    # (L, B, K-1, conv_dim) rolling conv input
+    pos: jnp.ndarray     # () int32
+
+
+def _segsum(x):
+    """x (..., l) -> (..., l, l) lower-triangular segment sums."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B_, C_, chunk: int):
+    """x (b,s,h,p); dtA (b,s,h); B_,C_ (b,s,n) [n_groups=1].
+    Returns y (b,s,h,p), final_state (b,h,p,n)."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    l = min(chunk, s)
+    while s % l:
+        l -= 1
+    nc = s // l
+    xr = x.reshape(b, nc, l, h, p)
+    Ar = dtA.reshape(b, nc, l, h)
+    Br = B_.reshape(b, nc, l, n)
+    Cr = C_.reshape(b, nc, l, n)
+
+    Acs = jnp.cumsum(Ar, axis=2)                                   # (b,nc,l,h)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(Ar, 3, 2)))                   # (b,nc,h,l,l)
+    Ydiag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", Cr, Br, L, xr)
+    # 2. per-chunk output states
+    decay = jnp.exp(Acs[:, :, -1:, :] - Acs)                       # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Br, decay, xr)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(Acs[:, :, -1, :])                        # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                              # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay.astype(jnp.float32), 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                  # (b,nc,h,p,n)
+    # 4. state -> output contribution
+    state_decay = jnp.exp(Acs)                                     # (b,nc,l,h)
+    Yoff = jnp.einsum("bcln,bchpn,bclh->bclhp", Cr,
+                      prev_states.astype(x.dtype), state_decay)
+    y = (Ydiag + Yoff).reshape(b, s, h, p)
+    return y, final
+
+
+def _conv_dim(cfg: ModelConfig):
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def build_params(cfg: ModelConfig, b: Builder) -> Dict[str, Any]:
+    L = cfg.num_layers
+    D, DI, N, H, P = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim)
+    proj = 2 * DI + 2 * N + H          # z, x, B, C, dt
+    cdim = _conv_dim(cfg)
+    lp = {
+        "ln": b("ln", (L, D), (None, None), init="zeros"),
+        "in_proj": b("in_proj", (L, D, proj), (None, "fsdp", None)),
+        "conv_w": b("conv_w", (L, cfg.ssm_conv, cdim), (None, None, None)),
+        "conv_b": b("conv_b", (L, cdim), (None, None), init="zeros"),
+        "dt_bias": b("dt_bias", (L, H), (None, None), init="zeros"),
+        "A_log": b("A_log", (L, H), (None, None), init="zeros"),
+        "Dskip": b("Dskip", (L, H), (None, None), init="ones"),
+        "gate_ln": b("gate_ln", (L, DI), (None, None), init="zeros"),
+        "out_proj": b("out_proj", (L, DI, D), (None, None, "fsdp")),
+    }
+    return {
+        "embed": b("embed", (cfg.vocab_size, D), ("vocab", "fsdp")),
+        "final_norm": b("final_norm", (D,), (None,), init="zeros"),
+        "layers": lp,
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :DI]
+    xBC = zxbcdt[..., DI:DI + DI + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, bias, prev: Optional[jnp.ndarray]):
+    """Depthwise causal conv along seq.  xBC (B,S,Cd); w (K,Cd).
+    prev: (B,K-1,Cd) left context (decode) or None (train: zero pad)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    full = jnp.concatenate([prev, xBC], axis=1)                    # (B,S+K-1,Cd)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    new_prev = full[:, -(K - 1):]
+    return jax.nn.silu(out + bias[None, None, :]), new_prev
+
+
+def _ssm_sublayer(x, lp, cfg: ModelConfig, rules: ShardingRules,
+                  cache_row=None):
+    """One mamba2 block.  cache_row: None (train) or dict(state, conv)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, lp["ln"])
+    zxbcdt = h @ lp["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC, new_conv = _causal_conv(xBC, lp["conv_w"], lp["conv_b"],
+                                 None if cache_row is None else cache_row["conv"])
+    xs = xBC[..., :cfg.d_inner].reshape(B, S, H, P)
+    B_ = shard(xBC[..., cfg.d_inner:cfg.d_inner + N], rules,
+               "batch", "seq", "state")
+    C_ = shard(xBC[..., cfg.d_inner + N:], rules, "batch", "seq", "state")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))                  # (H,)
+    dtA = dt * A[None, None, :]                                    # (B,S,H)
+    xdt = xs * dt.astype(xs.dtype)[..., None]
+
+    if cache_row is None:
+        y, final_state = ssd_chunked(xdt, dtA, B_, C_, cfg.ssm_chunk)
+        new_state = final_state
+    else:
+        # decode: S small; step the recurrence
+        st = cache_row["state"].astype(jnp.float32)                # (B,H,P,N)
+
+        def step(st, inp):
+            xt, dtAt, Bt, Ct = inp
+            st = st * jnp.exp(dtAt)[:, :, None, None] + jnp.einsum(
+                "bhp,bn->bhpn", xt.astype(jnp.float32), Bt.astype(jnp.float32))
+            yt = jnp.einsum("bhpn,bn->bhp", st, Ct.astype(jnp.float32))
+            return st, yt
+
+        st, ys = jax.lax.scan(step, st,
+                              (jnp.moveaxis(xdt, 1, 0), jnp.moveaxis(dtA, 1, 0),
+                               jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                 # (B,S,H,P)
+        new_state = st
+
+    y = y.astype(x.dtype) + xs * lp["Dskip"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), lp["gate_ln"])
+    out = (y @ lp["out_proj"]).astype(x.dtype)
+    out = shard(out, rules, "batch", "seq", "d_model")
+    new_row = None
+    if cache_row is not None:
+        new_row = {"state": new_state.astype(cache_row["state"].dtype),
+                   "conv": new_conv}
+    return x + out, new_row
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+            positions, cache: Optional[SSMCache] = None, inputs_embeds=None):
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(cfg.dtype)
+    else:
+        x = embed_tokens(tokens, params["embed"], rules, scale=cfg.embed_scale)
+    use_cache = cache is not None
+    xs = {"lp": params["layers"]}
+    if use_cache:
+        xs["state"] = cache.state
+        xs["conv"] = cache.conv
+
+    def body(x, row):
+        cache_row = None
+        if use_cache:
+            cache_row = {"state": row["state"], "conv": row["conv"]}
+        x, new_row = _ssm_sublayer(x, row["lp"], cfg, rules, cache_row)
+        ys = None
+        if use_cache:
+            ys = {"state": new_row["state"], "conv": new_row["conv"]}
+        return x, ys
+
+    x, ys = jax.lax.scan(maybe_remat(body, cfg), x, xs)
+    x = rms_norm(x, params["final_norm"])
+    logits = lm_head(x, params["embed"].T, cfg, rules)
+    new_cache = None
+    if use_cache:
+        new_cache = SSMCache(state=ys["state"], conv=ys["conv"],
+                             pos=cache.pos + tokens.shape[1])
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    L, H, P, N = cfg.num_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((L, batch, H, P, N), dtype),
+        conv=jnp.zeros((L, batch, cfg.ssm_conv - 1, _conv_dim(cfg)), jnp.bfloat16),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    L, H, P, N = cfg.num_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(
+        state=jax.ShapeDtypeStruct((L, batch, H, P, N), dtype),
+        conv=jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, _conv_dim(cfg)),
+                                  jnp.bfloat16),
+        pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cache_specs(rules: ShardingRules) -> SSMCache:
+    from jax.sharding import PartitionSpec as Pspec
+    return SSMCache(
+        state=Pspec(None, rules.resolve("batch"), None, None, rules.state),
+        conv=Pspec(None, rules.resolve("batch"), None, None),
+        pos=Pspec())

@@ -1,0 +1,239 @@
+"""Decoder-only transformer LM covering the dense + MoE + VLM-backbone archs.
+
+Layers are scanned in groups of ``P`` sublayers (P=1 uniform stacks; P=2 for
+gemma2's local/global alternation) so the HLO contains ONE group body
+regardless of depth — this is what keeps 46-layer × 512-device dry-run
+compiles tractable.  KV caches ride through the scan as per-group xs/ys rows
+(no dynamic indexing).
+
+Weight matrices carry an FSDP logical axis on their d_model dimension
+(rules.fsdp -> 'data') in addition to TP axes, so parameters and optimizer
+state shard over the full mesh (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .common import (Builder, ModelConfig, ShardingRules, embed_tokens,
+                     glu_mlp, lm_head, maybe_remat, plain_mlp, rms_norm,
+                     shard)
+from .moe import moe_mlp
+
+
+def _group_shape(cfg: ModelConfig):
+    P = max(cfg.local_global_period, 1)
+    assert cfg.num_layers % P == 0, (cfg.num_layers, P)
+    return cfg.num_layers // P, P
+
+
+def build_params(cfg: ModelConfig, b: Builder) -> Dict[str, Any]:
+    G, P = _group_shape(cfg)
+    D, H, KV, hd, F, V = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.head_dim, cfg.d_ff, cfg.vocab_size)
+    E = cfg.num_experts
+    lp: Dict[str, Any] = {
+        "ln1": b("ln1", (G, P, D), (None, None, None), init="zeros"),
+        "wq": b("wq", (G, P, D, H, hd), (None, None, "fsdp", "heads", "head_dim")),
+        "wk": b("wk", (G, P, D, KV, hd), (None, None, "fsdp", "kv_heads", "head_dim")),
+        "wv": b("wv", (G, P, D, KV, hd), (None, None, "fsdp", "kv_heads", "head_dim")),
+        "wo": b("wo", (G, P, H, hd, D), (None, None, "heads", "head_dim", "fsdp")),
+        "ln2": b("ln2", (G, P, D), (None, None, None), init="zeros"),
+    }
+    if E > 0:
+        lp.update({
+            "router": b("router", (G, P, D, E), (None, None, "fsdp", None),
+                        dtype=jnp.float32),
+            "e_gate": b("e_gate", (G, P, E, D, F), (None, None, "experts", "fsdp", None)),
+            "e_up": b("e_up", (G, P, E, D, F), (None, None, "experts", "fsdp", None)),
+            "e_down": b("e_down", (G, P, E, F, D), (None, None, "experts", None, "fsdp")),
+        })
+        if cfg.moe_dense_residual:
+            Fd = cfg.moe_dense_ff or F
+            lp.update({
+                "r_gate": b("r_gate", (G, P, D, Fd), (None, None, "fsdp", "d_ff")),
+                "r_up": b("r_up", (G, P, D, Fd), (None, None, "fsdp", "d_ff")),
+                "r_down": b("r_down", (G, P, Fd, D), (None, None, "d_ff", "fsdp")),
+            })
+    elif cfg.mlp_type == "plain":
+        lp.update({
+            "w_up": b("w_up", (G, P, D, F), (None, None, "fsdp", "d_ff")),
+            "w_down": b("w_down", (G, P, F, D), (None, None, "d_ff", "fsdp")),
+        })
+    else:
+        lp.update({
+            "w_gate": b("w_gate", (G, P, D, F), (None, None, "fsdp", "d_ff")),
+            "w_up": b("w_up", (G, P, D, F), (None, None, "fsdp", "d_ff")),
+            "w_down": b("w_down", (G, P, F, D), (None, None, "d_ff", "fsdp")),
+        })
+    params = {
+        "embed": b("embed", (V, D), ("vocab", "fsdp")),
+        "final_norm": b("final_norm", (D,), (None,), init="zeros"),
+        "layers": lp,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = b("head", (D, V), ("fsdp", "vocab"))
+    return params
+
+
+def _sublayer(x, lp, p: int, cfg: ModelConfig, rules: ShardingRules,
+              q_pos, cache_row, layer_window: int):
+    """One transformer sublayer.  cache_row: None (train) or a dict with
+    k/v (B, C, KV, hd) + slot_pos (C,) for this physical layer."""
+    take = lambda a: a[p]
+    h = rms_norm(x, take(lp["ln1"]))
+    q, k, v = attn.qkv_project(h, take(lp["wq"]), take(lp["wk"]),
+                               take(lp["wv"]), cfg, rules, q_pos)
+    if cache_row is None:
+        ctx = attn.attend(q, k, v, q_pos, q_pos, cfg, rules,
+                          window=layer_window)
+        new_row = None
+    else:
+        ck, cv, cpos = attn.cache_write(cache_row["k"], cache_row["v"],
+                                        cache_row["slot_pos"], k, v, q_pos,
+                                        layer_window)
+        if q_pos.shape[0] > 1:
+            # prefill-from-scratch: attend over the fresh K/V (exact even
+            # when a rolling window buffer retains fewer than S entries)
+            ctx = attn.attend(q, k, v, q_pos, q_pos, cfg, rules,
+                              window=layer_window)
+        else:
+            ctx = attn.attend(q, ck, cv, q_pos, cpos, cfg, rules,
+                              window=layer_window)
+        new_row = {"k": ck, "v": cv, "slot_pos": cpos}
+    x = x + attn.out_project(ctx, take(lp["wo"]), rules)
+    h2 = rms_norm(x, take(lp["ln2"]))
+    if cfg.num_experts > 0:
+        y = moe_mlp(h2, take(lp["router"]), take(lp["e_gate"]),
+                    take(lp["e_up"]), take(lp["e_down"]), cfg, rules)
+        if cfg.moe_dense_residual:
+            y = y + glu_mlp(h2, take(lp["r_gate"]), take(lp["r_up"]),
+                            take(lp["r_down"]), cfg.mlp_act, rules)
+    elif cfg.mlp_type == "plain":
+        y = plain_mlp(h2, take(lp["w_up"]), take(lp["w_down"]), cfg.mlp_act,
+                      rules)
+    else:
+        y = glu_mlp(h2, take(lp["w_gate"]), take(lp["w_up"]),
+                    take(lp["w_down"]), cfg.mlp_act, rules)
+    return x + y, new_row
+
+
+def _layer_window(cfg: ModelConfig, p: int) -> int:
+    if cfg.local_global_period > 1:
+        # gemma2 convention: sublayer 0 local (windowed), sublayer 1 global
+        return cfg.window if p == 0 else 0
+    return cfg.window
+
+
+def forward(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+            positions, cache: Optional[attn.KVCache] = None,
+            inputs_embeds=None):
+    """tokens (B, S) int32 (ignored where inputs_embeds given);
+    positions (S,) absolute.  Returns (logits (B,S,V), new_cache|None)."""
+    G, P = _group_shape(cfg)
+    if inputs_embeds is not None:
+        x = shard(inputs_embeds.astype(cfg.dtype), rules,
+                  "batch", "seq", "d_model")
+    else:
+        x = embed_tokens(tokens, params["embed"], rules,
+                         scale=cfg.embed_scale)
+
+    lp = params["layers"]
+    use_cache = cache is not None
+    split = isinstance(cache, dict)       # split local/global stacks (§Perf)
+    if use_cache and split:
+        xs = {"lp": lp}
+        for name, c in cache.items():     # {"local": KVCache, "global": ...}
+            B, C = c.k.shape[1], c.k.shape[2]
+            xs[f"{name}_k"] = c.k.reshape(G, -1, B, C, *c.k.shape[3:])
+            xs[f"{name}_v"] = c.v.reshape(G, -1, B, C, *c.v.shape[3:])
+            xs[f"{name}_p"] = c.slot_pos.reshape(G, -1, C)
+    elif use_cache:
+        L, B, C = cache.k.shape[0], cache.k.shape[1], cache.k.shape[2]
+        xs = {
+            "lp": lp,
+            "ck": cache.k.reshape(G, P, B, C, *cache.k.shape[3:]),
+            "cv": cache.v.reshape(G, P, B, C, *cache.v.shape[3:]),
+            "cpos": cache.slot_pos.reshape(G, P, C),
+        }
+    else:
+        xs = {"lp": lp}
+
+    def group_body(x, row):
+        glp = row["lp"]
+        new_rows = {}
+        for p in range(P):
+            cache_row = None
+            window = _layer_window(cfg, p)
+            if use_cache and split:
+                name = "local" if window > 0 else "global"
+                # sublayer index within its stack for this group: period-2
+                # alternation => one local + one global row per group
+                cache_row = {"k": row[f"{name}_k"][0],
+                             "v": row[f"{name}_v"][0],
+                             "slot_pos": row[f"{name}_p"][0]}
+            elif use_cache:
+                cache_row = {"k": row["ck"][p], "v": row["cv"][p],
+                             "slot_pos": row["cpos"][p]}
+            x, new_row = _sublayer(x, glp, p, cfg, rules, positions,
+                                   cache_row, window)
+            if use_cache and split:
+                name = "local" if window > 0 else "global"
+                new_rows[f"{name}_k"] = new_row["k"][None]
+                new_rows[f"{name}_v"] = new_row["v"][None]
+                new_rows[f"{name}_p"] = new_row["slot_pos"][None]
+            elif use_cache:
+                new_rows.setdefault("k", []).append(new_row["k"])
+                new_rows.setdefault("v", []).append(new_row["v"])
+                new_rows.setdefault("pos", []).append(new_row["slot_pos"])
+        if not use_cache:
+            return x, None
+        if split:
+            return x, new_rows
+        return x, {"ck": jnp.stack(new_rows["k"]),
+                   "cv": jnp.stack(new_rows["v"]),
+                   "cpos": jnp.stack(new_rows["pos"])}
+
+    body = maybe_remat(group_body, cfg)
+    x, ys = jax.lax.scan(body, x, xs)
+
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = lm_head(x, head, cfg, rules)
+
+    new_cache = None
+    if use_cache and split:
+        new_cache = {}
+        for name in cache:
+            new_cache[name] = attn.KVCache(
+                k=ys[f"{name}_k"].reshape(-1, *ys[f"{name}_k"].shape[2:]),
+                v=ys[f"{name}_v"].reshape(-1, *ys[f"{name}_v"].shape[2:]),
+                slot_pos=ys[f"{name}_p"].reshape(-1, ys[f"{name}_p"].shape[2]))
+    elif use_cache:
+        Lk = ys["ck"].reshape(G * P, *ys["ck"].shape[2:])
+        Lv = ys["cv"].reshape(G * P, *ys["cv"].shape[2:])
+        Lp = ys["cpos"].reshape(G * P, ys["cpos"].shape[2])
+        new_cache = attn.KVCache(k=Lk, v=Lv, slot_pos=Lp)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+            cache: attn.KVCache):
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return forward(params, cfg, rules, tokens, positions, cache=cache)
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+                pos: jnp.ndarray, cache: attn.KVCache):
+    """tokens (B, 1); pos () int32 — absolute position of the new token."""
+    positions = pos[None].astype(jnp.int32)
+    return forward(params, cfg, rules, tokens, positions, cache=cache)

@@ -1,0 +1,53 @@
+"""phi-3-vision wrapper: phi3-mini transformer backbone + stubbed CLIP
+frontend (the assignment: ``input_specs()`` provides precomputed patch
+embeddings; only the projection into the LM width is a real parameter)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .common import Builder, ModelConfig, ShardingRules, embed_tokens, shard
+
+D_VISION = 1024  # CLIP ViT-L/14 output width
+
+
+def build_params(cfg: ModelConfig, b: Builder) -> Dict[str, Any]:
+    params = transformer.build_params(cfg, b)
+    params["patch_proj"] = b("patch_proj", (D_VISION, cfg.d_model),
+                             (None, "fsdp"))
+    return params
+
+
+def _embed(params, cfg, rules, tokens, patch_embeds):
+    tok = embed_tokens(tokens, params["embed"], rules, scale=cfg.embed_scale)
+    if patch_embeds is None:
+        return tok
+    pe = (patch_embeds.astype(cfg.dtype) @ params["patch_proj"])
+    pe = shard(pe, rules, "batch", "seq", "d_model")
+    return jnp.concatenate([pe, tok], axis=1)
+
+
+def forward_train(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+                  patch_embeds):
+    x = _embed(params, cfg, rules, tokens, patch_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return transformer.forward(params, cfg, rules, tokens, positions,
+                               inputs_embeds=x)
+
+
+def prefill(params, cfg: ModelConfig, rules: ShardingRules, tokens,
+            patch_embeds, cache):
+    x = _embed(params, cfg, rules, tokens, patch_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return transformer.forward(params, cfg, rules, tokens, positions,
+                               cache=cache, inputs_embeds=x)
+
+
+def decode_step(params, cfg: ModelConfig, rules: ShardingRules, tokens, pos,
+                cache):
+    return transformer.decode_step(params, cfg, rules, tokens, pos, cache)

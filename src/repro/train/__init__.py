@@ -1,0 +1,7 @@
+from .optimizer import (AdamW, Adafactor, cosine_schedule, get_optimizer)
+from .step import (default_lr, default_optimizer, make_decode_step,
+                   make_loss, make_prefill_step, make_train_step)
+
+__all__ = ["AdamW", "Adafactor", "cosine_schedule", "get_optimizer",
+           "default_lr", "default_optimizer", "make_decode_step", "make_loss",
+           "make_prefill_step", "make_train_step"]

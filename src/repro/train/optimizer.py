@@ -1,0 +1,231 @@
+"""Optimizers with sharding-spec-aware state trees.
+
+* ``adamw``     — bf16 params + fp32 master/m/v (all sharded like the param).
+* ``adafactor`` — fp32 params + factored second moment (row/col), optional
+  first moment; the memory-viable choice for arctic-480b (DESIGN.md §4).
+
+Implemented as pure pytree transforms (no optax dependency in the container).
+Each optimizer exposes ``init(params)``, ``update(grads, state, params, lr)``
+and ``state_specs(param_specs)`` so the launcher can shard optimizer state
+without materializing it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# -- schedules ---------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+# -- AdamW -------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any   # fp32 copy of params
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        f32 = lambda p: p.astype(jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          master=jax.tree.map(f32, params),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def state_shapes(self, param_shapes):
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          master=jax.tree.map(f32, param_shapes),
+                          mu=jax.tree.map(f32, param_shapes),
+                          nu=jax.tree.map(f32, param_shapes))
+
+    def state_specs(self, param_specs):
+        return AdamWState(step=P(),
+                          master=param_specs, mu=param_specs, nu=param_specs)
+
+    def update(self, grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, w):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            w = w - lr * (upd + self.weight_decay * w)
+            return m, v, w
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+        mu = jax.tree.map(lambda t3: t3[0], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t3: t3[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda t3: t3[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, AdamWState(step=step, master=master, mu=mu, nu=nu)
+
+
+# -- Adafactor ---------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    v_row: Any
+    v_col: Any
+    v_full: Any   # for rank-<2 params
+    mu: Any       # None-like zeros when beta1 is None
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Shazeer & Stern 2018; factored for every rank>=2 param over its last
+    two dims.  ``beta1=None`` disables the first moment (the memory saver)."""
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    beta1: Optional[float] = None
+    weight_decay: float = 0.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if self._factored(p)
+                    else jnp.zeros((1,), jnp.float32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if self._factored(p) else jnp.zeros((1,), jnp.float32))
+
+        def vfull(p):
+            return (jnp.zeros((1,), jnp.float32) if self._factored(p)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        mu = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+              if self.beta1 is not None else
+              jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32), params))
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              v_row=jax.tree.map(vrow, params),
+                              v_col=jax.tree.map(vcol, params),
+                              v_full=jax.tree.map(vfull, params),
+                              mu=mu)
+
+    def state_shapes(self, param_shapes):
+        ex = self.init(jax.tree.map(
+            lambda s: jnp.zeros((1,) * len(s.shape), s.dtype), param_shapes))
+        # shapes must reflect the REAL param shapes, recompute directly:
+
+        def vrow(p):
+            return jax.ShapeDtypeStruct(p.shape[:-1] if len(p.shape) >= 2
+                                        else (1,), jnp.float32)
+
+        def vcol(p):
+            return jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:]
+                                        if len(p.shape) >= 2 else (1,),
+                                        jnp.float32)
+
+        def vfull(p):
+            return jax.ShapeDtypeStruct((1,) if len(p.shape) >= 2 else p.shape,
+                                        jnp.float32)
+
+        def mu(p):
+            return jax.ShapeDtypeStruct(p.shape if self.beta1 is not None
+                                        else (1,), jnp.float32)
+
+        return AdafactorState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                              v_row=jax.tree.map(vrow, param_shapes),
+                              v_col=jax.tree.map(vcol, param_shapes),
+                              v_full=jax.tree.map(vfull, param_shapes),
+                              mu=jax.tree.map(mu, param_shapes))
+
+    def state_specs(self, param_specs):
+        def vrow(s):
+            return P(*s[:-1]) if len(s) >= 2 else P(None)
+
+        def vcol(s):
+            return P(*(tuple(s[:-2]) + (s[-1],))) if len(s) >= 2 else P(None)
+
+        def vfull(s):
+            return P(None) if len(s) >= 2 else P(*s)
+
+        def mu(s):
+            return P(*s) if self.beta1 is not None else P(None)
+
+        is_spec = lambda x: isinstance(x, P)
+        return AdafactorState(
+            step=P(),
+            v_row=jax.tree.map(vrow, param_specs, is_leaf=is_spec),
+            v_col=jax.tree.map(vcol, param_specs, is_leaf=is_spec),
+            v_full=jax.tree.map(vfull, param_specs, is_leaf=is_spec),
+            mu=jax.tree.map(mu, param_specs, is_leaf=is_spec))
+
+    def update(self, grads, state: AdafactorState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        rho = 1.0 - t ** (-self.decay)
+
+        def upd(g, vr, vc, vf, m, w):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if g.ndim >= 2:
+                vr = rho * vr + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * vc + (1 - rho) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                     self.eps)
+                u = g / jnp.sqrt(r[..., :, None] * vc[..., None, :])
+                new_vf = vf
+            else:
+                new_vf = rho * vf + (1 - rho) * g2
+                u = g / jnp.sqrt(new_vf)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.beta1 is not None:
+                m = self.beta1 * m + (1 - self.beta1) * u
+                u = m
+            w32 = w.astype(jnp.float32)
+            w32 = w32 - lr * (u + self.weight_decay * w32)
+            return vr, vc, new_vf, m, w32.astype(w.dtype)
+
+        out = jax.tree.map(upd, grads, state.v_row, state.v_col, state.v_full,
+                           state.mu, params)
+        pick = lambda i: jax.tree.map(lambda tup: tup[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        new_params = pick(4)
+        return new_params, AdafactorState(step=step, v_row=pick(0),
+                                          v_col=pick(1), v_full=pick(2),
+                                          mu=pick(3))
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(name)

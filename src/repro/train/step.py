@@ -1,0 +1,94 @@
+"""train_step / serve_step factories — the functions the launcher jits.
+
+``make_train_step`` returns a pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics) function with optional microbatch gradient
+accumulation (lax.scan over accumulation slices, donated carries) and
+optional explicit bf16 gradient compression on the DP axes (used by the
+shard_map DP path; under pure GSPMD the reduce-scatter happens inside
+backward and is already bf16 when activations are).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.models as M
+from repro.models.common import ModelConfig, ShardingRules
+from .optimizer import AdamW, Adafactor, cosine_schedule, get_optimizer
+
+
+def make_loss(cfg: ModelConfig, rules: ShardingRules):
+    def loss(params, batch):
+        return M.loss_fn(params, cfg, rules, batch)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules, optimizer,
+                    lr_fn: Callable, accum_steps: int = 1,
+                    compress_grads: Optional[str] = None):
+    loss_fn = make_loss(cfg, rules)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        if compress_grads == "bf16":
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        lr = lr_fn(step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules):
+    def prefill_step(params, batch, cache):
+        logits, cache = M.prefill_fn(params, cfg, rules, batch, cache)
+        # next-token for the serving loop
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: ShardingRules):
+    def decode_step(params, tokens, pos, cache):
+        logits, cache = M.decode_fn(params, cfg, rules, tokens, pos, cache)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+    return decode_step
+
+
+def default_optimizer(cfg: ModelConfig):
+    """arctic-class models: adafactor (fp32 params, factored vs); else adamw."""
+    if M.count_params(cfg) > 100e9:
+        return get_optimizer("adafactor")
+    return get_optimizer("adamw")
+
+
+def default_lr(cfg: ModelConfig, total_steps: int = 10000):
+    return cosine_schedule(3e-4, warmup=min(500, total_steps // 10),
+                           total=total_steps)

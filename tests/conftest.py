@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests and
+# benches must see the real (single) device; only launch/dryrun.py and the
+# explicit subprocess tests fake 512/8 devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,137 @@
+"""GMM / GMM-EXT / GMM-GEN unit + property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core import gmm, gmm_ext, gmm_gen, brute_force_opt
+from repro.core.metrics import get_metric
+
+
+def naive_gmm(pts, k, start=0):
+    """Float64 reference; also reports the min top-2 argmax margin so the
+    caller can skip exact-index comparison on near-ties (fp-order noise)."""
+    pts = pts.astype(np.float64)
+    sel = [start]
+    d = np.linalg.norm(pts - pts[start], axis=1)
+    margin = np.inf
+    for _ in range(k - 1):
+        j = int(d.argmax())
+        top2 = np.partition(d, -2)[-2:]
+        margin = min(margin, float(top2[1] - top2[0]))
+        sel.append(j)
+        d = np.minimum(d, np.linalg.norm(pts - pts[j], axis=1))
+    return sel, d, margin
+
+
+points_strategy = st.integers(10, 60).flatmap(
+    lambda n: st.tuples(st.just(n), st.integers(1, 4), st.integers(0, 2 ** 31)))
+
+
+@given(points_strategy)
+@settings(max_examples=25, deadline=None)
+def test_gmm_matches_naive(args):
+    n, d, seed = args
+    pts = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    k = min(8, n)
+    res = gmm(pts, k)
+    sel, dist, margin = naive_gmm(pts, k)
+    if margin > 5e-3:   # unambiguous greedy path => exact index equality
+        assert list(np.asarray(res.idx)) == sel
+        # f32 factorized distances vs f64 direct: cancellation near 0 puts a
+        # ~1e-3 absolute floor on the comparison
+        np.testing.assert_allclose(np.asarray(res.min_dist), dist, rtol=1e-3,
+                                   atol=2e-3)
+    else:               # tie: both runs are valid; invariants still hold
+        assert len(set(np.asarray(res.idx).tolist())) == k
+
+
+@given(points_strategy)
+@settings(max_examples=25, deadline=None)
+def test_anticover_property(args):
+    """Fact 1 foundation: GMM's selection distances are non-increasing and
+    r_T <= last selection distance <= rho_T."""
+    n, d, seed = args
+    pts = np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+    k = min(8, n)
+    res = gmm(pts, k)
+    sd = np.asarray(res.sel_dist)[1:]          # sel_dist[0] = +inf sentinel
+    assert np.all(np.diff(sd) <= 1e-5)         # non-increasing
+    assert float(res.radius) <= sd[-1] + 1e-5  # r_T <= d_k
+    # rho_T (min pairwise among centers) >= d_k
+    centers = pts[np.asarray(res.idx)]
+    m = get_metric("euclidean")
+    dm = np.asarray(m.pairwise(jnp.asarray(centers),
+                               jnp.asarray(centers))).copy()
+    np.fill_diagonal(dm, np.inf)
+    assert dm.min() >= sd[-1] - 1e-4
+
+
+def test_gmm_2_approx_remote_edge(rng):
+    """Deterministic guarantee: div(GMM prefix of size k) >= opt/2."""
+    for seed in range(5):
+        pts = np.random.default_rng(seed).normal(size=(24, 2)) \
+            .astype(np.float32)
+        k = 4
+        res = gmm(pts, k)
+        centers = pts[np.asarray(res.idx)]
+        m = get_metric("euclidean")
+        dm = np.asarray(m.pairwise(jnp.asarray(centers),
+                                   jnp.asarray(centers))).copy()
+        np.fill_diagonal(dm, np.inf)
+        got = dm.min()
+        opt = brute_force_opt("remote-edge", pts, k, "euclidean")
+        assert got >= opt / 2 - 1e-5
+
+
+def test_gmm_mask(rng):
+    pts = rng.normal(size=(40, 3)).astype(np.float32)
+    mask = np.ones(40, bool)
+    mask[10:] = False
+    res = gmm(pts, 5, mask=jnp.asarray(mask))
+    assert all(i < 10 for i in np.asarray(res.idx))
+
+
+def test_gmm_ext_delegates(rng):
+    pts = rng.normal(size=(200, 3)).astype(np.float32)
+    k, kp = 5, 16
+    ext = gmm_ext(pts, k, kp)
+    didx = np.asarray(ext.delegate_idx)
+    dval = np.asarray(ext.delegate_valid)
+    assign = np.asarray(ext.assign)
+    mult = np.asarray(ext.multiplicity)
+    # row j: valid delegates belong to cluster j; center in slot 0
+    for j in range(kp):
+        assert didx[j, 0] == np.asarray(ext.kernel_idx)[j]
+        for t in range(k):
+            if dval[j, t]:
+                assert assign[didx[j, t]] == j
+        # no duplicate delegates within a row
+        row = didx[j][dval[j]]
+        assert len(set(row.tolist())) == len(row)
+    # multiplicity = min(|C_j|, k)
+    counts = np.bincount(assign, minlength=kp)[:kp]
+    np.testing.assert_array_equal(mult, np.minimum(counts, k))
+    assert mult.sum() >= k
+
+
+def test_gmm_gen_consistent_with_ext(rng):
+    pts = rng.normal(size=(120, 2)).astype(np.float32)
+    ext = gmm_ext(pts, 4, 12)
+    gen = gmm_gen(pts, 4, 12)
+    np.testing.assert_array_equal(np.asarray(ext.multiplicity),
+                                  np.asarray(gen.multiplicity))
+    np.testing.assert_allclose(np.asarray(gen.points),
+                               pts[np.asarray(ext.kernel_idx)])
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from(["euclidean", "cosine",
+                                                 "manhattan"]))
+@settings(max_examples=10, deadline=None)
+def test_gmm_metrics(seed, metric):
+    pts = np.abs(np.random.default_rng(seed).normal(size=(50, 4))) \
+        .astype(np.float32) + 0.1
+    res = gmm(pts, 6, metric=metric)
+    idx = np.asarray(res.idx)
+    assert len(set(idx.tolist())) == 6
+    assert float(res.radius) >= 0

@@ -1,0 +1,82 @@
+"""Unit tests for the six diversity objectives (Table 1)."""
+import numpy as np
+import pytest
+
+from repro.core import measures
+from repro.core.metrics import get_metric
+
+SQ3 = float(np.sqrt(2.0))
+
+
+def unit_square():
+    # 4 corners of the unit square — all measures computable by hand
+    return np.asarray([[0, 0], [1, 0], [0, 1], [1, 1]], np.float32)
+
+
+@pytest.fixture
+def dm():
+    pts = unit_square()
+    import jax.numpy as jnp
+    return np.asarray(get_metric("euclidean").pairwise(jnp.asarray(pts),
+                                                       jnp.asarray(pts)))
+
+
+def test_remote_edge(dm):
+    assert measures.remote_edge(dm) == pytest.approx(1.0)
+
+
+def test_remote_clique(dm):
+    # 4 sides + 2 diagonals
+    assert measures.remote_clique(dm) == pytest.approx(4 + 2 * SQ3, rel=1e-6)
+
+
+def test_remote_star(dm):
+    # every center: two sides + one diagonal
+    assert measures.remote_star(dm) == pytest.approx(2 + SQ3, rel=1e-6)
+
+
+def test_remote_tree(dm):
+    assert measures.remote_tree(dm) == pytest.approx(3.0, rel=1e-6)
+
+
+def test_remote_cycle(dm):
+    assert measures.remote_cycle(dm) == pytest.approx(4.0, rel=1e-6)
+
+
+def test_remote_bipartition(dm):
+    # best balanced split = diagonal pairs: cut has 2 sides + ... enumerate:
+    # {(0,0),(1,1)} vs {(1,0),(0,1)}: cross = 4 sides = 4.0; the other splits
+    # give 2 + 2*sqrt2 ≈ 4.83.  min = 4.0
+    assert measures.remote_bipartition(dm) == pytest.approx(4.0, rel=1e-6)
+
+
+def test_multiplicity_expansion(dm):
+    # duplicate each corner twice: remote-edge collapses to 0
+    w = np.asarray([2, 1, 1, 1])
+    assert measures.remote_edge(dm, w) == pytest.approx(0.0)
+    # clique gains the distances from the replica to everything else
+    base = measures.remote_clique(dm)
+    dup = measures.remote_clique(dm, w)
+    assert dup == pytest.approx(base + (1 + 1 + SQ3), rel=1e-6)
+
+
+def test_cycle_heldkarp_matches_bruteforce(rng):
+    pts = rng.normal(size=(7, 2)).astype(np.float32)
+    import itertools
+    import jax.numpy as jnp
+    dm = np.asarray(get_metric("euclidean").pairwise(jnp.asarray(pts),
+                                                     jnp.asarray(pts)))
+    best = min(
+        sum(dm[p[i], p[(i + 1) % 7]] for i in range(7))
+        for p in itertools.permutations(range(7)))
+    assert measures.remote_cycle(dm) == pytest.approx(best, rel=1e-5)
+
+
+def test_bipartition_heuristic_upper_bounds_exact(rng):
+    pts = rng.normal(size=(10, 3)).astype(np.float32)
+    import jax.numpy as jnp
+    dm = np.asarray(get_metric("euclidean").pairwise(jnp.asarray(pts),
+                                                     jnp.asarray(pts)))
+    exact = measures.remote_bipartition(dm, exact_limit=16)
+    heur = measures.remote_bipartition(dm, exact_limit=4)
+    assert heur >= exact - 1e-5
