@@ -163,7 +163,9 @@ def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
     out = 1.0
     for d in dims:
         out *= d
-    m = re.search(r"dot\(%?([\w\.\-]+),", ins.rhs)
+    # operand may be printed bare (`dot(%lhs,`) or typed
+    # (`dot(f32[128,256]{1,0} %lhs,`) depending on the XLA version
+    m = re.search(r"dot\([^%)]*%([\w\.\-]+)", ins.rhs)
     k = 1.0
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
     if m and mc and m.group(1) in shapes:

@@ -14,7 +14,7 @@ import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import bench_mr, bench_streaming
+from benchmarks import bench_constrained, bench_mr, bench_streaming
 from benchmarks.common import table
 
 
@@ -59,6 +59,20 @@ def main(argv=None) -> None:
     print("=" * 72)
     rows = bench_mr.run_scalability(quick=quick)
     print(table(rows, ["n", "processors", "mode", "time_s"], "Scalability"))
+
+    print("\n" + "=" * 72)
+    print("Constrained diversity — fair pipeline quality vs m groups × k")
+    print("=" * 72)
+    rows = bench_constrained.run_quality(quick=quick)
+    print(table(rows, ["m", "k", "k'", "approx_ratio", "throughput_pts_s"],
+                "Constrained approximation"))
+
+    print("\n" + "=" * 72)
+    print("Constrained diversity — path throughput")
+    print("=" * 72)
+    rows = bench_constrained.run_throughput(quick=quick)
+    print(table(rows, ["path", "m", "k", "k'", "throughput_pts_s"],
+                "Constrained throughput"))
 
     if not args.skip_roofline and os.path.isdir("results"):
         print("\n" + "=" * 72)

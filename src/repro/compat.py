@@ -1,0 +1,28 @@
+"""Version-compat shims for the jax API surface this repo relies on.
+
+``shard_map`` moved around across jax releases: 0.4.x exposes it as
+``jax.experimental.shard_map.shard_map``; newer releases promote it to
+``jax.shard_map``.  Import it from here so every call site works on both:
+
+    from repro.compat import shard_map
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5-ish
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(*args, **kwargs):
+        # the replication check was renamed check_rep -> check_vma; call sites
+        # use the new spelling and we translate for old jax
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+__all__ = ["shard_map"]

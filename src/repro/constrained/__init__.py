@@ -1,0 +1,62 @@
+"""Constrained (partition-matroid / "fair") diversity maximization.
+
+Given ``m`` groups (matroid categories: colors, sources, classes) and quotas
+``(q_0, …, q_{m-1})`` with ``k = Σ q_g``, maximize a diversity objective over
+sets containing *exactly* ``q_g`` points of group ``g`` — the fair variant of
+the paper's problem, per the follow-up "A General Coreset-Based Approach to
+Diversity Maximization under Matroid Constraints" (Ceccarello et al.).
+
+Code ↔ construction map
+-----------------------
+
+The matroid-coreset theorem states that if ``T_g`` is an (unconstrained)
+core-set for group ``g`` alone, then ``∪_g T_g`` is a core-set for the
+constrained problem: any feasible solution uses ≤ k points of each group, and
+moving each to its proxy in the *same group's* core-set preserves both
+feasibility and (up to the proxy radius ε) the diversity value.  Each layer of
+this package instantiates one piece of that construction on the existing
+unconstrained machinery:
+
+``coreset.py``
+    Per-group core-sets ``T_g`` = GMM(S_g, k′) (or GMM-EXT with delegates for
+    the clique-type measures needing the injective proxy, Lemma 2), built as a
+    single ``vmap`` over the ``(m, n)`` group-mask stack so the m-way fan-out
+    costs one batched distance computation per GMM round.
+    ``fair_diversity_maximize`` is the single-machine end-to-end driver.
+
+``solver.py``
+    The final-stage constrained solver on the union: GMM-style feasible
+    greedy over groups with remaining quota, then same-group swap local
+    search (swaps within a group are exactly the feasible exchanges of a
+    partition matroid).  ``brute_force_constrained`` enumerates per-group
+    combinations for exact small-instance optima (tests).
+
+``streaming.py``
+    The paper's SMM state machine (§4), one instance per group; a labelled
+    chunk is partitioned once and each slice reuses the vectorized SMM
+    update.  Union at stream end = the composed core-set.
+
+``mapreduce.py``
+    The paper's 2-round MR scheme (§5): round 1 runs the vmapped per-group
+    builder on every reducer's shard; round 2 is the same single
+    ``all_gather`` union as ``core.distributed`` followed by the replicated
+    sequential solve.  ``simulate_fair_mr`` is the single-device ℓ-reducer
+    benchmark path.
+
+Serving/data integration: ``repro.serving.diverse_rerank(..., quotas=...)``
+and ``repro.data.select_diverse(..., group_labels=...)`` route here.
+"""
+from .coreset import GroupedCoreset, fair_diversity_maximize, grouped_coreset
+from .mapreduce import (FairCoreset, mr_fair_diversity, mr_grouped_coreset,
+                        simulate_fair_mr)
+from .solver import (brute_force_constrained, constrained_solve,
+                     feasible_greedy, local_search, solve_and_value)
+from .streaming import FairStreamingCoreset, fair_streaming_diversity
+
+__all__ = [
+    "GroupedCoreset", "grouped_coreset", "fair_diversity_maximize",
+    "FairCoreset", "mr_grouped_coreset", "mr_fair_diversity",
+    "simulate_fair_mr", "constrained_solve", "feasible_greedy",
+    "local_search", "brute_force_constrained", "solve_and_value",
+    "FairStreamingCoreset", "fair_streaming_diversity",
+]

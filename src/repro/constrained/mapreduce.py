@@ -1,0 +1,173 @@
+"""MapReduce partition-matroid diversity on a jax device mesh.
+
+Mirrors ``repro.core.distributed`` (paper §5) with the matroid-coreset
+composition layered on top:
+
+  round 1 — every reducer runs the vmapped per-group core-set builder on its
+            local (shard, labels) pair: ``m`` GMM/GMM-EXT runs batched into
+            one vmap (see ``constrained.coreset``);
+  round 2 — per-device unions are aggregated with the same single
+            ``all_gather`` collective as the unconstrained path, and the
+            feasible-greedy + local-search solver runs replicated on the
+            union (host-side, core-set scale).
+
+Composition is sound in both directions: the union over reducers of the union
+over groups equals the union over groups of per-reducer core-sets, and
+per-group core-sets compose across partitions exactly like the unconstrained
+ones (composability of GMM core-sets + the matroid-coreset theorem).
+
+``simulate_fair_mr`` is the single-device ℓ-reducer analogue of
+``core.distributed.simulate_mr`` used by the CPU benchmark suite.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.measures import NEEDS_INJECTIVE
+from repro.core.metrics import get_metric
+
+from .coreset import _grouped_ext_impl, _grouped_gmm_impl
+from .solver import solve_and_value
+
+
+class FairCoreset(NamedTuple):
+    """Union core-set tagged with group labels (points, not input indices —
+    round 2 gathers rows across devices, so original indices are gone)."""
+    points: jnp.ndarray      # (cap, d)
+    labels: jnp.ndarray      # (cap,) int32 group ids
+    valid: jnp.ndarray       # (cap,) bool
+    radius: jnp.ndarray      # () max per-group, per-reducer proxy radius
+
+    def compact(self) -> Tuple[np.ndarray, np.ndarray]:
+        v = np.asarray(self.valid)
+        return np.asarray(self.points)[v], np.asarray(self.labels)[v]
+
+    @property
+    def size(self) -> int:
+        return int(np.asarray(self.valid).sum())
+
+
+def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
+            mode: str, use_pallas: bool):
+    """Per-reducer body: vmapped per-group core-set of the local shard.
+    Returns (pts (m*s, d), labels (m*s,), valid (m*s,), radius ())."""
+    if mode == "ext":
+        idx, valid, radius, _ = _grouped_ext_impl(shard, lab, m, k, kprime,
+                                                  metric_name, use_pallas)
+    else:
+        idx, valid, radius, _ = _grouped_gmm_impl(shard, lab, m, kprime,
+                                                  metric_name, use_pallas)
+    s = idx.shape[1]
+    pts = shard[idx.reshape(-1)]
+    glab = jnp.repeat(jnp.arange(m, dtype=jnp.int32), s)
+    return pts, glab, valid.reshape(-1), jnp.max(radius)
+
+
+def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
+                       measure: str, mesh: Mesh, *,
+                       data_axes: Sequence[str] = ("data",),
+                       metric="euclidean",
+                       use_pallas: bool = False) -> FairCoreset:
+    """2-round MR fair core-set on a mesh: ``points (n, d)`` and ``labels
+    (n,)`` are sharded over ``data_axes``; returns the replicated union."""
+    from repro.compat import shard_map
+
+    axes = tuple(data_axes)
+    nshards = int(np.prod([mesh.shape[a] for a in axes]))
+    n, _ = points.shape
+    if n % nshards:
+        raise ValueError(f"n={n} not divisible by {nshards} reducers")
+    metric_name = get_metric(metric).name
+    mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
+
+    def body(shard, lab):
+        pts, glab, valid, radius = _round1(shard, lab, m, k, kprime,
+                                           metric_name, mode, use_pallas)
+        g_pts = jax.lax.all_gather(pts, axes, tiled=True)
+        g_lab = jax.lax.all_gather(glab, axes, tiled=True)
+        g_valid = jax.lax.all_gather(valid, axes, tiled=True)
+        g_rad = jax.lax.pmax(radius, axes)
+        return g_pts, g_lab, g_valid, g_rad
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axes), P(axes)),
+                   out_specs=(P(), P(), P(), P()), check_vma=False)
+    g_pts, g_lab, g_valid, g_rad = jax.jit(fn)(jnp.asarray(points),
+                                               jnp.asarray(labels, jnp.int32))
+    return FairCoreset(points=g_pts, labels=g_lab, valid=g_valid,
+                       radius=g_rad)
+
+
+def mr_fair_diversity(points, labels, quotas, measure: str, mesh: Mesh, *,
+                      kprime: Optional[int] = None,
+                      data_axes: Sequence[str] = ("data",), metric="euclidean",
+                      use_pallas: bool = False, swap_rounds: int = 10):
+    """Full constrained pipeline on a mesh.
+
+    Returns (solution_points (k, d), solution_labels (k,), value)."""
+    quotas = np.asarray(quotas, np.int64)
+    m = quotas.shape[0]
+    k = int(quotas.sum())
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    cs = mr_grouped_coreset(points, labels, m, k, kprime, measure, mesh,
+                            data_axes=data_axes, metric=metric,
+                            use_pallas=use_pallas)
+    cand_pts, cand_lab = cs.compact()
+    sel, value = solve_and_value(cand_pts, cand_lab, quotas, measure,
+                                 metric=metric, swap_rounds=swap_rounds)
+    return cand_pts[sel], cand_lab[sel], value
+
+
+# --------------------------------------------------------------------------
+# simulated-reducer path (CPU benchmarks / tests)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "metric_name",
+                                             "mode"))
+def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
+                metric_name: str, mode: str):
+    def one(s, sl):
+        return _round1(s, sl, m, k, kprime, metric_name, mode, False)
+
+    return jax.vmap(one)(shards, slabels)
+
+
+def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
+                     measure: str = "remote-edge",
+                     kprime: Optional[int] = None, metric="euclidean",
+                     partition: str = "contiguous", seed: int = 0,
+                     swap_rounds: int = 10):
+    """Simulate the ℓ-reducer 2-round constrained MR run on one device.
+
+    Returns (solution_points, solution_labels, value).  ``partition`` follows
+    ``simulate_mr``: 'contiguous' | 'random' | 'adversarial'."""
+    from repro.core.distributed import partition_shards
+
+    quotas = np.asarray(quotas, np.int64)
+    m = quotas.shape[0]
+    k = int(quotas.sum())
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    pts, shards, slabels = partition_shards(
+        np.asarray(points, np.float32), num_reducers, partition=partition,
+        seed=seed, labels=np.asarray(labels, np.int32))
+    d = pts.shape[1]
+    kprime = min(kprime, shards.shape[1])
+    mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
+
+    g_pts, g_lab, g_valid, g_rad = _sim_round1(shards, slabels, m, k, kprime,
+                                               get_metric(metric).name, mode)
+    flat_pts = np.asarray(g_pts.reshape(-1, d))
+    flat_lab = np.asarray(g_lab.reshape(-1))
+    flat_valid = np.asarray(g_valid.reshape(-1))
+    cand_pts = flat_pts[flat_valid]
+    cand_lab = flat_lab[flat_valid]
+    sel, value = solve_and_value(cand_pts, cand_lab, quotas, measure,
+                                 metric=metric, swap_rounds=swap_rounds)
+    return cand_pts[sel], cand_lab[sel], value

@@ -67,7 +67,7 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
     """2-round MR core-set on a mesh.  ``points`` is globally (n, d) and gets
     sharded over ``data_axes``; returns a replicated Coreset/GeneralizedCoreset
     for the union T = ∪ T_i."""
-    from jax import shard_map
+    from repro.compat import shard_map
 
     axes = tuple(data_axes)
     nshards = int(np.prod([mesh.shape[a] for a in axes]))
@@ -151,7 +151,7 @@ def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
                          *, metric="euclidean", use_pallas: bool = False):
     """Thm 8: two-level reduction — per-device core-sets over ``data``,
     re-contracted over ``pod`` (requires a ('pod','data',...) mesh)."""
-    from jax import shard_map
+    from repro.compat import shard_map
 
     if "pod" not in mesh.axis_names:
         raise ValueError("recursive scheme expects a 'pod' axis")
@@ -189,6 +189,42 @@ def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
 # simulated-reducer path (CPU benchmarks; paper Fig 4/5 parallelism sweeps)
 # --------------------------------------------------------------------------
 
+def partition_shards(points, num_reducers: int, *, partition: str = "contiguous",
+                     seed: int = 0, labels=None):
+    """Reducer-partition prep shared by the simulated MR paths.
+
+    Pads the input to a multiple of ``num_reducers`` by repeating leading rows
+    (duplicates only add candidates — they never win a greedy pick while a
+    distinct point remains, and crucially no point is DROPPED: truncation
+    would break quota feasibility for tiny groups in the constrained path).
+
+    ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
+    adversarial = sort by first coordinate so each reducer sees a small-volume
+    region).  Returns (pts (l·per, d), shards (l, per, d), slabels or None).
+    """
+    pts = np.asarray(points)
+    n, d = pts.shape
+    lab = None if labels is None else np.asarray(labels)
+    per = -(-n // num_reducers)                      # ceil
+    pad = per * num_reducers - n
+    if pad:
+        pts = np.concatenate([pts, pts[:pad]])
+        if lab is not None:
+            lab = np.concatenate([lab, lab[:pad]])
+    if partition == "random":
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(per * num_reducers)
+        pts = pts[perm]
+        lab = None if lab is None else lab[perm]
+    elif partition == "adversarial":
+        order = np.argsort(pts[:, 0], kind="stable")
+        pts = pts[order]
+        lab = None if lab is None else lab[order]
+    shards = jnp.asarray(pts.reshape(num_reducers, per, d))
+    slabels = None if lab is None else jnp.asarray(lab.reshape(num_reducers,
+                                                               per))
+    return pts, shards, slabels
+
 @functools.partial(jax.jit, static_argnames=("k", "kprime", "metric", "mode"))
 def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str):
     if mode == "plain":
@@ -217,19 +253,11 @@ def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
     ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
     adversarial = sort by first coordinate so each reducer sees a small-volume
     region)."""
-    pts = np.asarray(points)
-    n, d = pts.shape
     if kprime is None:
         kprime = max(2 * k, 32)
-    per = n // num_reducers
-    pts = pts[: per * num_reducers]
-    if partition == "random":
-        rng = np.random.default_rng(seed)
-        pts = pts[rng.permutation(per * num_reducers)]
-    elif partition == "adversarial":
-        order = np.argsort(pts[:, 0], kind="stable")
-        pts = pts[order]
-    shards = jnp.asarray(pts.reshape(num_reducers, per, d))
+    pts, shards, _ = partition_shards(points, num_reducers,
+                                      partition=partition, seed=seed)
+    d = pts.shape[1]
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")

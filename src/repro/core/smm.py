@@ -320,12 +320,15 @@ class StreamingCoreset:
         self._state = state
 
     # -- output -------------------------------------------------------------
-    def finalize(self):
+    def finalize(self, *, allow_small: bool = False):
+        """``allow_small=True`` returns whatever the stream held when it had
+        fewer than ``k`` points (used by the constrained driver, where a tiny
+        group legitimately contributes all of its members)."""
         if self._state is None:
             # tiny stream: everything fits in the prefix buffer
             pts = np.concatenate(self._prefix, axis=0) if self._prefix else \
                 np.zeros((0, self.dim), np.float32)
-            if pts.shape[0] < self.k:
+            if pts.shape[0] < self.k and not allow_small:
                 raise ValueError(f"stream had {pts.shape[0]} < k={self.k} points")
             w = np.ones((pts.shape[0],), np.int32)
             return Coreset(points=jnp.asarray(pts), valid=jnp.ones(len(pts), bool),

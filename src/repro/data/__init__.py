@@ -1,5 +1,5 @@
 from .pipeline import clustered_dataset, lm_batch, sphere_dataset, stream
-from .selection import embed_examples, select_diverse
+from .selection import balanced_quotas, embed_examples, select_diverse
 
 __all__ = ["clustered_dataset", "lm_batch", "sphere_dataset", "stream",
-           "embed_examples", "select_diverse"]
+           "balanced_quotas", "embed_examples", "select_diverse"]

@@ -42,25 +42,89 @@ def embed_examples(token_batches: np.ndarray, embedding: Optional[jnp.ndarray]
     return out
 
 
+def balanced_quotas(group_labels: np.ndarray, k: int, m: Optional[int] = None
+                    ) -> np.ndarray:
+    """Default quotas for ``select_diverse(..., group_labels=...)``: as close
+    to k/m per group as the group sizes allow, remainder going to the largest
+    groups first."""
+    labels = np.asarray(group_labels)
+    if m is None:
+        m = int(labels.max()) + 1 if labels.size else 0
+    counts = np.bincount(labels, minlength=m)[:m]
+    if counts.sum() < k:
+        raise ValueError(f"k={k} exceeds the {counts.sum()} labelled points")
+    quotas = np.minimum(counts, k // max(m, 1))
+    # distribute the remainder one pick at a time, round-robin over groups
+    # with spare capacity, largest group first — keeps the split balanced
+    order = np.argsort(-counts)
+    while quotas.sum() < k:
+        for g in order:
+            if quotas.sum() >= k:
+                break
+            if quotas[g] < counts[g]:
+                quotas[g] += 1
+    return quotas.astype(np.int64)
+
+
 def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
                    kprime: Optional[int] = None, num_reducers: int = 1,
-                   metric="euclidean") -> np.ndarray:
-    """Returns indices of the k selected examples."""
+                   metric="euclidean", group_labels=None,
+                   quotas=None) -> np.ndarray:
+    """Returns indices of the k selected examples.
+
+    With ``group_labels`` (an ``(n,)`` int array of category ids) the
+    selection is constrained to a partition matroid: ``quotas[g]`` picks from
+    every group g (defaults to a balanced split of k across groups), via the
+    ``repro.constrained`` subsystem.
+    """
     pts = np.asarray(embeddings, np.float32)
+    if group_labels is not None:
+        labels = np.asarray(group_labels)
+        if quotas is None:
+            quotas = balanced_quotas(labels, k)
+        quotas = np.asarray(quotas, np.int64)
+        if int(quotas.sum()) != k:
+            raise ValueError(f"sum(quotas)={int(quotas.sum())} != k={k}")
+        if num_reducers > 1:
+            from repro.constrained import simulate_fair_mr
+            sol, sol_lab, _ = simulate_fair_mr(pts, labels, quotas,
+                                               num_reducers=num_reducers,
+                                               measure=measure, kprime=kprime,
+                                               metric=metric)
+            # match within the solution point's group so duplicate embeddings
+            # across groups can't silently break the quota guarantee
+            return _match_rows(pts, sol, k, row_labels=labels,
+                               sol_labels=sol_lab)
+        from repro.constrained import fair_diversity_maximize
+        idx, _, _ = fair_diversity_maximize(pts, labels, quotas, measure,
+                                            kprime=kprime, metric=metric)
+        return np.asarray(idx)
+    if quotas is not None:
+        raise ValueError("quotas= requires group_labels=")
     if num_reducers > 1:
         sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
                              kprime=kprime, metric=metric)
     else:
         sol, _, _ = diversity_maximize(pts, k, measure, kprime=kprime,
                                        metric=metric)
-    # map solution points back to indices (exact match by row)
+    return _match_rows(pts, sol, k)
+
+
+def _match_rows(pts: np.ndarray, sol: np.ndarray, k: int, *,
+                row_labels=None, sol_labels=None) -> np.ndarray:
+    """Map solution points back to distinct row indices (exact match by row).
+
+    With ``row_labels``/``sol_labels``, candidates are restricted to rows of
+    the solution point's own group (preserves quota feasibility)."""
     idx = []
     seen = set()
-    for s in sol:
+    for t, s in enumerate(sol):
         d = np.linalg.norm(pts - s[None, :], axis=1)
+        if row_labels is not None:
+            d = np.where(np.asarray(row_labels) == sol_labels[t], d, np.inf)
         order = np.argsort(d)
         for j in order:
-            if j not in seen:
+            if j not in seen and np.isfinite(d[j]):
                 idx.append(int(j))
                 seen.add(int(j))
                 break

@@ -75,7 +75,16 @@ class ServingEngine:
 
 
 def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
-                   measure: str = "remote-edge") -> np.ndarray:
-    """Pick the k most diverse candidates; returns their indices."""
+                   measure: str = "remote-edge", *, group_labels=None,
+                   quotas=None) -> np.ndarray:
+    """Pick the k most diverse candidates; returns their indices.
+
+    ``quotas`` (with per-candidate ``group_labels``) constrains the result to
+    a partition matroid — exactly ``quotas[g]`` picks from category g (fair
+    serving: per-source / per-topic slates), and must sum to ``k``.
+    ``quotas`` without ``group_labels`` is an error; ``group_labels`` alone
+    balances k across the categories.
+    """
     from repro.data.selection import select_diverse
-    return select_diverse(candidate_embeddings, k, measure=measure)
+    return select_diverse(candidate_embeddings, k, measure=measure,
+                          group_labels=group_labels, quotas=quotas)

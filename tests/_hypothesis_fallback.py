@@ -1,0 +1,90 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (used when the real
+package is absent in the runtime image — see conftest.py).
+
+Implements exactly the surface this test-suite uses: ``given`` / ``settings``
+and the ``integers`` / ``sampled_from`` / ``just`` / ``tuples`` / ``flatmap``
+strategies.  Examples are drawn from a seeded ``numpy`` RNG keyed on the test
+name, so every run exercises the same inputs — property coverage without the
+dependency, not shrinkage or fuzzing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def flatmap(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.integers(2)))
+
+
+def floats(min_value=0.0, max_value=1.0):
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # the trailing len(strategies) parameters are strategy-bound; anything
+        # before them (e.g. pytest fixtures) stays on the wrapper's signature
+        fixture_params = params[: len(params) - len(strategies)]
+        drawn_names = [p.name for p in params[len(params) - len(strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = tuple(s.example(rng) for s in strategies)
+                # bind by keyword: pytest passes fixtures as kwargs, so a
+                # positional splat would land on the fixture parameters
+                fn(*args, **kwargs, **dict(zip(drawn_names, drawn)))
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        return wrapper
+    return deco

@@ -1,8 +1,34 @@
 # NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests and
 # benches must see the real (single) device; only launch/dryrun.py and the
 # explicit subprocess tests fake 512/8 devices.
+import importlib.util
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Environment shared by every subprocess test: strip to the essentials but
+# pin the jax platform — without JAX_PLATFORMS the subprocess probes for a
+# TPU, which stalls for minutes on CPU-only boxes.
+SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+               "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+# The runtime image has no ``hypothesis``; install a deterministic fallback
+# (same given/settings/strategies surface) so the property tests still run
+# instead of failing at collection.  The real package wins when present.
+if importlib.util.find_spec("hypothesis") is None:
+    # import by path: ``tests`` is not a package, and the repo root is only
+    # on sys.path under ``python -m pytest``, not the bare ``pytest`` entry
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_fallback as _hf
+
+    _mod = type(sys)("hypothesis")
+    _mod.given = _hf.given
+    _mod.settings = _hf.settings
+    _mod.strategies = _hf
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _hf
 
 
 @pytest.fixture(scope="session")

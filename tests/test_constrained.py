@@ -1,0 +1,308 @@
+"""Constrained (partition-matroid / fair) diversity subsystem tests:
+quota feasibility everywhere, brute-force agreement on small n, approximation
+quality on doubling-metric synthetics, and streaming/MR vs single-machine
+parity (plus the real shard_map mesh path in a fake-device subprocess)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.constrained import (FairStreamingCoreset, brute_force_constrained,
+                               constrained_solve, fair_diversity_maximize,
+                               fair_streaming_diversity, feasible_greedy,
+                               grouped_coreset, local_search,
+                               simulate_fair_mr)
+from repro.core.measures import diversity
+from repro.core.metrics import get_metric
+from repro.data import balanced_quotas, clustered_dataset, select_diverse
+from repro.serving import diverse_rerank
+
+
+def _value(pts, idx, measure, metric="euclidean"):
+    m = get_metric(metric)
+    sub = jnp.asarray(np.asarray(pts)[np.asarray(idx)])
+    return diversity(measure, np.asarray(m.pairwise(sub, sub)))
+
+
+def _labelled(n, m, seed, dim=3):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, dim)).astype(np.float32)
+    lab = rng.integers(0, m, size=n)
+    lab[:m] = np.arange(m)  # every group inhabited
+    return pts, lab
+
+
+# --------------------------------------------------------------------------
+# quota feasibility — every path, every instance
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("measure", ["remote-edge", "remote-clique"])
+def test_quotas_always_satisfied_single_machine(measure):
+    for seed in range(4):
+        pts, lab = _labelled(150, 3, seed)
+        quotas = [2, 3, 1]
+        idx, _, _ = fair_diversity_maximize(pts, lab, quotas, measure,
+                                            kprime=16)
+        assert len(idx) == 6
+        assert len(set(idx.tolist())) == 6  # distinct points
+        np.testing.assert_array_equal(np.bincount(lab[idx], minlength=3),
+                                      quotas)
+
+
+def test_quotas_satisfied_streaming_and_mr():
+    pts, lab = _labelled(800, 4, seed=7)
+    quotas = [1, 2, 2, 1]
+    sol, sol_lab = fair_streaming_diversity(pts, lab, quotas, kprime=24,
+                                            chunk=111)
+    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=4), quotas)
+    _, mr_lab, _ = simulate_fair_mr(pts, lab, quotas, num_reducers=4,
+                                    kprime=24)
+    np.testing.assert_array_equal(np.bincount(mr_lab, minlength=4), quotas)
+
+
+def test_infeasible_quota_raises():
+    pts, lab = _labelled(30, 2, seed=0)
+    quotas = [int((lab == 0).sum()) + 1, 0]  # more than group 0 has
+    with pytest.raises(ValueError, match="quota"):
+        constrained_solve(pts, lab, quotas, "remote-edge")
+
+
+def test_empty_group_with_zero_quota_ok():
+    pts, lab = _labelled(60, 2, seed=1)
+    lab3 = lab.copy()  # m=3 but group 2 never occurs
+    idx, _, _ = fair_diversity_maximize(pts, lab3, [2, 2, 0], "remote-edge",
+                                        kprime=12)
+    np.testing.assert_array_equal(np.bincount(lab3[idx], minlength=3),
+                                  [2, 2, 0])
+
+
+# --------------------------------------------------------------------------
+# exact small-instance optimality
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("measure", ["remote-edge", "remote-clique"])
+def test_matches_brute_force_n_le_10(measure):
+    """With k' = n the candidate union is the whole input and the solver's
+    small-instance exact path must return the brute-force optimum."""
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        n = 10
+        pts = rng.normal(size=(n, 2)).astype(np.float32)
+        lab = rng.integers(0, 2, size=n)
+        lab[:2] = [0, 1]
+        quotas = [2, 2]
+        opt, _ = brute_force_constrained(pts, lab, quotas, measure)
+        idx, got, _ = fair_diversity_maximize(pts, lab, quotas, measure,
+                                              kprime=n)
+        assert got == pytest.approx(opt, rel=1e-6)
+        np.testing.assert_array_equal(np.bincount(lab[idx], minlength=2),
+                                      quotas)
+
+
+@pytest.mark.parametrize("measure,bound", [("remote-edge", 0.5),
+                                           ("remote-clique", 0.5)])
+def test_greedy_local_search_near_opt(measure, bound):
+    """Forced greedy + swap path (exact fallback disabled) stays within the
+    expected factor of the true optimum (empirically ≥ 0.75/0.91; asserted
+    at the α=2-style bound of the unconstrained solvers)."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(14, 2)).astype(np.float32)
+        lab = rng.integers(0, 2, size=14)
+        lab[:2] = [0, 1]
+        quotas = [2, 2]
+        opt, _ = brute_force_constrained(pts, lab, quotas, measure)
+        sel = constrained_solve(pts, lab, quotas, measure, exact_limit=0)
+        assert _value(pts, sel, measure) >= bound * opt - 1e-6
+
+
+def test_local_search_never_hurts_and_stays_feasible():
+    pts, lab = _labelled(120, 3, seed=3)
+    quotas = np.asarray([2, 2, 2])
+    m = get_metric("euclidean")
+    dm = np.asarray(m.pairwise(jnp.asarray(pts), jnp.asarray(pts)))
+    sel0 = feasible_greedy(dm, lab, quotas)
+    v0 = _value(pts, sel0, "remote-edge")
+    sel1 = local_search(dm, lab, sel0, "remote-edge")
+    np.testing.assert_array_equal(np.bincount(lab[sel1], minlength=3), quotas)
+    assert _value(pts, sel1, "remote-edge") >= v0 - 1e-9
+
+
+# --------------------------------------------------------------------------
+# per-group core-set structure + approximation on doubling-metric data
+# --------------------------------------------------------------------------
+
+def test_grouped_coreset_structure():
+    pts, lab = _labelled(300, 4, seed=5)
+    cs = grouped_coreset(pts, lab, 4, k=6, kprime=20)
+    idx = np.asarray(cs.idx)
+    valid = np.asarray(cs.valid)
+    counts = np.bincount(lab, minlength=4)
+    np.testing.assert_array_equal(np.asarray(cs.group_count), counts)
+    for g in range(4):
+        rows = idx[g][valid[g]]
+        assert np.all(lab[rows] == g)            # group purity
+        assert len(set(rows.tolist())) == len(rows)  # distinct
+        assert len(rows) == min(20, counts[g])
+    # per-group radius equals the unconstrained GMM radius on that group
+    from repro.core import gmm
+    g0 = np.where(lab == 0)[0]
+    res = gmm(pts, 20, mask=jnp.asarray(lab == 0), start=int(g0[0]))
+    assert float(cs.radius[0]) == pytest.approx(float(res.radius), rel=1e-5)
+
+
+def test_grouped_coreset_ext_mode_purity():
+    pts, lab = _labelled(300, 3, seed=6)
+    cs = grouped_coreset(pts, lab, 3, k=4, kprime=8, measure="remote-clique")
+    flat_idx, flat_lab = cs.flatten()
+    assert np.all(lab[flat_idx] == flat_lab)
+    # every group contributes at least its kernel
+    for g in range(3):
+        assert (flat_lab == g).sum() >= min(8, (lab == g).sum())
+
+
+def test_coreset_path_close_to_full_solve_on_doubling_data():
+    """Per-group core-set + solver vs the solver on ALL points: the core-set
+    construction must not cost more than a small constant factor (theory:
+    α + ε on bounded-doubling data; empirically ≥ 0.92 here)."""
+    for seed in range(3):
+        pts = clustered_dataset(2000, clusters=10, dim=4, seed=seed)
+        rng = np.random.default_rng(seed)
+        lab = rng.integers(0, 3, size=2000)
+        quotas = [3, 3, 2]
+        _, v_cs, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
+                                             kprime=32)
+        full = constrained_solve(pts, lab, quotas, "remote-edge",
+                                 exact_limit=0)
+        v_full = _value(pts, full, "remote-edge")
+        assert v_cs >= 0.8 * v_full
+
+
+# --------------------------------------------------------------------------
+# streaming / MapReduce parity with the single-machine path
+# --------------------------------------------------------------------------
+
+def test_streaming_agrees_with_single_machine():
+    pts = clustered_dataset(3000, clusters=8, dim=3, seed=11)
+    rng = np.random.default_rng(11)
+    lab = rng.integers(0, 3, size=3000)
+    quotas = [2, 2, 2]
+    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
+                                         kprime=48)
+    sol, sol_lab = fair_streaming_diversity(pts, lab, quotas, kprime=48,
+                                            chunk=997)
+    v_st = _value(sol, np.arange(len(sol)), "remote-edge")
+    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=3), quotas)
+    assert v_st >= 0.75 * v_sm
+
+
+def test_streaming_small_groups():
+    """A group smaller than k contributes everything it has."""
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(500, 3)).astype(np.float32)
+    lab = np.zeros(500, np.int64)
+    lab[:3] = 1                                  # tiny group: 3 points
+    smm = FairStreamingCoreset(m=2, k=5, kprime=16, dim=3)
+    for i in range(0, 500, 97):
+        smm.update(pts[i:i + 97], lab[i:i + 97])
+    cpts, clab = smm.finalize()
+    assert (clab == 1).sum() == 3
+    sol, sol_lab = fair_streaming_diversity(pts, lab, [3, 2], kprime=16)
+    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=2), [3, 2])
+
+
+def test_simulate_mr_agrees_with_single_machine():
+    pts = clustered_dataset(3200, clusters=8, dim=3, seed=12)
+    rng = np.random.default_rng(12)
+    lab = rng.integers(0, 3, size=3200)
+    quotas = [2, 2, 2]
+    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
+                                         kprime=48)
+    for partition in ("contiguous", "random"):
+        _, mr_lab, v_mr = simulate_fair_mr(pts, lab, quotas, num_reducers=4,
+                                           kprime=48, partition=partition)
+        np.testing.assert_array_equal(np.bincount(mr_lab, minlength=3),
+                                      quotas)
+        assert v_mr >= 0.75 * v_sm
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.constrained import (fair_diversity_maximize,
+                                   mr_fair_diversity, mr_grouped_coreset)
+    from repro.data import clustered_dataset
+
+    mesh = jax.make_mesh((8,), ("data",))
+    pts = clustered_dataset(4096, clusters=8, dim=3, seed=13)
+    rng = np.random.default_rng(13)
+    lab = rng.integers(0, 3, size=4096)
+    quotas = [2, 2, 2]
+    cs = mr_grouped_coreset(jnp.asarray(pts), jnp.asarray(lab), 3, 6, 32,
+                            "remote-edge", mesh)
+    sol, sol_lab, val = mr_fair_diversity(jnp.asarray(pts), jnp.asarray(lab),
+                                          quotas, "remote-edge", mesh,
+                                          kprime=32)
+    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
+                                         kprime=32)
+    print(json.dumps({
+        "coreset_size": cs.size,
+        "labels": np.bincount(np.asarray(sol_lab), minlength=3).tolist(),
+        "val": float(val), "v_sm": float(v_sm),
+    }))
+""")
+
+
+def test_mesh_shard_map_path():
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["labels"] == [2, 2, 2]
+    assert res["coreset_size"] >= 3 * 32          # >= one kernel per group
+    assert res["val"] >= 0.7 * res["v_sm"]
+
+
+# --------------------------------------------------------------------------
+# integration: select_diverse / diverse_rerank
+# --------------------------------------------------------------------------
+
+def test_select_diverse_group_labels_roundtrip():
+    pts, lab = _labelled(200, 4, seed=9, dim=8)
+    idx = select_diverse(pts, 8, group_labels=lab)
+    assert len(idx) == 8 and len(set(idx.tolist())) == 8
+    np.testing.assert_array_equal(np.bincount(lab[idx], minlength=4),
+                                  balanced_quotas(lab, 8))
+    idx = select_diverse(pts, 6, group_labels=lab, quotas=[3, 1, 1, 1])
+    np.testing.assert_array_equal(np.bincount(lab[idx], minlength=4),
+                                  [3, 1, 1, 1])
+    idx = select_diverse(pts, 6, group_labels=lab, quotas=[3, 1, 1, 1],
+                         num_reducers=4)
+    np.testing.assert_array_equal(np.bincount(lab[idx], minlength=4),
+                                  [3, 1, 1, 1])
+
+
+def test_select_diverse_quota_validation():
+    pts, lab = _labelled(50, 2, seed=4)
+    with pytest.raises(ValueError, match="quotas"):
+        select_diverse(pts, 5, group_labels=lab, quotas=[2, 2])  # sum != k
+    with pytest.raises(ValueError, match="group_labels"):
+        select_diverse(pts, 4, quotas=[2, 2])
+
+
+def test_diverse_rerank_quotas():
+    pts, lab = _labelled(80, 3, seed=8, dim=16)
+    idx = diverse_rerank(pts, 6, group_labels=lab, quotas=[2, 2, 2])
+    np.testing.assert_array_equal(np.bincount(lab[idx], minlength=3),
+                                  [2, 2, 2])
+    # unconstrained path unchanged
+    idx = diverse_rerank(pts, 5)
+    assert len(idx) == 5

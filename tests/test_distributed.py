@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+
 import numpy as np
 import pytest
 
@@ -71,7 +73,7 @@ _SUBPROC = textwrap.dedent("""
 def test_shard_map_mr_on_8_devices():
     out = subprocess.run([sys.executable, "-c", _SUBPROC],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=_SUBPROC_ENV)
     assert out.returncode == 0, out.stderr[-2000:]
     data = json.loads(out.stdout.strip().splitlines()[-1])
     assert data["coreset_size"] == 8 * 32
@@ -107,7 +109,7 @@ _ELASTIC = textwrap.dedent("""
 
 
 def test_elastic_restore_across_device_counts(tmp_path):
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    env = _SUBPROC_ENV
     r1 = subprocess.run([sys.executable, "-c", _ELASTIC % 8,
                          str(tmp_path), "save"], capture_output=True,
                         text=True, timeout=300, env=env)

@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+
 import numpy as np
 import pytest
 
@@ -70,7 +72,7 @@ _EF_SUBPROC = textwrap.dedent("""
     import json
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed import psum_bf16, psum_int8_ef, init_error_feedback
 
@@ -104,7 +106,7 @@ _EF_SUBPROC = textwrap.dedent("""
 def test_compressed_psum_on_mesh():
     out = subprocess.run([sys.executable, "-c", _EF_SUBPROC],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=_SUBPROC_ENV)
     assert out.returncode == 0, out.stderr[-2000:]
     data = json.loads(out.stdout.strip().splitlines()[-1])
     assert data["err16"] < 2e-2          # bf16 mean close to exact

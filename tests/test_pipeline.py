@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+from conftest import SUBPROC_ENV as _SUBPROC_ENV
+
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -43,7 +45,7 @@ _SUBPROC = textwrap.dedent("""
 def test_pipeline_matches_sequential():
     out = subprocess.run([sys.executable, "-c", _SUBPROC],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=_SUBPROC_ENV)
     assert out.returncode == 0, out.stderr[-2000:]
     data = json.loads(out.stdout.strip().splitlines()[-1])
     assert data["err"] < 1e-5, data
