@@ -73,6 +73,51 @@ def run_quality(quick: bool = True) -> List[Dict]:
     return rows
 
 
+def run_grouped_engine(quick: bool = True, *, n: int = 2 ** 16, m: int = 16,
+                       kprime: int = 32, b: int = 8,
+                       chunk: int = 4096) -> List[Dict]:
+    """Grouped core-set construction: legacy vmapped b=1 loops vs the
+    single-sweep group-blocked engine (ISSUE 2 acceptance: >= 3x at
+    m=16, n=2^16, k'=32)."""
+    import time as _time
+
+    import jax
+    from repro.constrained.coreset import (_grouped_gmm_impl,
+                                           _grouped_select_impl,
+                                           pad_for_engine)
+
+    if not quick:
+        n *= 4
+    pts, labels = _labelled_dataset(n, m, seed=3)
+    pts_j = jnp.asarray(pts)
+    lab_j = jnp.asarray(np.asarray(labels, np.int32))
+    pp, ll, ch = pad_for_engine(pts_j, lab_j, chunk)
+
+    def legacy():
+        return _grouped_gmm_impl(pts_j, lab_j, m, kprime, "euclidean",
+                                 False)[0]
+
+    def blocked():
+        return _grouped_select_impl(pp, ll, m, kprime, b, ch, "euclidean",
+                                    False)[0]
+
+    rows = []
+    for name, fn, bb in (("grouped-vmap-b1", legacy, 1),
+                         ("grouped-blocked", blocked, b)):
+        jax.block_until_ready(fn())          # warm up jit caches
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = _time.perf_counter() - t0
+        rows.append({"path": name, "m": m, "n": n, "k'": kprime, "b": bb,
+                     "time_s": round(dt, 4),
+                     "throughput_pts_s": int(n / dt)})
+        print(f"[grouped-engine] {name}: {dt:.3f}s")
+    rows[-1]["speedup_vs_b1"] = round(rows[0]["time_s"]
+                                      / max(rows[1]["time_s"], 1e-9), 2)
+    print(f"[grouped-engine] speedup: {rows[-1]['speedup_vs_b1']}x")
+    return rows
+
+
 def run_throughput(quick: bool = True) -> List[Dict]:
     """Points/second of each constrained execution path."""
     rows = []

@@ -1,0 +1,113 @@
+"""Selection-engine benchmark: b=1 vs batched vs group-blocked GMM.
+
+Measures the hot loop the whole pipeline bottoms out in (ISSUE 2 / §Perf):
+wall-clock plus a bytes-swept model for each path, so the repo's perf
+trajectory is tracked in a machine-readable artifact (``BENCH_gmm.json``,
+emitted by ``benchmarks.run`` or ``emit_json``).
+
+Bytes-swept model (fp32): every sweep reads the point slab once plus the
+running-min field(s) twice (read + write); the batched engine performs
+``k/b + 2`` sweeps instead of ``k``.  The model is deliberately simple — it
+exists to expose the sweep-count ratio that makes the batched engine win,
+not to replace the roofline suite.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from repro.constrained.coreset import (_grouped_gmm_impl, _grouped_select_impl,
+                                       pad_for_engine)
+from repro.core.gmm import gmm, gmm_batched
+from repro.data import clustered_dataset
+
+
+def _time(fn, repeats: int = 2) -> float:
+    fn()  # warm up jit caches
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bytes_swept(n: int, d: int, sweeps: int, m: int = 1) -> int:
+    """Per-sweep traffic: point slab (n·d) read + m running-min fields
+    read+written (fp32)."""
+    return sweeps * (n * d * 4 + 3 * m * n * 4)
+
+
+def run(quick: bool = True, *, n: Optional[int] = None, d: int = 8,
+        k: int = 64, b: int = 8, chunk: int = 4096, m: int = 16,
+        kprime: int = 32) -> List[Dict]:
+    """Benchmark the three engine shapes; returns machine-readable rows."""
+    n = n if n is not None else (2 ** 16 if quick else 2 ** 20)
+    pts = jnp.asarray(clustered_dataset(n, clusters=4 * m, dim=d, seed=0))
+    rng = np.random.default_rng(0)
+    lab = rng.integers(0, m, size=n).astype(np.int32)
+    lab[:m] = np.arange(m)
+    lab_j = jnp.asarray(lab)
+
+    rows: List[Dict] = []
+
+    def add(path, t, sweeps, groups, kk, bb):
+        bs = _bytes_swept(n, d, sweeps, groups)
+        rows.append({
+            "path": path, "n": n, "d": d, "k": kk, "b": bb, "m": groups,
+            "time_s": round(t, 4),
+            "pts_per_s": int(n / max(t, 1e-9)),
+            "sweeps": sweeps,
+            "bytes_swept_gb": round(bs / 1e9, 4),
+            "effective_gbps": round(bs / 1e9 / max(t, 1e-9), 2),
+        })
+        print(f"[gmm-engine] {path:<22} {t:8.3f}s  sweeps={sweeps:<4}"
+              f" ~{rows[-1]['effective_gbps']}GB/s")
+
+    # -- unconstrained: sequential vs batched vs batched+chunked ----------
+    t = _time(lambda: gmm(pts, k).min_dist)
+    add("gmm-b1", t, k, 1, k, 1)
+    t = _time(lambda: gmm_batched(pts, k, b=b)[2])
+    add("gmm-batched", t, k // b + 2, 1, k, b)
+    t = _time(lambda: gmm_batched(pts, k, b=b, chunk=chunk)[2])
+    add("gmm-batched-chunked", t, k // b + 2, 1, k, b)
+
+    # -- grouped (constrained): vmapped b=1 vs group-blocked engine -------
+    t = _time(lambda: _grouped_gmm_impl(pts, lab_j, m, kprime,
+                                        "euclidean", False)[0])
+    add("grouped-vmap-b1", t, kprime, m, kprime, 1)
+    pp, ll, ch = pad_for_engine(pts, lab_j, chunk)
+    t = _time(lambda: _grouped_select_impl(pp, ll, m, kprime, b, ch,
+                                           "euclidean", False)[0])
+    add("grouped-blocked", t, kprime // b + 2, m, kprime, b)
+
+    return rows
+
+
+def emit_json(rows: List[Dict], path: str = "BENCH_gmm.json") -> Dict:
+    """Write the machine-readable artifact, with headline speedups."""
+    by_path = {r["path"]: r for r in rows}
+    speedups = {}
+    if "gmm-b1" in by_path and "gmm-batched-chunked" in by_path:
+        speedups["batched_vs_b1"] = round(
+            by_path["gmm-b1"]["time_s"]
+            / max(by_path["gmm-batched-chunked"]["time_s"], 1e-9), 2)
+    if "grouped-vmap-b1" in by_path and "grouped-blocked" in by_path:
+        speedups["grouped_blocked_vs_vmap_b1"] = round(
+            by_path["grouped-vmap-b1"]["time_s"]
+            / max(by_path["grouped-blocked"]["time_s"], 1e-9), 2)
+    doc = {
+        "benchmark": "gmm-selection-engine",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "speedups": speedups,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[gmm-engine] wrote {path} (speedups: {speedups})")
+    return doc

@@ -74,6 +74,18 @@ def main(argv=None) -> None:
     print(table(rows, ["path", "m", "k", "k'", "throughput_pts_s"],
                 "Constrained throughput"))
 
+    print("\n" + "=" * 72)
+    print("Selection engine — b=1 vs batched vs group-blocked (BENCH_gmm.json)")
+    print("=" * 72)
+    # bench_constrained.run_grouped_engine measures the same two grouped legs
+    # at the ISSUE-2 acceptance shape; BENCH_gmm.json already carries that
+    # speedup, so only the tracked artifact runs here.
+    from benchmarks import bench_gmm
+    rows = bench_gmm.run(quick=quick)
+    bench_gmm.emit_json(rows, path="BENCH_gmm.json")
+    print(table(rows, ["path", "n", "k", "b", "m", "time_s", "sweeps",
+                       "effective_gbps"], "GMM engine"))
+
     if not args.skip_roofline and os.path.isdir("results"):
         print("\n" + "=" * 72)
         print("§Roofline — dry-run derived terms (TPU v5e model)")

@@ -9,12 +9,33 @@ measures that need the injective proxy, Lemma 2 of the base paper) once per
 group with the group's membership mask, and take the union tagged with group
 labels.
 
-TPU adaptation: the ``m`` per-group GMM runs are ``vmap``-ed over a stacked
-``(m, n)`` mask, so every GMM round costs ONE batched distance computation
-``(m, n)`` instead of ``m`` separate ``(n,)`` sweeps — group fan-out rides the
-same MXU matmul that the unconstrained path uses (``repro.core.gmm`` routes
-through the fused ``||x||² − 2x·c + ||c||²`` update and, on TPU, the Pallas
-pairwise kernels).
+TPU adaptation — the single-sweep selection engine: the ``m`` per-group GMM
+runs advance in lock-step through ``_grouped_select_impl``, the group-blocked
+variant of the batched lookahead-``b`` engine (``core.gmm.gmm_batched``).
+The running-min field is SHARED: a point only ever needs the distance to its
+own group's selected centers (the per-group runs are independent), so the
+field is ``(n,)`` — not ``(m, n)`` — and every round costs one fused pass of
+``n·b·d`` distance work, ``m×`` less than the vmapped formulation.  On the
+jax path each chunk gathers its points' own-group center blocks and extracts
+every group's chunk-local top candidates under the label mask;
+``use_pallas=True`` swaps that sweep for the fused
+``kernels.ops.grouped_gmm_topb`` kernel, where one ``(bn, d) × (m·b, d)``
+MXU matmul per tile serves all ``m`` group masks (flops are free on the MXU;
+HBM traffic is the constraint) — same interface, same selections.
+
+Tuning: ``b`` in 4–16 cuts point-set sweeps from k' to k'/b + 2 at a few-%
+anticover-radius cost (``b=1`` reproduces exact per-group GMM bit-for-bit);
+each sweep oversamples 2b candidates per group and an exact in-block GMM
+keeps the best b.  Caveat: lookahead quality degrades when k' exceeds the
+data's effective cluster count — only each sweep's first pick is exact, so
+the radius falls toward that of exact GMM with k'/b centers; keep b well
+below k'/(#modes) on strongly clustered data.  ``chunk`` (2–8k rows; ragged
+tails are padded with sentinel-labelled rows) sizes the fused tile so the
+point slab plus the min-field stripe stay cache/VMEM-resident.
+
+The legacy vmapped path (``_grouped_gmm_impl``/``_grouped_ext_impl`` — m
+independent b=1 GMM loops under vmap) is retained as the parity oracle for
+tests and benchmarks (``benchmarks.bench_gmm``, ``BENCH_gmm.json``).
 """
 from __future__ import annotations
 
@@ -25,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gmm import _gmm_impl, gmm_ext
+from repro.core.gmm import (_adjust_chunk, _gmm_impl, _pad_to_chunk,
+                            delegates_from_assign, effective_block, gmm_ext)
 from repro.core.measures import NEEDS_INJECTIVE
 from repro.core.metrics import get_metric
 
@@ -57,22 +79,209 @@ class GroupedCoreset(NamedTuple):
         return int(np.asarray(self.valid).sum())
 
 
+def _group_stats(labels, m: int):
+    masks = labels[None, :] == jnp.arange(m, dtype=labels.dtype)[:, None]
+    counts = jnp.sum(masks, axis=1).astype(jnp.int32)
+    starts = jnp.argmax(masks, axis=1).astype(jnp.int32)
+    return masks, counts, starts
+
+
+def pad_for_engine(points, labels, chunk: int):
+    """Snap ``chunk`` to the point count and pad (points, labels) so that it
+    divides n — pad rows carry label -1, which matches no group, so they can
+    never be selected or counted.  Works under tracing (shapes are static).
+
+    ``chunk=0`` defaults to 4096-row tiles (not the whole array): the sweep
+    and the ext assign pass gather per-point center blocks, so an unbounded
+    chunk would materialize an (n, b·d)/(n, k'·d) tile and defeat the
+    engine's cache/VMEM-resident design.  b=1 selection is chunk-invariant
+    (per-chunk top-k + first-max merge == global argmax), so the default
+    only bounds memory, never changes results."""
+    n = points.shape[0]
+    ch = _adjust_chunk(n, chunk or 4096)
+    pad = _pad_to_chunk(n, ch)
+    if pad:
+        points = jnp.pad(points, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    return points, labels, ch
+
+
+# --------------------------------------------------------------------------
+# single-sweep selection engine (group-blocked batched GMM)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "kprime", "b", "chunk",
+                                             "metric_name", "use_pallas"))
+def _grouped_select_impl(points, labels, m: int, kprime: int, b: int,
+                         chunk: int, metric_name: str, use_pallas: bool):
+    """All ``m`` per-group GMM runs in lock-step: one fused sweep per round.
+
+    Returns (idx (m, k'), valid (m, k'), radius (m,), counts (m,),
+    min_dist (n,)).  The running-min field is shared: a point only ever
+    needs the distance to its OWN group's selected centers (the per-group
+    GMM runs are independent), so each sweep costs n·b·d distance work —
+    m× less than the vmapped formulation — and the field is (n,), not
+    (m, n).  ``b=1`` is exact per-group GMM; ``b>1`` is the lookahead-b
+    approximation (kprime must be a multiple of b).
+    """
+    metric = get_metric(metric_name)
+    n, d = points.shape
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+    _, counts, starts = _group_stats(labels, m)
+    rounds = kprime // b
+    # 2× candidate oversampling: each sweep surfaces 2b candidates per group
+    # and the exact in-block GMM keeps the best b — recovers most of the
+    # fidelity a larger block loses, at zero extra point-set sweeps.
+    p = min(2 * b, n) if b > 1 else 1
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        def sweep(min_dist, centers):
+            return kops.grouped_gmm_topb(points, centers, min_dist, labels,
+                                         metric_name, p)
+    else:
+        nch = n // chunk
+        gids = jnp.arange(m, dtype=labels.dtype)[:, None]
+        safe_lab = jnp.clip(labels, 0, m - 1)     # pad rows (-1) -> any group
+
+        def sweep(min_dist, centers):
+            """One fused pass for all groups: each point gathers its own
+            group's bc-center block ((chunk, bc, d) — n·bc·d distance work
+            total), updates the shared running-min field, and every group's
+            chunk-local top-p is extracted under its label mask; the
+            (n, m·bc) distance matrix never exists."""
+
+            def chunk_fn(c):
+                x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+                lb = jax.lax.dynamic_slice(labels, (c * chunk,), (chunk,))
+                sl = jax.lax.dynamic_slice(safe_lab, (c * chunk,), (chunk,))
+                md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
+                cen = centers[sl]                         # (chunk, bc, d)
+                dist = jax.vmap(metric.point_to_set)(cen, x)   # (chunk, bc)
+                new_md = jnp.minimum(md, jnp.min(dist, axis=1))
+                masked = jnp.where(lb[None, :] == gids, new_md[None, :],
+                                   neg_inf)               # (m, chunk)
+                cd, ci = jax.lax.top_k(masked, min(p, chunk))   # (m, p)
+                return new_md, cd, (ci + c * chunk).astype(jnp.int32)
+
+            new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
+            pc = cd.shape[2]
+            min_dist = new_md.reshape(n)
+            flat_d = jnp.moveaxis(cd, 0, 1).reshape(m, nch * pc)
+            flat_i = jnp.moveaxis(ci, 0, 1).reshape(m, nch * pc)
+            sel_d, sel = jax.lax.top_k(flat_d, min(p, nch * pc))  # merge
+            return min_dist, sel_d, jnp.take_along_axis(flat_i, sel, axis=1)
+
+    def inblock(cand_d, cand_i, take):
+        """Exact local GMM over each group's candidate pool (vmapped; p×p):
+        greedily pick ``take`` of the p candidates, correcting for mutual
+        distances within the pool."""
+        def one(cd, ci):
+            def pick(j, carry):
+                cd, chosen = carry
+                s = jnp.argmax(cd)
+                chosen = chosen.at[j].set(ci[s])
+                dd = metric.point_to_set(points[ci], points[ci[s]])
+                cd = jnp.minimum(cd, dd).at[s].set(neg_inf)
+                return cd, chosen
+
+            _, chosen = jax.lax.fori_loop(
+                0, take, pick, (cd, jnp.zeros((take,), jnp.int32)))
+            return chosen
+
+        return jax.vmap(one)(cand_d, cand_i)
+
+    idx = jnp.zeros((m, kprime), jnp.int32).at[:, 0].set(starts)
+    min0 = jnp.full((n,), jnp.inf, jnp.float32)
+    if b > 1:
+        # block 0: sweep the seeds once, then lookahead-fill slots 1..b-1
+        # (greedy over the top-p-from-seed candidates, exact within the pool)
+        min_dist, cand_d, cand_i = sweep(min0, points[starts][:, None, :])
+        chosen = inblock(cand_d, cand_i, b)
+        idx = idx.at[:, 1:b].set(chosen[:, :b - 1])
+    else:
+        min_dist = min0  # body's first sweep covers the seed
+
+    def body(r, state):
+        min_dist, idx = state
+        prev = jax.lax.dynamic_slice(idx, (0, (r - 1) * b), (m, b))
+        min_dist, cand_d, cand_i = sweep(min_dist, points[prev])
+        idx = jax.lax.dynamic_update_slice(idx, inblock(cand_d, cand_i, b),
+                                           (0, r * b))
+        return min_dist, idx
+
+    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx))
+    # final sweep: fold the last block into the field; its per-group masked
+    # max IS the anticover radius r_T
+    last = jax.lax.dynamic_slice(idx, (0, (rounds - 1) * b), (m, b))
+    min_dist, cand_d, _ = sweep(min_dist, points[last])
+    radius = jnp.where(counts > 0, jnp.maximum(cand_d[:, 0], 0.0), 0.0)
+    # a group with c < k' members yields duplicate selections at the tail;
+    # slots >= c are marked invalid (greedy exhausts distinct points first)
+    valid = jnp.arange(kprime)[None, :] < jnp.minimum(counts, kprime)[:, None]
+    return idx, valid, radius, counts, min_dist
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "b", "chunk",
+                                             "metric_name", "use_pallas"))
+def _grouped_ext_blocked_impl(points, labels, m: int, k: int, kprime: int,
+                              b: int, chunk: int, metric_name: str,
+                              use_pallas: bool):
+    """Grouped GMM-EXT on the single-sweep engine: blocked selection, then ONE
+    chunked fused pass recovers every point's nearest OWN-group kernel center
+    (a (chunk, k', d) gathered tile — n·k'·d work, m× less than the all-group
+    sweep, and the (n, m·k') matrix never exists), then the shared delegate
+    extraction runs per group (out-of-group rows are masked to the sentinel
+    cluster there, so the single shared assignment serves every group)."""
+    metric = get_metric(metric_name)
+    n, d = points.shape
+    idx, _, radius, counts, _ = _grouped_select_impl(
+        points, labels, m, kprime, b, chunk, metric_name, use_pallas)
+    masks, _, _ = _group_stats(labels, m)
+
+    centers3 = points[idx]                                    # (m, k', d)
+    safe_lab = jnp.clip(labels, 0, m - 1)
+    nch = n // chunk
+
+    def chunk_fn(c):
+        x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+        sl = jax.lax.dynamic_slice(safe_lab, (c * chunk,), (chunk,))
+        cen = centers3[sl]                                    # (chunk, k', d)
+        dist = jax.vmap(metric.point_to_set)(cen, x)          # (chunk, k')
+        return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+    assign = jax.lax.map(chunk_fn, jnp.arange(nch)).reshape(n)
+
+    def one(idx_g, mask_g):
+        cand, valid, _, _ = delegates_from_assign(idx_g, assign, mask_g,
+                                                  k, kprime)
+        return cand.reshape(-1), valid.reshape(-1)
+
+    didx, dvalid = jax.vmap(one)(idx, masks)                  # (m, k'*k)
+    # an empty group contributes nothing (the center-forcing step in the
+    # delegate extraction would otherwise fabricate one spurious delegate)
+    dvalid = dvalid & (counts > 0)[:, None]
+    return didx, dvalid, radius, counts
+
+
+# --------------------------------------------------------------------------
+# legacy vmapped path — m independent b=1 GMM loops; parity oracle for tests
+# and the baseline leg of benchmarks/bench_constrained.run_grouped_engine
+# --------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("m", "kprime", "metric_name",
                                              "use_pallas"))
 def _grouped_gmm_impl(points, labels, m: int, kprime: int, metric_name: str,
                       use_pallas: bool):
+    _, counts, starts = _group_stats(labels, m)
     masks = labels[None, :] == jnp.arange(m, dtype=labels.dtype)[:, None]
-    counts = jnp.sum(masks, axis=1).astype(jnp.int32)
-    starts = jnp.argmax(masks, axis=1).astype(jnp.int32)
 
     def one(mask, start):
         res = _gmm_impl(points, mask, start, kprime, metric_name, use_pallas)
         return res.idx, res.radius
 
     idx, radius = jax.vmap(one)(masks, starts)            # (m, k'), (m,)
-    # a group with c < k' members yields k' - c duplicate selections at the
-    # tail; slots >= c are marked invalid (greedy exhausts distinct points
-    # first — any remaining max has distance 0).
     valid = jnp.arange(kprime)[None, :] < jnp.minimum(counts, kprime)[:, None]
     radius = jnp.where(counts > 0, radius, 0.0)
     return idx, valid, radius, counts
@@ -97,15 +306,26 @@ def _grouped_ext_impl(points, labels, m: int, k: int, kprime: int,
     return idx, valid, radius, counts
 
 
+# --------------------------------------------------------------------------
+# public builder + end-to-end driver
+# --------------------------------------------------------------------------
+
 def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
                     measure: str = "remote-edge", metric="euclidean",
-                    use_pallas: bool = False) -> GroupedCoreset:
+                    use_pallas: bool = False, b: int = 1,
+                    chunk: int = 0) -> GroupedCoreset:
     """Build the union-of-per-group core-sets for a partition matroid.
 
     ``labels`` is an ``(n,)`` int array in ``[0, m)``.  Each group contributes
     a core-set of size ``min(kprime, |group|)`` (plus delegates for the
     clique-type measures); empty groups contribute nothing and must carry a
     zero quota downstream.
+
+    All paths run on the single-sweep engine (see module docstring): ``b=1``
+    (default) is exact per-group GMM, ``b>1`` enables lookahead-b center
+    blocking (b is snapped to a divisor of ``kprime``), ``chunk`` sizes the
+    fused sweep tile, and ``use_pallas=True`` uses the group-blocked Pallas
+    kernel for the sweep.
     """
     points = jnp.asarray(points)
     labels = jnp.asarray(labels, jnp.int32)
@@ -115,12 +335,14 @@ def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
     if not 1 <= kprime <= n:
         raise ValueError(f"kprime={kprime} out of range for n={n}")
     metric_name = get_metric(metric).name
+    b = effective_block(kprime, b)
+    points, labels, chunk = pad_for_engine(points, labels, chunk)
     if measure in NEEDS_INJECTIVE:
-        idx, valid, radius, counts = _grouped_ext_impl(
-            points, labels, m, k, kprime, metric_name, use_pallas)
+        idx, valid, radius, counts = _grouped_ext_blocked_impl(
+            points, labels, m, k, kprime, b, chunk, metric_name, use_pallas)
     else:
-        idx, valid, radius, counts = _grouped_gmm_impl(
-            points, labels, m, kprime, metric_name, use_pallas)
+        idx, valid, radius, counts, _ = _grouped_select_impl(
+            points, labels, m, kprime, b, chunk, metric_name, use_pallas)
     return GroupedCoreset(idx=idx, valid=valid, radius=radius,
                           group_count=counts)
 
@@ -128,12 +350,14 @@ def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
 def fair_diversity_maximize(points, labels, quotas,
                             measure: str = "remote-edge", *,
                             kprime: Optional[int] = None, metric="euclidean",
-                            use_pallas: bool = False, swap_rounds: int = 10):
+                            use_pallas: bool = False, swap_rounds: int = 10,
+                            b: int = 1, chunk: int = 0):
     """End-to-end single-machine constrained pipeline: per-group core-set →
     feasible-greedy + local-search solve on the union.
 
     Returns (indices (k,) into ``points`` honoring the quotas exactly, value,
-    GroupedCoreset).
+    GroupedCoreset).  ``b``/``chunk`` tune the selection engine (see
+    ``grouped_coreset``).
     """
     from .solver import solve_and_value
 
@@ -146,7 +370,8 @@ def fair_diversity_maximize(points, labels, quotas,
         kprime = max(2 * k, 32)
     kprime = min(kprime, pts.shape[0])
     cs = grouped_coreset(pts, labels_np, m, k, kprime, measure=measure,
-                         metric=metric, use_pallas=use_pallas)
+                         metric=metric, use_pallas=use_pallas, b=b,
+                         chunk=chunk)
     cand_idx, cand_labels = cs.flatten()
     sel, value = solve_and_value(pts[cand_idx], cand_labels, quotas, measure,
                                  metric=metric, swap_rounds=swap_rounds)

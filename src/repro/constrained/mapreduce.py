@@ -32,7 +32,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.measures import NEEDS_INJECTIVE
 from repro.core.metrics import get_metric
 
-from .coreset import _grouped_ext_impl, _grouped_gmm_impl
+from repro.core.gmm import effective_block
+
+from .coreset import (_grouped_ext_blocked_impl, _grouped_select_impl,
+                      pad_for_engine)
 from .solver import solve_and_value
 
 
@@ -54,15 +57,19 @@ class FairCoreset(NamedTuple):
 
 
 def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
-            mode: str, use_pallas: bool):
-    """Per-reducer body: vmapped per-group core-set of the local shard.
-    Returns (pts (m*s, d), labels (m*s,), valid (m*s,), radius ())."""
+            mode: str, use_pallas: bool, b: int = 1, chunk: int = 0):
+    """Per-reducer body: group-blocked per-group core-set of the local shard
+    on the single-sweep engine (one fused sweep per round for all m groups;
+    see ``constrained.coreset``).  Returns (pts (m*s, d), labels (m*s,),
+    valid (m*s,), radius ())."""
+    b = effective_block(kprime, b)
+    shard_p, lab_p, chunk = pad_for_engine(shard, lab, chunk)
     if mode == "ext":
-        idx, valid, radius, _ = _grouped_ext_impl(shard, lab, m, k, kprime,
-                                                  metric_name, use_pallas)
+        idx, valid, radius, _ = _grouped_ext_blocked_impl(
+            shard_p, lab_p, m, k, kprime, b, chunk, metric_name, use_pallas)
     else:
-        idx, valid, radius, _ = _grouped_gmm_impl(shard, lab, m, kprime,
-                                                  metric_name, use_pallas)
+        idx, valid, radius, _, _ = _grouped_select_impl(
+            shard_p, lab_p, m, kprime, b, chunk, metric_name, use_pallas)
     s = idx.shape[1]
     pts = shard[idx.reshape(-1)]
     glab = jnp.repeat(jnp.arange(m, dtype=jnp.int32), s)
@@ -72,8 +79,8 @@ def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
 def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
                        measure: str, mesh: Mesh, *,
                        data_axes: Sequence[str] = ("data",),
-                       metric="euclidean",
-                       use_pallas: bool = False) -> FairCoreset:
+                       metric="euclidean", use_pallas: bool = False,
+                       b: int = 1, chunk: int = 0) -> FairCoreset:
     """2-round MR fair core-set on a mesh: ``points (n, d)`` and ``labels
     (n,)`` are sharded over ``data_axes``; returns the replicated union."""
     from repro.compat import shard_map
@@ -88,7 +95,8 @@ def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
 
     def body(shard, lab):
         pts, glab, valid, radius = _round1(shard, lab, m, k, kprime,
-                                           metric_name, mode, use_pallas)
+                                           metric_name, mode, use_pallas,
+                                           b, chunk)
         g_pts = jax.lax.all_gather(pts, axes, tiled=True)
         g_lab = jax.lax.all_gather(glab, axes, tiled=True)
         g_valid = jax.lax.all_gather(valid, axes, tiled=True)
@@ -106,7 +114,8 @@ def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
 def mr_fair_diversity(points, labels, quotas, measure: str, mesh: Mesh, *,
                       kprime: Optional[int] = None,
                       data_axes: Sequence[str] = ("data",), metric="euclidean",
-                      use_pallas: bool = False, swap_rounds: int = 10):
+                      use_pallas: bool = False, swap_rounds: int = 10,
+                      b: int = 1, chunk: int = 0):
     """Full constrained pipeline on a mesh.
 
     Returns (solution_points (k, d), solution_labels (k,), value)."""
@@ -117,7 +126,7 @@ def mr_fair_diversity(points, labels, quotas, measure: str, mesh: Mesh, *,
         kprime = max(2 * k, 32)
     cs = mr_grouped_coreset(points, labels, m, k, kprime, measure, mesh,
                             data_axes=data_axes, metric=metric,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas, b=b, chunk=chunk)
     cand_pts, cand_lab = cs.compact()
     sel, value = solve_and_value(cand_pts, cand_lab, quotas, measure,
                                  metric=metric, swap_rounds=swap_rounds)
@@ -129,11 +138,11 @@ def mr_fair_diversity(points, labels, quotas, measure: str, mesh: Mesh, *,
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "metric_name",
-                                             "mode"))
+                                             "mode", "b", "chunk"))
 def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
-                metric_name: str, mode: str):
+                metric_name: str, mode: str, b: int = 1, chunk: int = 0):
     def one(s, sl):
-        return _round1(s, sl, m, k, kprime, metric_name, mode, False)
+        return _round1(s, sl, m, k, kprime, metric_name, mode, False, b, chunk)
 
     return jax.vmap(one)(shards, slabels)
 
@@ -142,7 +151,7 @@ def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
                      measure: str = "remote-edge",
                      kprime: Optional[int] = None, metric="euclidean",
                      partition: str = "contiguous", seed: int = 0,
-                     swap_rounds: int = 10):
+                     swap_rounds: int = 10, b: int = 1, chunk: int = 0):
     """Simulate the ℓ-reducer 2-round constrained MR run on one device.
 
     Returns (solution_points, solution_labels, value).  ``partition`` follows
@@ -162,7 +171,8 @@ def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
     g_pts, g_lab, g_valid, g_rad = _sim_round1(shards, slabels, m, k, kprime,
-                                               get_metric(metric).name, mode)
+                                               get_metric(metric).name, mode,
+                                               b, chunk)
     flat_pts = np.asarray(g_pts.reshape(-1, d))
     flat_lab = np.asarray(g_lab.reshape(-1))
     flat_valid = np.asarray(g_valid.reshape(-1))

@@ -1,7 +1,8 @@
 """Core library: the paper's diversity-maximization machinery in JAX."""
 from .coreset import (Coreset, GeneralizedCoreset, build_coreset,
                       coreset_from_points, diversity_maximize)
-from .gmm import GMMExtResult, GMMResult, gmm, gmm_ext, gmm_gen
+from .gmm import (GMMExtResult, GMMResult, effective_block, gmm, gmm_batched,
+                  gmm_ext, gmm_gen)
 from .measures import (MEASURES, NEEDS_INJECTIVE, brute_force_opt, diversity,
                        diversity_of_subset)
 from .metrics import Metric, get_metric, register_metric
@@ -10,8 +11,9 @@ from .smm import SMMState, StreamingCoreset
 
 __all__ = [
     "Coreset", "GeneralizedCoreset", "build_coreset", "coreset_from_points",
-    "diversity_maximize", "GMMResult", "GMMExtResult", "gmm", "gmm_ext",
-    "gmm_gen", "MEASURES", "NEEDS_INJECTIVE", "brute_force_opt", "diversity",
+    "diversity_maximize", "GMMResult", "GMMExtResult", "effective_block",
+    "gmm", "gmm_batched", "gmm_ext", "gmm_gen",
+    "MEASURES", "NEEDS_INJECTIVE", "brute_force_opt", "diversity",
     "diversity_of_subset", "Metric", "get_metric", "register_metric",
     "SEQ_ALPHA", "instantiate", "solve", "solve_on_coreset", "SMMState",
     "StreamingCoreset",

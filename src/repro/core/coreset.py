@@ -58,36 +58,50 @@ def coreset_from_points(points, weights=None) -> Coreset:
 
 def build_coreset(points, k: int, kprime: int, measure: str, *,
                   metric="euclidean", use_pallas: bool = False,
-                  generalized: bool = False):
+                  generalized: bool = False, b: int = 1, chunk: int = 0):
     """Sequential (single-partition) core-set per the paper's recipe:
 
     * remote-edge / remote-cycle  -> GMM(S, k')            (Thm 4)
     * the other four              -> GMM-EXT(S, k, k')     (Thm 5)
     * generalized=True            -> GMM-GEN(S, k, k')     (Thm 10)
+
+    ``b``/``chunk`` select the batched lookahead-b engine (``gmm_batched``)
+    instead of the one-center-per-sweep loop; ``b`` is snapped to a divisor
+    of ``kprime``.
     """
-    from repro.core.gmm import gmm as _gmm, gmm_ext as _gmm_ext, gmm_gen as _gmm_gen
+    from repro.core.gmm import (effective_block, gmm as _gmm, gmm_batched,
+                                gmm_ext as _gmm_ext, gmm_gen as _gmm_gen)
     from .measures import NEEDS_INJECTIVE
 
     points = jnp.asarray(points)
     if generalized:
-        return _gmm_gen(points, k, kprime, metric=metric, use_pallas=use_pallas)
+        return _gmm_gen(points, k, kprime, metric=metric,
+                        use_pallas=use_pallas, b=b, chunk=chunk)
     if measure in NEEDS_INJECTIVE:
-        ext = _gmm_ext(points, k, kprime, metric=metric, use_pallas=use_pallas)
+        ext = _gmm_ext(points, k, kprime, metric=metric, use_pallas=use_pallas,
+                       b=b, chunk=chunk)
         kp, kk = ext.delegate_idx.shape
         flat_idx = ext.delegate_idx.reshape(-1)
         flat_valid = ext.delegate_valid.reshape(-1)
         pts = points[flat_idx]
         return Coreset(points=pts, valid=flat_valid,
                        weights=flat_valid.astype(jnp.int32), radius=ext.radius)
-    res = _gmm(points, kprime, metric=metric, use_pallas=use_pallas)
-    pts = points[res.idx]
+    b = effective_block(kprime, b)
+    if b > 1 or chunk:
+        idx, radius, _ = gmm_batched(points, kprime, b=b, metric=metric,
+                                     chunk=chunk, use_pallas=use_pallas)
+    else:
+        res = _gmm(points, kprime, metric=metric, use_pallas=use_pallas)
+        idx, radius = res.idx, res.radius
+    pts = points[idx]
     n = pts.shape[0]
     return Coreset(points=pts, valid=jnp.ones((n,), bool),
-                   weights=jnp.ones((n,), jnp.int32), radius=res.radius)
+                   weights=jnp.ones((n,), jnp.int32), radius=radius)
 
 
 def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = None,
-                       metric="euclidean", use_pallas: bool = False):
+                       metric="euclidean", use_pallas: bool = False,
+                       b: int = 1, chunk: int = 0):
     """End-to-end: core-set + sequential α-approx solver.
 
     Returns (solution_points (k,d) ndarray, value, coreset).
@@ -100,7 +114,7 @@ def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = 
         kprime = max(2 * k, 32)
     kprime = min(kprime, int(np.asarray(points).shape[0]))
     cs = build_coreset(points, k, kprime, measure, metric=metric,
-                       use_pallas=use_pallas)
+                       use_pallas=use_pallas, b=b, chunk=chunk)
     sol = solve_on_coreset(cs, k, measure, metric=metric)
     m = get_metric(metric)
     dm = np.asarray(m.pairwise(jnp.asarray(sol), jnp.asarray(sol)))

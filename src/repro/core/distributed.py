@@ -29,7 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.gmm import gmm as _gmm, gmm_ext as _gmm_ext, gmm_gen as _gmm_gen
+from repro.core.gmm import (effective_block as _effective_block, gmm as _gmm,
+                            gmm_batched, gmm_ext as _gmm_ext,
+                            gmm_gen as _gmm_gen)
 from .coreset import Coreset, GeneralizedCoreset
 from .measures import NEEDS_INJECTIVE, diversity
 from .metrics import get_metric
@@ -40,20 +42,27 @@ from .sequential import instantiate, solve, solve_on_coreset
 # round 1 bodies (run per shard)
 # --------------------------------------------------------------------------
 
-def _local_coreset_plain(shard, kprime, metric, use_pallas):
+def _local_coreset_plain(shard, kprime, metric, use_pallas, b=1, chunk=0):
+    b = _effective_block(kprime, b)
+    if b > 1 or chunk:
+        idx, radius, _ = gmm_batched(shard, kprime, b=b, metric=metric,
+                                     chunk=chunk, use_pallas=use_pallas)
+        return shard[idx], radius
     res = _gmm(shard, kprime, metric=metric, use_pallas=use_pallas)
     return shard[res.idx], res.radius
 
 
-def _local_coreset_ext(shard, k, kprime, metric, use_pallas):
-    ext = _gmm_ext(shard, k, kprime, metric=metric, use_pallas=use_pallas)
+def _local_coreset_ext(shard, k, kprime, metric, use_pallas, b=1, chunk=0):
+    ext = _gmm_ext(shard, k, kprime, metric=metric, use_pallas=use_pallas,
+                   b=b, chunk=chunk)
     pts = shard[ext.delegate_idx.reshape(-1)]
     valid = ext.delegate_valid.reshape(-1)
     return pts, valid, ext.radius
 
 
-def _local_coreset_gen(shard, k, kprime, metric, use_pallas):
-    gen = _gmm_gen(shard, k, kprime, metric=metric, use_pallas=use_pallas)
+def _local_coreset_gen(shard, k, kprime, metric, use_pallas, b=1, chunk=0):
+    gen = _gmm_gen(shard, k, kprime, metric=metric, use_pallas=use_pallas,
+                   b=b, chunk=chunk)
     return gen.points, gen.multiplicity, gen.radius
 
 
@@ -63,10 +72,12 @@ def _local_coreset_gen(shard, k, kprime, metric, use_pallas):
 
 def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
                *, data_axes: Sequence[str] = ("data",), metric="euclidean",
-               use_pallas: bool = False, generalized: bool = False):
+               use_pallas: bool = False, generalized: bool = False,
+               b: int = 1, chunk: int = 0):
     """2-round MR core-set on a mesh.  ``points`` is globally (n, d) and gets
     sharded over ``data_axes``; returns a replicated Coreset/GeneralizedCoreset
-    for the union T = ∪ T_i."""
+    for the union T = ∪ T_i.  ``b``/``chunk`` tune the per-reducer selection
+    engine (lookahead-b batched GMM; see ``core.gmm.gmm_batched``)."""
     from repro.compat import shard_map
 
     axes = tuple(data_axes)
@@ -78,7 +89,7 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
     if generalized:
         def body(shard):
             pts, mult, radius = _local_coreset_gen(shard, k, kprime, metric,
-                                                   use_pallas)
+                                                   use_pallas, b, chunk)
             g_pts = jax.lax.all_gather(pts, axes, tiled=True)
             g_mult = jax.lax.all_gather(mult, axes, tiled=True)
             g_rad = jax.lax.pmax(radius, axes)
@@ -93,7 +104,7 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
     if measure in NEEDS_INJECTIVE:
         def body(shard):
             pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
-                                                    use_pallas)
+                                                    use_pallas, b, chunk)
             g_pts = jax.lax.all_gather(pts, axes, tiled=True)
             g_valid = jax.lax.all_gather(valid, axes, tiled=True)
             g_rad = jax.lax.pmax(radius, axes)
@@ -106,7 +117,8 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
                        weights=g_valid.astype(jnp.int32), radius=g_rad)
 
     def body(shard):
-        pts, radius = _local_coreset_plain(shard, kprime, metric, use_pallas)
+        pts, radius = _local_coreset_plain(shard, kprime, metric, use_pallas,
+                                           b, chunk)
         g_pts = jax.lax.all_gather(pts, axes, tiled=True)
         g_rad = jax.lax.pmax(radius, axes)
         return g_pts, g_rad
@@ -122,7 +134,8 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
 def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
                  kprime: Optional[int] = None,
                  data_axes: Sequence[str] = ("data",), metric="euclidean",
-                 use_pallas: bool = False, three_round: bool = False):
+                 use_pallas: bool = False, three_round: bool = False,
+                 b: int = 1, chunk: int = 0):
     """Full pipeline: 2-round (Thm 6) or 3-round generalized (Thm 10).
 
     Returns (solution_points (k,d), value)."""
@@ -130,12 +143,13 @@ def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
         kprime = max(2 * k, 32)
     if not three_round:
         cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
-                        metric=metric, use_pallas=use_pallas)
+                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk)
         sol = solve_on_coreset(cs, k, measure, metric=metric)
     else:
         gen = mr_coreset(points, k, kprime, measure, mesh,
                          data_axes=data_axes, metric=metric,
-                         use_pallas=use_pallas, generalized=True)
+                         use_pallas=use_pallas, generalized=True,
+                         b=b, chunk=chunk)
         pts, mult = gen.compact()
         idx = solve(measure, pts, k, weights=mult, metric=metric)
         uniq, counts = np.unique(idx, return_counts=True)
@@ -148,7 +162,8 @@ def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
 
 
 def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
-                         *, metric="euclidean", use_pallas: bool = False):
+                         *, metric="euclidean", use_pallas: bool = False,
+                         b: int = 1, chunk: int = 0):
     """Thm 8: two-level reduction — per-device core-sets over ``data``,
     re-contracted over ``pod`` (requires a ('pod','data',...) mesh)."""
     from repro.compat import shard_map
@@ -160,11 +175,11 @@ def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
     def body(shard):
         if ext:
             pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
-                                                    use_pallas)
+                                                    use_pallas, b, chunk)
             mask = valid
         else:
             pts, radius = _local_coreset_plain(shard, kprime, metric,
-                                               use_pallas)
+                                               use_pallas, b, chunk)
             mask = jnp.ones((pts.shape[0],), bool)
         # level 1: union within pod
         pod_pts = jax.lax.all_gather(pts, "data", tiled=True)
@@ -225,20 +240,23 @@ def partition_shards(points, num_reducers: int, *, partition: str = "contiguous"
                                                                per))
     return pts, shards, slabels
 
-@functools.partial(jax.jit, static_argnames=("k", "kprime", "metric", "mode"))
-def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str):
+@functools.partial(jax.jit, static_argnames=("k", "kprime", "metric", "mode",
+                                             "b", "chunk"))
+def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str,
+                b: int = 1, chunk: int = 0):
     if mode == "plain":
         def one(s):
-            res = _gmm(s, kprime, metric=metric)
-            return s[res.idx], jnp.ones((kprime,), bool), res.radius
+            pts, radius = _local_coreset_plain(s, kprime, metric, False,
+                                               b, chunk)
+            return pts, jnp.ones((kprime,), bool), radius
     elif mode == "ext":
         def one(s):
-            ext = _gmm_ext(s, k, kprime, metric=metric)
+            ext = _gmm_ext(s, k, kprime, metric=metric, b=b, chunk=chunk)
             return (s[ext.delegate_idx.reshape(-1)],
                     ext.delegate_valid.reshape(-1), ext.radius)
     else:  # gen
         def one(s):
-            g = _gmm_gen(s, k, kprime, metric=metric)
+            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk)
             return g.points, g.multiplicity > 0, g.radius
 
     return jax.vmap(one)(shards)
@@ -247,7 +265,7 @@ def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str):
 def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
                 kprime: Optional[int] = None, metric="euclidean",
                 generalized: bool = False, partition: str = "contiguous",
-                seed: int = 0):
+                seed: int = 0, b: int = 1, chunk: int = 0):
     """Simulate the ℓ-reducer 2-round MR run on one device (vmap over shards).
 
     ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
@@ -261,7 +279,8 @@ def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")
-    g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric, mode)
+    g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric, mode,
+                                        b, chunk)
     flat_pts = g_pts.reshape(-1, d)
     flat_valid = g_valid.reshape(-1)
     radius = jnp.max(g_rad)
@@ -269,7 +288,7 @@ def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
     if generalized:
         # rerun per-shard to obtain integer multiplicities
         def one(s):
-            g = _gmm_gen(s, k, kprime, metric=metric)
+            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk)
             return g.points, g.multiplicity, g.radius
         gp, gm, gr = jax.jit(jax.vmap(one))(shards)
         gen = GeneralizedCoreset(points=gp.reshape(-1, d),

@@ -9,8 +9,20 @@ local point set — distance to the newest center, running min, and argmax are
 fused so HBM traffic is one read of ``points`` per round.  The distance uses the
 ``||x||² − 2x·c + ||c||²`` factorization so the bulk lands on the MXU as a
 matmul when centers are blocked.  ``use_pallas=True`` routes the inner update
-through the Pallas kernel (``repro.kernels.ops.gmm_update``); the default pure
-lax path lowers to the same fused HLO and is what the CPU test-suite exercises.
+through the Pallas kernels (``repro.kernels.ops.gmm_update`` for b=1,
+``ops.gmm_topb`` for the batched engine); the default pure lax path lowers to
+the same fused HLO and is what the CPU test-suite exercises.
+
+Single-sweep selection engine: ``gmm_batched`` (lookahead-``b`` center
+blocking + chunk fusion) is the shared engine behind every core-set path —
+``gmm_ext``/``gmm_gen`` here, the MapReduce reducers
+(``core.distributed``, ``constrained.mapreduce``) and the grouped
+(partition-matroid) builder (``constrained.coreset``) all take ``b``/``chunk``
+knobs that bottom out in it.  Tuning guidance: ``b`` in 4–16 cuts the number
+of point-set sweeps ~b× at a few-% anticover-radius cost (b=1 is exact
+sequential GMM); ``chunk`` sizes the fused tile of the jax-level sweep
+(2–8k rows; it is snapped down to divide n) and is ignored when the Pallas
+kernel supplies the tiling.
 
 All shapes are static; invalid points are handled with ``mask`` (their distance
 is pinned to −inf so they are never selected and never win an argmax).
@@ -159,37 +171,46 @@ def _gmm_batched_impl(points, mask, start, k: int, b: int, metric_name: str):
     return idx, radius, min_dist
 
 
-@functools.partial(jax.jit, static_argnames=("k", "b", "chunk", "metric_name"))
+@functools.partial(jax.jit, static_argnames=("k", "b", "chunk", "metric_name",
+                                             "use_pallas"))
 def _gmm_batched_chunked_impl(points, mask, start, k: int, b: int, chunk: int,
-                              metric_name: str):
+                              metric_name: str, use_pallas: bool = False):
     """Chunk-fused batched GMM: per sweep, each point chunk computes its
     distance block, running-min update and LOCAL top-b in one pass — the
-    (n, b) distance matrix and the global sort never reach HBM (this is the
-    jax-level expression of the Pallas gmm_update kernel's fusion; see
-    EXPERIMENTS.md §Perf iteration 3)."""
+    (n, b) distance matrix and the global sort never reach HBM.  This is the
+    jax-level expression of the Pallas ``gmm_topb`` kernel's fusion;
+    ``use_pallas=True`` swaps the lax.map sweep for that kernel (identical
+    interface: the kernel grid replaces the chunk loop)."""
     metric = get_metric(metric_name)
     n, d = points.shape
-    nch = n // chunk
     neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
     rounds = k // b
 
-    def sweep(min_dist, centers):
-        """One fused pass: returns (new min_dist, cand_d (b,), cand_i (b,))."""
-        def chunk_fn(c):
-            x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
-            md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
-            mk = jax.lax.dynamic_slice(mask, (c * chunk,), (chunk,))
-            dist = metric.pairwise(x, centers)            # (chunk, b)
-            new_md = jnp.minimum(md, jnp.min(dist, axis=1))
-            masked = jnp.where(mk, new_md, neg_inf)
-            cd, ci = jax.lax.top_k(masked, b)
-            return new_md, cd, (ci + c * chunk).astype(jnp.int32)
+    if use_pallas:
+        from repro.kernels import ops as kops
 
-        new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
-        min_dist = new_md.reshape(n)
-        flat_d, flat_i = cd.reshape(-1), ci.reshape(-1)
-        sel_d, sel = jax.lax.top_k(flat_d, b)             # (nch*b,) — tiny
-        return min_dist, sel_d, flat_i[sel]
+        def sweep(min_dist, centers):
+            return kops.gmm_topb(points, centers, min_dist, mask, metric_name)
+    else:
+        nch = n // chunk
+
+        def sweep(min_dist, centers):
+            """One fused pass: (new min_dist, cand_d (b,), cand_i (b,))."""
+            def chunk_fn(c):
+                x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+                md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
+                mk = jax.lax.dynamic_slice(mask, (c * chunk,), (chunk,))
+                dist = metric.pairwise(x, centers)            # (chunk, b)
+                new_md = jnp.minimum(md, jnp.min(dist, axis=1))
+                masked = jnp.where(mk, new_md, neg_inf)
+                cd, ci = jax.lax.top_k(masked, min(b, chunk))
+                return new_md, cd, (ci + c * chunk).astype(jnp.int32)
+
+            new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
+            min_dist = new_md.reshape(n)
+            flat_d, flat_i = cd.reshape(-1), ci.reshape(-1)
+            sel_d, sel = jax.lax.top_k(flat_d, b)             # (nch*b,) — tiny
+            return min_dist, sel_d, flat_i[sel]
 
     def inblock(cand_d, cand_i):
         """Exact local GMM over the b candidates."""
@@ -230,8 +251,31 @@ def _gmm_batched_chunked_impl(points, mask, start, k: int, b: int, chunk: int,
     return idx, radius, min_dist
 
 
+def effective_block(k: int, b: int) -> int:
+    """Largest selection-block size <= b that divides k (the engines select
+    whole center blocks, so k must split into blocks; gcd keeps the caller's
+    intent while staying exact on the block structure)."""
+    import math
+    if b <= 1:
+        return 1
+    return b if k % b == 0 else math.gcd(k, b)
+
+
+def _adjust_chunk(n: int, chunk: int) -> int:
+    """Clamp a chunk knob to the point count (0 -> whole array).  Ragged
+    tails are handled by padding (``_pad_to_chunk``), not by shrinking."""
+    if not chunk:
+        return n
+    return max(min(chunk, n), 1)
+
+
+def _pad_to_chunk(n: int, chunk: int):
+    """Rows of padding needed so chunk divides the point count."""
+    return -(-n // chunk) * chunk - n
+
+
 def gmm_batched(points, k: int, *, b: int = 8, metric="euclidean", mask=None,
-                start=0, chunk: int = 0):
+                start=0, chunk: int = 0, use_pallas: bool = False):
     """Batched GMM (beyond-paper optimization, EXPERIMENTS.md §Perf).
 
     Sequential GMM sweeps the point set once per center — arithmetic
@@ -242,7 +286,15 @@ def gmm_batched(points, k: int, *, b: int = 8, metric="euclidean", mask=None,
     farthest-point field changes rank order mid-block (tests show the
     anticover radius within a few % of exact on benchmark distributions).
 
-    k must be a multiple of b.
+    Tuning: ``b`` trades HBM traffic for selection fidelity — 4–16 is the
+    sweet spot (b=1 degrades to exact sequential GMM).  ``chunk`` bounds the
+    per-sweep working set of the jax-level fused path; pick it so a
+    (chunk, b) tile plus a (chunk, d) point slab stays cache/VMEM-resident
+    (2–8k rows typically).  ``use_pallas=True`` swaps the chunked sweep for
+    the fused ``gmm_topb`` kernel (chunking then happens in the kernel grid
+    and ``chunk`` is ignored).
+
+    k must be a multiple of b (use ``effective_block`` to snap a knob).
     """
     points = jnp.asarray(points)
     n = points.shape[0]
@@ -250,12 +302,16 @@ def gmm_batched(points, k: int, *, b: int = 8, metric="euclidean", mask=None,
         raise ValueError(f"k={k} must be a multiple of b={b}")
     if mask is None:
         mask = jnp.ones((n,), bool)
-    if chunk:
-        while n % chunk:
-            chunk //= 2
+    if chunk or use_pallas:
+        ch = _adjust_chunk(n, 0 if use_pallas else chunk)
+        pad = 0 if use_pallas else _pad_to_chunk(n, ch)
+        pts_p = jnp.pad(points, ((0, pad), (0, 0))) if pad else points
+        mask_p = jnp.pad(mask, (0, pad), constant_values=False) if pad \
+            else mask
         idx, radius, min_dist = _gmm_batched_chunked_impl(
-            points, mask, jnp.asarray(start, jnp.int32), k, b, chunk,
-            get_metric(metric).name)
+            pts_p, mask_p, jnp.asarray(start, jnp.int32), k, b, ch,
+            get_metric(metric).name, use_pallas)
+        min_dist = min_dist[:n]
     else:
         idx, radius, min_dist = _gmm_batched_impl(
             points, mask, jnp.asarray(start, jnp.int32), k, b,
@@ -272,26 +328,20 @@ class GMMExtResult(NamedTuple):
     assign: jnp.ndarray         # (n,) nearest-kernel-center assignment
 
 
-def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
-            start=0, use_pallas: bool = False) -> GMMExtResult:
-    """GMM-EXT (Algorithm 1): kernel of k' centers + up to k-1 delegates each.
+def delegates_from_assign(idx, assign, mask, k: int, kprime: int):
+    """Delegate extraction shared by GMM-EXT and the grouped (constrained)
+    engine: given the kernel ``idx`` (k',) and a nearest-kernel-center
+    ``assign`` (n,), compute the per-cluster delegate table.
 
-    Single scan formulation: the GMM loop already tracks the nearest-center
-    assignment, so the clustering {C_j} is free; delegates are the first
-    min(|C_j|, k) members of each cluster in index order, with the center
-    force-included in slot 0.
+    Returns (cand (k', k), valid (k', k), mult (k',), assign (n,)) where
+    ``assign`` has invalid rows rerouted to the sentinel cluster k' and each
+    center forced into its own cluster.
     """
-    points = jnp.asarray(points)
-    n = points.shape[0]
-    if mask is None:
-        mask = jnp.ones((n,), bool)
-    res = gmm(points, kprime, metric=metric, mask=mask, start=start,
-              use_pallas=use_pallas)
-
-    assign = jnp.where(mask, res.assign, kprime)  # invalid -> sentinel cluster
+    n = assign.shape[0]
+    assign = jnp.where(mask, assign, kprime)  # invalid -> sentinel cluster
     # force each center into its own cluster (it is, by construction: dist 0,
     # but ties at 0 could have attached it to an earlier co-located center).
-    assign = assign.at[res.idx].set(jnp.arange(kprime, dtype=jnp.int32))
+    assign = assign.at[idx].set(jnp.arange(kprime, dtype=jnp.int32))
 
     order = jnp.argsort(assign, stable=True)              # (n,)
     sorted_assign = assign[order]
@@ -308,22 +358,85 @@ def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
     # force-include the center in slot 0 (swap it in; if the center already
     # appears in another slot, that slot harmlessly duplicates — dedupe by
     # masking duplicates of slot 0)
-    cand = cand.at[:, 0].set(res.idx)
-    dup0 = (cand == res.idx[:, None]) & (jnp.arange(k)[None, :] > 0)
+    cand = cand.at[:, 0].set(idx)
+    dup0 = (cand == idx[:, None]) & (jnp.arange(k)[None, :] > 0)
     valid = valid & ~dup0
     valid = valid.at[:, 0].set(counts > 0)
 
     mult = jnp.minimum(counts, k).astype(jnp.int32)
-    return GMMExtResult(kernel_idx=res.idx, delegate_idx=cand,
+    return cand, valid, mult, assign
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "metric_name"))
+def _assign_to_centers_impl(points, idx, chunk: int, metric_name: str):
+    """Nearest-selected-center index for every point, one chunked fused pass
+    ((chunk, k') distance tile; the (n, k') matrix never materializes)."""
+    metric = get_metric(metric_name)
+    n, d = points.shape
+    centers = points[idx]
+    nch = n // chunk
+
+    def chunk_fn(c):
+        x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+        dist = metric.pairwise(x, centers)               # (chunk, k')
+        return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+    return jax.lax.map(chunk_fn, jnp.arange(nch)).reshape(n)
+
+
+def _assign_to_centers(points, idx, chunk: int, metric_name: str):
+    """Padding wrapper for ``_assign_to_centers_impl`` (any chunk size)."""
+    n = points.shape[0]
+    ch = _adjust_chunk(n, chunk or 4096)
+    pad = _pad_to_chunk(n, ch)
+    if pad:
+        points = jnp.pad(points, ((0, pad), (0, 0)))
+    return _assign_to_centers_impl(points, idx, ch, metric_name)[:n]
+
+
+def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
+            start=0, use_pallas: bool = False, b: int = 1,
+            chunk: int = 0) -> GMMExtResult:
+    """GMM-EXT (Algorithm 1): kernel of k' centers + up to k-1 delegates each.
+
+    Single scan formulation: the GMM loop already tracks the nearest-center
+    assignment, so the clustering {C_j} is free; delegates are the first
+    min(|C_j|, k) members of each cluster in index order, with the center
+    force-included in slot 0.
+
+    ``b > 1`` selects the kernel with the batched lookahead-b engine
+    (``gmm_batched``; b is snapped to a divisor of k' via
+    ``effective_block``) and recovers the assignment with one extra chunked
+    argmin pass — (k'/b + 2) sweeps total instead of k'.
+    """
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    metric_name = get_metric(metric).name
+    b = effective_block(kprime, b)
+    if b > 1 or chunk:
+        idx, radius, _ = gmm_batched(points, kprime, b=b, metric=metric,
+                                     mask=mask, start=start, chunk=chunk,
+                                     use_pallas=use_pallas)
+        assign = _assign_to_centers(points, idx, chunk, metric_name)
+    else:
+        res = gmm(points, kprime, metric=metric, mask=mask, start=start,
+                  use_pallas=use_pallas)
+        idx, radius, assign = res.idx, res.radius, res.assign
+    cand, valid, mult, assign = delegates_from_assign(idx, assign, mask, k,
+                                                      kprime)
+    return GMMExtResult(kernel_idx=idx, delegate_idx=cand,
                         delegate_valid=valid, multiplicity=mult,
-                        radius=res.radius, assign=assign)
+                        radius=radius, assign=assign)
 
 
 def gmm_gen(points, k: int, kprime: int, *, metric="euclidean", mask=None,
-            start=0, use_pallas: bool = False) -> GeneralizedCoreset:
+            start=0, use_pallas: bool = False, b: int = 1,
+            chunk: int = 0) -> GeneralizedCoreset:
     """GMM-GEN: generalized core-set of size s(T)=k', expanded size <= k·k'."""
     ext = gmm_ext(points, k, kprime, metric=metric, mask=mask, start=start,
-                  use_pallas=use_pallas)
+                  use_pallas=use_pallas, b=b, chunk=chunk)
     return GeneralizedCoreset(points=jnp.asarray(points)[ext.kernel_idx],
                               multiplicity=ext.multiplicity,
                               radius=ext.radius)

@@ -25,6 +25,12 @@ phase — fall back to an in-jit sequential insert loop.  This is an exact
 execution of the per-point algorithm (discard decisions are order-independent
 within a chunk because ``T`` only changes when a far point is inserted, and the
 sequential path takes over from the first far point onward).
+
+The chunk loop is sync-free in the common case: classification, the on-device
+first-far-position search and the near-prefix absorb are fused into one
+dispatch (``_classify_absorb``) and the host reads back a single int32 — the
+full ``far`` mask is never materialized on the host, so a no-far chunk costs
+exactly one scalar transfer.
 """
 from __future__ import annotations
 
@@ -129,6 +135,24 @@ def _classify(state: SMMState, chunk, cvalid, metric_name):
     nearest = jnp.argmin(dm, axis=1)
     far = (near_d > 4.0 * state.d_thr) & cvalid
     return near_d, nearest, far
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "mode", "k"))
+def _classify_absorb(state: SMMState, chunk, metric_name: str, mode: str,
+                     k: int):
+    """Fused vector phase: classify the chunk, locate the first far point ON
+    DEVICE, and commit the near-prefix updates in the same dispatch.
+
+    Returns (state', first_far) where first_far == len(chunk) means the whole
+    chunk was absorbed (the sync-free fast path: the caller transfers exactly
+    one int32 scalar and touches nothing else)."""
+    c = chunk.shape[0]
+    cvalid = jnp.ones((c,), bool)
+    _, nearest, far = _classify(state, chunk, cvalid, metric_name)
+    first_far = jnp.where(jnp.any(far), jnp.argmax(far), c).astype(jnp.int32)
+    state = _absorb_near_prefix(state, chunk, cvalid, nearest, far, first_far,
+                                metric_name, mode, k)
+    return state, first_far
 
 
 @functools.partial(jax.jit, static_argnames=("metric_name", "mode", "k"))
@@ -293,24 +317,23 @@ class StreamingCoreset:
         self._consume(jnp.asarray(chunk, self.dtype))
 
     def _consume(self, chunk) -> None:
+        """Sync-free chunk loop: ``_classify_absorb`` classifies the tail,
+        finds the first far position and commits the near-prefix updates in
+        one device dispatch; the host reads back a single int32 scalar.  On
+        the common no-far-point path that scalar is the only transfer for the
+        whole chunk — the ``far`` mask itself never leaves the device."""
         c = chunk.shape[0]
         pos = 0
         state = self._state
         while pos < c:
             tail = chunk[pos:]
-            cvalid = jnp.ones((tail.shape[0],), bool)
-            _, nearest, far = _classify(state, tail, cvalid, self.metric)
-            far_np = np.asarray(far)
-            if not far_np.any():
-                state = _absorb_near_prefix(state, tail, cvalid, nearest, far,
-                                            tail.shape[0], self.metric,
-                                            self.mode, self.k)
+            state, first_far = _classify_absorb(state, tail, self.metric,
+                                                self.mode, self.k)
+            first_far = int(first_far)          # the one host transfer
+            if first_far == tail.shape[0]:      # whole tail absorbed
                 pos = c
                 break
-            first_far = int(far_np.argmax())
-            state = _absorb_near_prefix(state, tail, cvalid, nearest, far,
-                                        first_far, self.metric, self.mode,
-                                        self.k)
+            cvalid = jnp.ones((tail.shape[0],), bool)
             state, consumed, full = _seq_insert(state, tail, cvalid, first_far,
                                                 self.metric, self.mode, self.k)
             pos += int(consumed)

@@ -68,14 +68,20 @@ def balanced_quotas(group_labels: np.ndarray, k: int, m: Optional[int] = None
 
 def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
                    kprime: Optional[int] = None, num_reducers: int = 1,
-                   metric="euclidean", group_labels=None,
-                   quotas=None) -> np.ndarray:
+                   metric="euclidean", group_labels=None, quotas=None,
+                   b: int = 1, chunk: int = 0) -> np.ndarray:
     """Returns indices of the k selected examples.
 
     With ``group_labels`` (an ``(n,)`` int array of category ids) the
     selection is constrained to a partition matroid: ``quotas[g]`` picks from
     every group g (defaults to a balanced split of k across groups), via the
     ``repro.constrained`` subsystem.
+
+    ``b``/``chunk`` tune the single-sweep selection engine shared by every
+    path (lookahead-b center blocking + chunk-fused sweeps; see
+    ``core.gmm.gmm_batched`` / ``constrained.coreset``): ``b=1`` is exact
+    GMM, ``b`` in 4–16 cuts point-set sweeps ~b× for large pools at a few-%
+    selection-fidelity cost.
     """
     pts = np.asarray(embeddings, np.float32)
     if group_labels is not None:
@@ -90,23 +96,24 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
             sol, sol_lab, _ = simulate_fair_mr(pts, labels, quotas,
                                                num_reducers=num_reducers,
                                                measure=measure, kprime=kprime,
-                                               metric=metric)
+                                               metric=metric, b=b, chunk=chunk)
             # match within the solution point's group so duplicate embeddings
             # across groups can't silently break the quota guarantee
             return _match_rows(pts, sol, k, row_labels=labels,
                                sol_labels=sol_lab)
         from repro.constrained import fair_diversity_maximize
         idx, _, _ = fair_diversity_maximize(pts, labels, quotas, measure,
-                                            kprime=kprime, metric=metric)
+                                            kprime=kprime, metric=metric,
+                                            b=b, chunk=chunk)
         return np.asarray(idx)
     if quotas is not None:
         raise ValueError("quotas= requires group_labels=")
     if num_reducers > 1:
         sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
-                             kprime=kprime, metric=metric)
+                             kprime=kprime, metric=metric, b=b, chunk=chunk)
     else:
         sol, _, _ = diversity_maximize(pts, k, measure, kprime=kprime,
-                                       metric=metric)
+                                       metric=metric, b=b, chunk=chunk)
     return _match_rows(pts, sol, k)
 
 

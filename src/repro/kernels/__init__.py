@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the core-set hot spots (validated via interpret mode
 on CPU; see tests/test_kernels.py for the shape/dtype sweeps vs ref.py)."""
 from . import ops, ref
-from .gmm_update import gmm_update_select_pallas
+from .gmm_topb import gmm_topb_pallas
+from .gmm_update import (gmm_grouped_topb_pallas, gmm_update_select_pallas,
+                         resolve_interpret)
 from .pairwise import pairwise_pallas
 
-__all__ = ["ops", "ref", "gmm_update_select_pallas", "pairwise_pallas"]
+__all__ = ["ops", "ref", "gmm_update_select_pallas", "gmm_topb_pallas",
+           "gmm_grouped_topb_pallas", "pairwise_pallas", "resolve_interpret"]

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .gmm_update import resolve_interpret
+
 
 def _topb_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
                  min_out_ref, val_ref, idx_ref, *, mode, bn, b):
@@ -48,12 +50,14 @@ def _topb_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
 
 @functools.partial(jax.jit, static_argnames=("mode", "bn", "interpret"))
 def gmm_topb_pallas(points, centers, min_in, mask, *, mode: str = "euclidean",
-                    bn: int = 1024, interpret: bool = True):
+                    bn: int = 1024, interpret=None):
     """Fused batched round.  points (n, d) [n % bn == 0], centers (b, d),
     min_in (n,), mask (n,) -> (min_out (n,), cand_val (b,), cand_idx (b,)).
 
     cand_* are the exact global top-b of the updated masked min-distance
-    field (tile-local top-b + cross-tile merge)."""
+    field (tile-local top-b + cross-tile merge).  ``interpret=None``
+    auto-selects per backend (see ``gmm_update.resolve_interpret``)."""
+    interpret = resolve_interpret(interpret)
     n, d = points.shape
     b = centers.shape[0]
     assert n % bn == 0 and bn >= b, (n, bn, b)

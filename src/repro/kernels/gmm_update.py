@@ -18,10 +18,36 @@ EXPERIMENTS.md §Perf) is the right TPU shape for the paper's hot loop.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# Backends with a real Pallas lowering (Mosaic / Triton).  Everything else
+# (CPU test containers, METAL, ...) runs the kernel bodies under the Pallas
+# interpreter, which is exact but slow.
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret=None) -> bool:
+    """Resolve the ``interpret`` knob for a Pallas kernel.
+
+    ``None`` (the default everywhere) auto-selects: compile on TPU/GPU,
+    interpret on CPU and other backends.  The environment variable
+    ``REPRO_PALLAS_INTERPRET`` overrides the auto-selection in either
+    direction (``1``/``true`` forces the interpreter, ``0``/``false`` forces
+    compilation — useful to smoke-test Mosaic lowering from a CPU driver or
+    to fall back if a kernel mis-compiles on a new backend).  An explicit
+    boolean wins over both.  Resolution happens at trace time, so flip the
+    env var before the first call of a given shape.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() not in _COMPILED_BACKENDS
 
 
 def _gmm_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
@@ -55,9 +81,12 @@ def _gmm_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
                    static_argnames=("mode", "bn", "interpret"))
 def gmm_update_select_pallas(points, centers, min_in, mask, *,
                              mode: str = "euclidean", bn: int = 1024,
-                             interpret: bool = True):
+                             interpret=None):
     """Fused round.  points (n,d) [n % bn == 0], centers (b,d), min_in (n,),
-    mask (n,) -> (min_out (n,), argmax (), max ())."""
+    mask (n,) -> (min_out (n,), argmax (), max ()).
+
+    ``interpret=None`` auto-selects per backend (see ``resolve_interpret``)."""
+    interpret = resolve_interpret(interpret)
     n, d = points.shape
     b = centers.shape[0]
     assert n % bn == 0, (n, bn)
@@ -90,3 +119,95 @@ def gmm_update_select_pallas(points, centers, min_in, mask, *,
     # cross-block reduction: O(n/bn) scalars
     g = jnp.argmax(bmax)
     return min_out, barg[g], bmax[g]
+
+
+def _grouped_topb_kernel(x_ref, c_ref, lab_ref, xsq_ref, csq_ref, min_ref,
+                         min_out_ref, val_ref, idx_ref, *, mode, bn, m, bc, b):
+    """Group-blocked sweep tile: ONE (bn, d) × (m·bc, d) MXU matmul serves
+    all ``m`` group masks.  Each point folds only its OWN group's center
+    block into its running min (a point never needs distances to other
+    groups' centers — the per-group GMM runs are independent), then every
+    group's tile-local top-b is extracted from the shared (bn,) field."""
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (bn, d)
+    c = c_ref[...]                                   # (m*bc, d)
+    dot = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bn, m*bc)
+    if mode in ("sqeuclidean", "euclidean"):
+        d2 = xsq_ref[...][:, None] + csq_ref[...][None, :] - 2.0 * dot
+        d2 = jnp.maximum(d2, 0.0)
+        dist = jnp.sqrt(d2) if mode == "euclidean" else d2
+    elif mode == "dot":
+        dist = -dot
+    elif mode == "cosine":
+        dist = jnp.arccos(jnp.clip(dot, -1.0, 1.0))
+    else:
+        raise ValueError(mode)
+    lab = lab_ref[...]                               # (bn,) int32 group ids
+    # own-group reduction: mask every other group's block to +inf, min-reduce
+    onehot = lab[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bn, m), 1)
+    dist = jnp.where(onehot[:, :, None], dist.reshape(bn, m, bc), jnp.inf)
+    own = jnp.min(dist, axis=(1, 2))                 # (bn,)
+    new_min = jnp.minimum(min_ref[...], own)
+    min_out_ref[...] = new_min
+    gids = jax.lax.broadcasted_iota(jnp.int32, (m, bn), 0)
+    masked = jnp.where(lab[None, :] == gids, new_min[None, :], -jnp.inf)
+    vals, idxs = jax.lax.top_k(masked, b)            # (m, b) per-group top-b
+    val_ref[...] = vals
+    idx_ref[...] = (idxs + i * bn).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "b", "interpret"))
+def gmm_grouped_topb_pallas(points, centers, min_in, labels, *,
+                            mode: str = "euclidean", bn: int = 1024,
+                            b: int = 8, interpret=None):
+    """Fused group-blocked batched round for the constrained (partition-
+    matroid) per-group GMM sweep.
+
+    points (n, d) [n % bn == 0], centers (m, bc, d) — bc centers per group —
+    min_in (n,) (each point's distance to its OWN group's selected centers),
+    labels (n,) int32 in [0, m) (pad rows carry -1 so they match no group)
+    -> (min_out (n,), cand_val (m, b), cand_idx (m, b)).
+
+    One grid step loads one point tile, performs a single (bn, d) × (m·bc, d)
+    matmul shared across the m group masks, folds each point's own-group
+    block into the shared running-min field and emits per-(group, tile) top-b
+    candidates; the per-group cross-tile merge — top-b of (n/bn)·b winners —
+    happens here in the jit wrapper.
+    """
+    interpret = resolve_interpret(interpret)
+    n, d = points.shape
+    m, bc, _ = centers.shape
+    assert n % bn == 0 and bn >= b, (n, bn, b)
+    cflat = centers.reshape(m * bc, d)
+    xsq = jnp.sum(points * points, axis=-1)
+    csq = jnp.sum(cflat * cflat, axis=-1)
+    grid = (n // bn,)
+    min_out, vals, idxs = pl.pallas_call(
+        functools.partial(_grouped_topb_kernel, mode=mode, bn=bn, m=m, bc=bc,
+                          b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m * bc, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((m * bc,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((m, b), lambda i: (0, i)),
+            pl.BlockSpec((m, b), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((m, grid[0] * b), jnp.float32),
+            jax.ShapeDtypeStruct((m, grid[0] * b), jnp.int32),
+        ],
+        interpret=interpret,
+    )(points, cflat, labels, xsq, csq, min_in)
+    # cross-tile merge, per group: exact top-b of the tile winners
+    mvals, sel = jax.lax.top_k(vals, b)
+    return min_out, mvals, jnp.take_along_axis(idxs, sel, axis=1)

@@ -2,9 +2,11 @@
 
 Handle padding to tile boundaries, metric-name -> kernel-mode translation
 (cosine pre-normalizes once so the kernel is a pure dot+arccos), and the
-CPU-interpret switch: on the CPU test/dev container every kernel runs under
-``interpret=True`` (the kernel body executed by the Pallas interpreter); on
-TPU the same call sites compile to Mosaic.
+interpret switch: on backends without a Pallas lowering (the CPU test/dev
+container) every kernel runs under ``interpret=True`` (the kernel body
+executed by the Pallas interpreter); on TPU/GPU the same call sites compile
+to Mosaic/Triton.  ``REPRO_PALLAS_INTERPRET=0|1`` overrides (see
+``gmm_update.resolve_interpret``).
 """
 from __future__ import annotations
 
@@ -13,12 +15,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .gmm_update import gmm_update_select_pallas
+from .gmm_topb import gmm_topb_pallas
+from .gmm_update import (gmm_grouped_topb_pallas, gmm_update_select_pallas,
+                         resolve_interpret)
 from .pairwise import pairwise_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 def _round_up(x, m):
@@ -82,6 +86,60 @@ def gmm_update_select(points, centers, min_in, mask, metric_name: str,
                                                 mode=mode, bn=bn_,
                                                 interpret=_interpret())
     return min_out[:n], arg, mx
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "bn"))
+def gmm_topb(points, centers, min_in, mask, metric_name: str,
+             bn: int = 1024):
+    """Fused batched GMM round on (n, d) points vs (b, d) centers.
+
+    Returns (min_out (n,), cand_val (b,), cand_idx (b,)) — the exact global
+    top-b of the updated masked min-distance field.  Padded rows are masked
+    out, so the candidates always index the original n points.
+    """
+    mode, norm = _metric_to_mode(metric_name)
+    points = jnp.asarray(points, jnp.float32)
+    centers = jnp.atleast_2d(jnp.asarray(centers, jnp.float32))
+    if norm:
+        points, centers = _normalize(points), _normalize(centers)
+    n, d = points.shape
+    b = centers.shape[0]
+    bn_ = max(min(bn, _round_up(n, 8)), b)
+    npad = _round_up(n, bn_)
+    pp = jnp.pad(points, ((0, npad - n), (0, 0)))
+    mi = jnp.pad(min_in, (0, npad - n), constant_values=jnp.inf)
+    mk = jnp.pad(mask, (0, npad - n), constant_values=False)
+    min_out, vals, idxs = gmm_topb_pallas(pp, centers, mi, mk, mode=mode,
+                                          bn=bn_)
+    return min_out[:n], vals, jnp.minimum(idxs, n - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric_name", "b", "bn"))
+def grouped_gmm_topb(points, centers, min_in, labels, metric_name: str,
+                     b: int, bn: int = 1024):
+    """Fused group-blocked batched GMM round (constrained subsystem).
+
+    points (n, d), centers (m, bc, d), min_in (n,) (own-group running min),
+    labels (n,) int32 in [0, m) -> (min_out (n,), cand_val (m, b),
+    cand_idx (m, b)): one sweep serves all m per-group masks (see
+    ``gmm_grouped_topb_pallas``).  Padded rows carry label -1, matching no
+    group, so per-group candidates are exact over the original n points.
+    """
+    mode, norm = _metric_to_mode(metric_name)
+    points = jnp.asarray(points, jnp.float32)
+    centers = jnp.asarray(centers, jnp.float32)
+    if norm:
+        points, centers = _normalize(points), _normalize(centers)
+    n, d = points.shape
+    bn_ = max(min(bn, _round_up(n, 8)), b)
+    npad = _round_up(n, bn_)
+    pp = jnp.pad(points, ((0, npad - n), (0, 0)))
+    mi = jnp.pad(min_in, (0, npad - n), constant_values=jnp.inf)
+    lb = jnp.pad(jnp.asarray(labels, jnp.int32), (0, npad - n),
+                 constant_values=-1)
+    min_out, vals, idxs = gmm_grouped_topb_pallas(pp, centers, mi, lb,
+                                                  mode=mode, bn=bn_, b=b)
+    return min_out[:n], vals, jnp.minimum(idxs, n - 1)
 
 
 def gmm_update(points, center, min_in, metric_name: str):

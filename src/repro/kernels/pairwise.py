@@ -44,9 +44,12 @@ def _pairwise_kernel(x_ref, y_ref, xsq_ref, ysq_ref, o_ref, *, mode):
 
 @functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "interpret"))
 def pairwise_pallas(x, y, *, mode: str = "sqeuclidean", bm: int = 256,
-                    bn: int = 256, interpret: bool = True):
+                    bn: int = 256, interpret=None):
     """Distance matrix via pl.pallas_call.  Inputs must be pre-padded so that
-    m % bm == 0 and n % bn == 0 (ops.py handles padding + unpadding)."""
+    m % bm == 0 and n % bn == 0 (ops.py handles padding + unpadding).
+    ``interpret=None`` auto-selects per backend (``resolve_interpret``)."""
+    from .gmm_update import resolve_interpret
+    interpret = resolve_interpret(interpret)
     m, d = x.shape
     n, _ = y.shape
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)

@@ -76,7 +76,7 @@ class ServingEngine:
 
 def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
                    measure: str = "remote-edge", *, group_labels=None,
-                   quotas=None) -> np.ndarray:
+                   quotas=None, b: int = 1, chunk: int = 0) -> np.ndarray:
     """Pick the k most diverse candidates; returns their indices.
 
     ``quotas`` (with per-candidate ``group_labels``) constrains the result to
@@ -84,7 +84,12 @@ def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
     serving: per-source / per-topic slates), and must sum to ``k``.
     ``quotas`` without ``group_labels`` is an error; ``group_labels`` alone
     balances k across the categories.
+
+    ``b``/``chunk`` pass through to the single-sweep selection engine
+    (``select_diverse``) — worth setting for large candidate pools where the
+    rerank is latency-critical.
     """
     from repro.data.selection import select_diverse
     return select_diverse(candidate_embeddings, k, measure=measure,
-                          group_labels=group_labels, quotas=quotas)
+                          group_labels=group_labels, quotas=quotas,
+                          b=b, chunk=chunk)

@@ -1,0 +1,28 @@
+"""Fast smoke test for the selection-engine benchmark: the machine-readable
+``BENCH_gmm.json`` artifact must be produced with b=1 vs batched vs grouped
+rows so the repo's perf trajectory stays tracked."""
+import json
+
+from benchmarks import bench_gmm
+
+
+def test_bench_gmm_emits_machine_readable_json(tmp_path):
+    rows = bench_gmm.run(quick=True, n=2048, d=4, k=16, b=4, chunk=512,
+                         m=4, kprime=8)
+    paths = {r["path"] for r in rows}
+    assert {"gmm-b1", "gmm-batched", "gmm-batched-chunked",
+            "grouped-vmap-b1", "grouped-blocked"} <= paths
+    for r in rows:
+        for key in ("time_s", "pts_per_s", "sweeps", "bytes_swept_gb",
+                    "effective_gbps"):
+            assert key in r, (r["path"], key)
+        assert r["time_s"] > 0
+
+    out = tmp_path / "BENCH_gmm.json"
+    doc = bench_gmm.emit_json(rows, path=str(out))
+    assert out.exists()
+    loaded = json.loads(out.read_text())
+    assert loaded["benchmark"] == "gmm-selection-engine"
+    assert "batched_vs_b1" in loaded["speedups"]
+    assert "grouped_blocked_vs_vmap_b1" in loaded["speedups"]
+    assert loaded["rows"] == doc["rows"]
