@@ -1,13 +1,15 @@
-"""Fair data curation: a balanced, diverse training subset with per-category
-quotas (the constrained-diversity subsystem end to end).
+"""Fair data curation: a balanced, diverse training subset under matroid
+constraints (the constrained-diversity subsystem end to end).
 
 A synthetic pool mixes examples from several "domains" (code, chat, web, …)
 in skewed proportions.  Plain diversity selection follows the embedding
 geometry and can starve small domains; ``select_diverse(...,
-group_labels=...)`` constrains the pick to a partition matroid so every
-domain lands exactly its quota — maximally diverse *within* that fairness
-constraint (per-group core-sets + feasible-greedy/local-search, see
-``repro.constrained``).
+group_labels=...)`` constrains the pick so every domain lands its quota —
+maximally diverse *within* that fairness constraint (per-group core-sets +
+feasible-greedy/local-search, see ``repro.constrained``).  Beyond exact
+quotas, the matroid oracle layer expresses SLO bands (``PartitionMatroid``
+with ``q_min``/``q_max``) and slot-eligibility rules
+(``TransversalMatroid``) with the same machinery.
 
     PYTHONPATH=src python examples/fair_selection.py --keep 24
 """
@@ -15,6 +17,7 @@ import argparse
 
 import numpy as np
 
+from repro.constrained import PartitionMatroid, TransversalMatroid
 from repro.data import balanced_quotas, embed_examples, select_diverse
 
 DOMAINS = ["code", "chat", "web", "papers"]
@@ -62,6 +65,34 @@ def main():
         print(f"  {name:8s} {plain_counts[g]:6d} {fair_counts[g]:6d} "
               f"{quotas[g]:6d}")
     assert np.array_equal(fair_counts, quotas), "quotas must be exact"
+
+    # SLO-band pick: exact quotas are often too rigid in production — an
+    # operator promises "at least 2 papers, no domain above half the slate".
+    # Quota RANGES express that directly via the matroid oracle layer.
+    band = PartitionMatroid(
+        q_min=[0, 0, 0, min(2, int(counts[3]))],
+        q_max=[args.keep // 2] * len(DOMAINS), k=args.keep)
+    banded = select_diverse(emb, args.keep, measure="remote-edge", kprime=64,
+                            group_labels=labels, matroid=band)
+    banded_counts = np.bincount(labels[banded], minlength=len(DOMAINS))
+    assert band.basis_feasible(banded_counts)
+
+    # slot-constrained pick: the slate has args.keep "roles"; the first
+    # quarter of the roles only accept code/chat (a transversal matroid)
+    elig = np.ones((len(DOMAINS), args.keep), bool)
+    elig[2:, : args.keep // 4] = False       # web/papers barred from 1st 1/4
+    trans = TransversalMatroid(elig)
+    slotted = select_diverse(emb, args.keep, measure="remote-edge",
+                             kprime=64, group_labels=labels, matroid=trans)
+    assert trans.independence_oracle(labels[slotted])
+
+    print(f"\nselected {args.keep} examples (banded = q_min/q_max SLO, "
+          f"slotted = transversal roles):")
+    print(f"  {'domain':8s} {'banded':>7s} {'slotted':>8s}")
+    slotted_counts = np.bincount(labels[slotted], minlength=len(DOMAINS))
+    for g, name in enumerate(DOMAINS):
+        print(f"  {name:8s} {banded_counts[g]:7d} {slotted_counts[g]:8d}")
+
     print("\nfair selection honored every per-domain quota; the curated "
           "subset is ready for the training loop "
           "(see examples/train_diverse_data.py).")

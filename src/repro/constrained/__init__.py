@@ -1,10 +1,14 @@
-"""Constrained (partition-matroid / "fair") diversity maximization.
+"""Constrained (matroid / "fair") diversity maximization.
 
-Given ``m`` groups (matroid categories: colors, sources, classes) and quotas
-``(q_0, …, q_{m-1})`` with ``k = Σ q_g``, maximize a diversity objective over
-sets containing *exactly* ``q_g`` points of group ``g`` — the fair variant of
-the paper's problem, per the follow-up "A General Coreset-Based Approach to
-Diversity Maximization under Matroid Constraints" (Ceccarello et al.).
+Given ``m`` groups (matroid categories: colors, sources, classes) and a
+label-count matroid over them — exact quotas ``|S ∩ G_g| = q_g``, quota
+ranges ``q_min ≤ |S ∩ G_g| ≤ q_max``, transversal slot-eligibility, or
+laminar nested caps — maximize a diversity objective over feasible bases:
+the fair variant of the paper's problem, per the follow-up "A General
+Coreset-Based Approach to Diversity Maximization under Matroid Constraints"
+(Ceccarello et al., arXiv:2002.03175).  ``quotas=`` everywhere is sugar for
+an exact-quota ``PartitionMatroid``; ``matroid=`` accepts any
+``repro.constrained.matroid`` oracle.
 
 Code ↔ construction map
 -----------------------
@@ -24,12 +28,20 @@ unconstrained machinery:
     costs one batched distance computation per GMM round.
     ``fair_diversity_maximize`` is the single-machine end-to-end driver.
 
+``matroid.py``
+    The pluggable oracle layer: ``Matroid`` (independence on per-group count
+    vectors + vectorized grow/swap masks) with ``PartitionMatroid`` (exact
+    quotas or ``q_min``/``q_max`` ranges), ``TransversalMatroid`` (bipartite
+    slot eligibility, max-flow feasibility) and ``LaminarMatroid`` (nested
+    caps).
+
 ``solver.py``
     The final-stage constrained solver on the union: GMM-style feasible
-    greedy over groups with remaining quota, then same-group swap local
-    search (swaps within a group are exactly the feasible exchanges of a
-    partition matroid).  ``brute_force_constrained`` enumerates per-group
-    combinations for exact small-instance optima (tests).
+    greedy over groups the oracle's ``grow_mask`` admits, then
+    oracle-checked exchange local search (for exact quotas the feasible
+    exchanges are exactly the same-group swaps of the original path).
+    ``brute_force_constrained`` enumerates feasible count vectors ×
+    per-group combinations for exact small-instance optima (tests).
 
 ``streaming.py``
     The paper's SMM state machine (§4), one instance per group; a labelled
@@ -49,6 +61,8 @@ and ``repro.data.select_diverse(..., group_labels=...)`` route here.
 from .coreset import GroupedCoreset, fair_diversity_maximize, grouped_coreset
 from .mapreduce import (FairCoreset, mr_fair_diversity, mr_grouped_coreset,
                         simulate_fair_mr)
+from .matroid import (LaminarMatroid, Matroid, PartitionMatroid,
+                      TransversalMatroid, as_matroid)
 from .solver import (brute_force_constrained, constrained_solve,
                      feasible_greedy, local_search, solve_and_value)
 from .streaming import FairStreamingCoreset, fair_streaming_diversity
@@ -59,4 +73,6 @@ __all__ = [
     "simulate_fair_mr", "constrained_solve", "feasible_greedy",
     "local_search", "brute_force_constrained", "solve_and_value",
     "FairStreamingCoreset", "fair_streaming_diversity",
+    "Matroid", "PartitionMatroid", "TransversalMatroid", "LaminarMatroid",
+    "as_matroid",
 ]

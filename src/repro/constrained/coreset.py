@@ -1,10 +1,12 @@
-"""Per-group core-set construction for partition-matroid diversity.
+"""Per-group core-set construction for matroid-constrained diversity.
 
 The matroid-coreset composition theorem (Ceccarello et al., "A General
 Coreset-Based Approach to Diversity Maximization under Matroid Constraints")
 says: a core-set for the *constrained* problem is the union, over the ``m``
 groups (matroid categories / colors), of an unconstrained core-set built on
-each group alone.  We therefore run GMM (or GMM-EXT for the clique-type
+each group alone.  The construction only sees group labels, so one builder
+serves every label-count matroid (partition quotas — exact or ranged —,
+transversal, laminar; see ``repro.constrained.matroid``).  We therefore run GMM (or GMM-EXT for the clique-type
 measures that need the injective proxy, Lemma 2 of the base paper) once per
 group with the group's membership mask, and take the union tagged with group
 labels.
@@ -310,16 +312,24 @@ def _grouped_ext_impl(points, labels, m: int, k: int, kprime: int,
 # public builder + end-to-end driver
 # --------------------------------------------------------------------------
 
-def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
-                    measure: str = "remote-edge", metric="euclidean",
-                    use_pallas: bool = False, b: int = 1,
+def grouped_coreset(points, labels, m: Optional[int] = None,
+                    k: Optional[int] = None, kprime: Optional[int] = None, *,
+                    matroid=None, measure: str = "remote-edge",
+                    metric="euclidean", use_pallas: bool = False, b: int = 1,
                     chunk: int = 0) -> GroupedCoreset:
-    """Build the union-of-per-group core-sets for a partition matroid.
+    """Build the union-of-per-group core-sets for a label-count matroid.
 
     ``labels`` is an ``(n,)`` int array in ``[0, m)``.  Each group contributes
     a core-set of size ``min(kprime, |group|)`` (plus delegates for the
     clique-type measures); empty groups contribute nothing and must carry a
     zero quota downstream.
+
+    The construction is matroid-agnostic: any feasible solution of a
+    label-count matroid takes at most ``k`` points from one group, so sizing
+    every per-group core-set for ``k`` covers partition quotas (exact or
+    ranged), transversal and laminar constraints alike.  Pass ``matroid=`` to
+    derive ``m``/``k`` from an oracle (``repro.constrained.matroid``) instead
+    of spelling them out.
 
     All paths run on the single-sweep engine (see module docstring): ``b=1``
     (default) is exact per-group GMM, ``b>1`` enables lookahead-b center
@@ -327,6 +337,11 @@ def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
     fused sweep tile, and ``use_pallas=True`` uses the group-blocked Pallas
     kernel for the sweep.
     """
+    from .matroid import derive_mk
+
+    m, k = derive_mk(matroid, m, k, "grouped_coreset")
+    if kprime is None:
+        raise ValueError("grouped_coreset needs kprime")
     points = jnp.asarray(points)
     labels = jnp.asarray(labels, jnp.int32)
     n = points.shape[0]
@@ -347,25 +362,29 @@ def grouped_coreset(points, labels, m: int, k: int, kprime: int, *,
                           group_count=counts)
 
 
-def fair_diversity_maximize(points, labels, quotas,
-                            measure: str = "remote-edge", *,
+def fair_diversity_maximize(points, labels, quotas=None,
+                            measure: str = "remote-edge", *, matroid=None,
                             kprime: Optional[int] = None, metric="euclidean",
                             use_pallas: bool = False, swap_rounds: int = 10,
                             b: int = 1, chunk: int = 0):
     """End-to-end single-machine constrained pipeline: per-group core-set →
-    feasible-greedy + local-search solve on the union.
+    feasible-greedy + oracle-checked local-search solve on the union.
 
-    Returns (indices (k,) into ``points`` honoring the quotas exactly, value,
-    GroupedCoreset).  ``b``/``chunk`` tune the selection engine (see
+    ``quotas=`` is sugar for an exact-quota ``PartitionMatroid``; pass
+    ``matroid=`` for quota ranges, transversal or laminar constraints (any
+    ``repro.constrained.matroid`` oracle).
+
+    Returns (indices (k,) into ``points`` forming a feasible matroid basis,
+    value, GroupedCoreset).  ``b``/``chunk`` tune the selection engine (see
     ``grouped_coreset``).
     """
+    from .matroid import as_matroid
     from .solver import solve_and_value
 
+    mat = as_matroid(matroid, quotas)
     pts = np.asarray(points)
     labels_np = np.asarray(labels)
-    quotas = np.asarray(quotas, np.int64)
-    m = quotas.shape[0]
-    k = int(quotas.sum())
+    m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
     kprime = min(kprime, pts.shape[0])
@@ -373,6 +392,7 @@ def fair_diversity_maximize(points, labels, quotas,
                          metric=metric, use_pallas=use_pallas, b=b,
                          chunk=chunk)
     cand_idx, cand_labels = cs.flatten()
-    sel, value = solve_and_value(pts[cand_idx], cand_labels, quotas, measure,
-                                 metric=metric, swap_rounds=swap_rounds)
+    sel, value = solve_and_value(pts[cand_idx], cand_labels, measure=measure,
+                                 matroid=mat, metric=metric,
+                                 swap_rounds=swap_rounds)
     return cand_idx[sel], value, cs

@@ -1,4 +1,8 @@
-"""MapReduce partition-matroid diversity on a jax device mesh.
+"""MapReduce matroid-constrained diversity on a jax device mesh.
+
+The MR rounds are matroid-agnostic — they only see group labels; the matroid
+oracle (``quotas=`` sugar or ``matroid=``) enters at the replicated
+final-stage solve.
 
 Mirrors ``repro.core.distributed`` (paper §5) with the matroid-coreset
 composition layered on top:
@@ -76,14 +80,24 @@ def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
     return pts, glab, valid.reshape(-1), jnp.max(radius)
 
 
-def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
-                       measure: str, mesh: Mesh, *,
+def mr_grouped_coreset(points, labels, m: Optional[int] = None,
+                       k: Optional[int] = None, kprime: int = 32,
+                       measure: str = "remote-edge",
+                       mesh: Optional[Mesh] = None, *, matroid=None,
                        data_axes: Sequence[str] = ("data",),
                        metric="euclidean", use_pallas: bool = False,
                        b: int = 1, chunk: int = 0) -> FairCoreset:
     """2-round MR fair core-set on a mesh: ``points (n, d)`` and ``labels
-    (n,)`` are sharded over ``data_axes``; returns the replicated union."""
+    (n,)`` are sharded over ``data_axes``; returns the replicated union.
+    ``matroid=`` derives ``m``/``k`` from an oracle (the construction itself
+    is matroid-agnostic — it only sees group labels)."""
     from repro.compat import shard_map
+
+    from .matroid import derive_mk
+
+    m, k = derive_mk(matroid, m, k, "mr_grouped_coreset")
+    if mesh is None:
+        raise ValueError("mr_grouped_coreset requires a mesh")
 
     axes = tuple(data_axes)
     nshards = int(np.prod([mesh.shape[a] for a in axes]))
@@ -111,25 +125,32 @@ def mr_grouped_coreset(points, labels, m: int, k: int, kprime: int,
                        radius=g_rad)
 
 
-def mr_fair_diversity(points, labels, quotas, measure: str, mesh: Mesh, *,
+def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
+                      mesh: Optional[Mesh] = None, *, matroid=None,
                       kprime: Optional[int] = None,
                       data_axes: Sequence[str] = ("data",), metric="euclidean",
                       use_pallas: bool = False, swap_rounds: int = 10,
                       b: int = 1, chunk: int = 0):
-    """Full constrained pipeline on a mesh.
+    """Full constrained pipeline on a mesh (``quotas=`` is sugar for an
+    exact-quota ``PartitionMatroid``; any label-count matroid works — the MR
+    rounds only see group labels, the oracle enters at the replicated solve).
 
     Returns (solution_points (k, d), solution_labels (k,), value)."""
-    quotas = np.asarray(quotas, np.int64)
-    m = quotas.shape[0]
-    k = int(quotas.sum())
+    from .matroid import as_matroid
+
+    if mesh is None:
+        raise ValueError("mr_fair_diversity requires a mesh")
+    mat = as_matroid(matroid, quotas)
+    m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
     cs = mr_grouped_coreset(points, labels, m, k, kprime, measure, mesh,
                             data_axes=data_axes, metric=metric,
                             use_pallas=use_pallas, b=b, chunk=chunk)
     cand_pts, cand_lab = cs.compact()
-    sel, value = solve_and_value(cand_pts, cand_lab, quotas, measure,
-                                 metric=metric, swap_rounds=swap_rounds)
+    sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
+                                 matroid=mat, metric=metric,
+                                 swap_rounds=swap_rounds)
     return cand_pts[sel], cand_lab[sel], value
 
 
@@ -147,7 +168,8 @@ def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
     return jax.vmap(one)(shards, slabels)
 
 
-def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
+def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
+                     num_reducers: int,
                      measure: str = "remote-edge",
                      kprime: Optional[int] = None, metric="euclidean",
                      partition: str = "contiguous", seed: int = 0,
@@ -155,12 +177,14 @@ def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
     """Simulate the ℓ-reducer 2-round constrained MR run on one device.
 
     Returns (solution_points, solution_labels, value).  ``partition`` follows
-    ``simulate_mr``: 'contiguous' | 'random' | 'adversarial'."""
+    ``simulate_mr``: 'contiguous' | 'random' | 'adversarial'; ``quotas=`` is
+    sugar for an exact-quota ``PartitionMatroid``."""
     from repro.core.distributed import partition_shards
 
-    quotas = np.asarray(quotas, np.int64)
-    m = quotas.shape[0]
-    k = int(quotas.sum())
+    from .matroid import as_matroid
+
+    mat = as_matroid(matroid, quotas)
+    m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
     pts, shards, slabels = partition_shards(
@@ -178,6 +202,7 @@ def simulate_fair_mr(points, labels, quotas, *, num_reducers: int,
     flat_valid = np.asarray(g_valid.reshape(-1))
     cand_pts = flat_pts[flat_valid]
     cand_lab = flat_lab[flat_valid]
-    sel, value = solve_and_value(cand_pts, cand_lab, quotas, measure,
-                                 metric=metric, swap_rounds=swap_rounds)
+    sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
+                                 matroid=mat, metric=metric,
+                                 swap_rounds=swap_rounds)
     return cand_pts[sel], cand_lab[sel], value

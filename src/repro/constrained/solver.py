@@ -1,14 +1,25 @@
-"""Sequential solvers for partition-matroid (fair) diversity maximization.
+"""Sequential solvers for matroid-constrained diversity maximization.
 
 ``feasible_greedy``   — GMM-style farthest-point greedy restricted to groups
-                        with remaining quota (always returns a feasible basis).
-``local_search``      — same-group swap descent; evaluating ALL candidate
-                        swaps of one pass costs a handful of batched gathers
-                        on the precomputed pairwise matrix, no per-pair
-                        python-loop distance work.
+                        the matroid's ``grow_mask`` allows (always returns a
+                        feasible basis).
+``local_search``      — oracle-checked exchange descent: a swap (p ∈ S,
+                        q ∉ S) is a candidate iff the matroid's ``swap_mask``
+                        keeps S − p + q a feasible basis.  For exact
+                        partition quotas this reduces to the classic
+                        same-group swap; evaluating ALL candidate swaps of
+                        one pass costs a handful of batched gathers on the
+                        precomputed pairwise matrix, no per-pair python-loop
+                        distance work.
 ``constrained_solve`` — greedy + local-search, the production entry point.
-``brute_force_constrained`` — exact optimum by per-group enumeration; test
-                        scale only (``prod_g C(n_g, q_g)`` small).
+``brute_force_constrained`` — exact optimum by enumeration over feasible
+                        count vectors × per-group combinations; test scale
+                        only.
+
+Every entry point accepts ``quotas=`` (sugar for an exact-quota
+``PartitionMatroid``) or ``matroid=`` (any ``repro.constrained.matroid``
+oracle — partition ranges, transversal, laminar, or your own label-count
+matroid).
 
 These run on core-set-scale candidate sets (hundreds–low thousands), so the
 numpy idiom of ``repro.core.sequential`` applies: one ``(n, n)`` distance
@@ -17,7 +28,6 @@ matrix up front, O(k·n) vectorized scans per iteration, no device round-trips.
 from __future__ import annotations
 
 import itertools
-import math
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -26,6 +36,8 @@ import numpy as np
 from repro.core.measures import diversity
 from repro.core.metrics import get_metric
 
+from .matroid import Matroid, as_matroid
+
 
 def _pairwise_np(points, metric) -> np.ndarray:
     m = get_metric(metric)
@@ -33,52 +45,44 @@ def _pairwise_np(points, metric) -> np.ndarray:
     return np.asarray(m.pairwise(p, p))
 
 
-def _check_quotas(labels: np.ndarray, quotas: np.ndarray) -> None:
-    m = quotas.shape[0]
-    counts = np.bincount(labels, minlength=m)[:m]
-    if labels.size and labels.max() >= m:
-        raise ValueError(f"label {labels.max()} out of range for m={m}")
-    short = np.where(counts < quotas)[0]
-    if short.size:
-        g = int(short[0])
-        raise ValueError(f"group {g} has {counts[g]} points < quota "
-                         f"{int(quotas[g])}")
-
-
-def feasible_greedy(dm: np.ndarray, labels: np.ndarray, quotas: np.ndarray,
-                    *, start: Optional[int] = None) -> np.ndarray:
-    """Farthest-point greedy under per-group quotas.
+def feasible_greedy(dm: np.ndarray, labels: np.ndarray, quotas=None, *,
+                    matroid: Optional[Matroid] = None,
+                    start: Optional[int] = None) -> np.ndarray:
+    """Farthest-point greedy under a matroid constraint.
 
     At every step the next pick is the point with the largest distance to the
-    current selection among points whose group still has remaining quota —
-    exactly GMM with a group-feasibility mask, so each step is one vectorized
-    scan of the running min-distance field.
+    current selection among points whose group the matroid's ``grow_mask``
+    still admits — exactly GMM with a feasibility mask, so each step is one
+    vectorized scan of the running min-distance field.  With exact partition
+    quotas the mask is ``counts < quotas``, reproducing the original quota
+    greedy bit-for-bit.
     """
+    mat = as_matroid(matroid, quotas)
     n = dm.shape[0]
     labels = np.asarray(labels)
-    rem = np.asarray(quotas, np.int64).copy()
-    k = int(rem.sum())
+    counts = np.zeros(mat.m, np.int64)
+    k = mat.k
     if k == 0:
         return np.zeros((0,), np.int64)
-    allowed = rem[labels] > 0
+    allowed = mat.grow_mask(counts)[labels]
     if start is None:
         # deterministic spread-out seed: the point with the largest total
         # distance mass among allowed points
         start = int(np.where(allowed, dm.sum(axis=1), -np.inf).argmax())
     sel = [start]
-    rem[labels[start]] -= 1
+    counts[labels[start]] += 1
     taken = np.zeros(n, bool)
     taken[start] = True
     min_dist = dm[start].astype(np.float64).copy()
     for _ in range(k - 1):
-        feas = (rem[labels] > 0) & ~taken
+        feas = mat.grow_mask(counts)[labels] & ~taken
         cand = np.where(feas, min_dist, -np.inf)
         j = int(cand.argmax())
         if not np.isfinite(cand[j]):
             raise ValueError("quotas infeasible for the candidate set")
         sel.append(j)
         taken[j] = True
-        rem[labels[j]] -= 1
+        counts[labels[j]] += 1
         min_dist = np.minimum(min_dist, dm[j])
     return np.asarray(sel, np.int64)
 
@@ -100,11 +104,14 @@ def _offdiag_min(sub: np.ndarray) -> float:
 
 
 def local_search(dm: np.ndarray, labels: np.ndarray, sel: np.ndarray,
-                 measure: str, *, max_rounds: int = 10,
-                 tol: float = 1e-9) -> np.ndarray:
-    """Same-group swap descent.  A swap (p ∈ S, q ∉ S, label(q) == label(p))
-    preserves partition-matroid feasibility, so the search space is exactly
-    the feasible neighborhood.
+                 measure: str, *, matroid: Optional[Matroid] = None,
+                 max_rounds: int = 10, tol: float = 1e-9) -> np.ndarray:
+    """Oracle-checked exchange descent.  A swap (p ∈ S, q ∉ S) is feasible
+    iff the matroid admits S − p + q as a complete solution — the matroid's
+    ``swap_mask`` answers that for all n candidates at once, so the search
+    space is exactly the feasible exchange neighborhood.  ``matroid=None``
+    keeps the legacy rule (same-group swaps — the exact-partition-quota
+    neighborhood).
 
     Per round, for every selected p the improvement of ALL its candidate
     replacements is evaluated at once from the precomputed ``dm``:
@@ -128,13 +135,20 @@ def local_search(dm: np.ndarray, labels: np.ndarray, sel: np.ndarray,
     in_sel = np.zeros(n, bool)
     in_sel[sel] = True
     clique = measure == "remote-clique"
+    counts = None
+    if matroid is not None:
+        counts = np.bincount(labels[sel], minlength=matroid.m)
 
     for _ in range(max_rounds):
         improved = False
         for pos in range(k):
             p = sel[pos]
             rest = np.delete(sel, pos)
-            cand = np.where((labels == labels[p]) & ~in_sel)[0]
+            if matroid is None:
+                cand_ok = labels == labels[p]
+            else:
+                cand_ok = matroid.swap_mask(counts, int(labels[p]))[labels]
+            cand = np.where(cand_ok & ~in_sel)[0]
             if cand.size == 0:
                 continue
             d_cand = dm[np.ix_(cand, rest)]              # (c, k-1) batched
@@ -157,81 +171,97 @@ def local_search(dm: np.ndarray, labels: np.ndarray, sel: np.ndarray,
                     in_sel[cand[b]] = True
                     sel[pos] = cand[b]
                     improved = True
+            if sel[pos] != p and counts is not None:
+                counts[labels[p]] -= 1
+                counts[labels[sel[pos]]] += 1
         if not improved:
             break
     return sel
 
 
-def _search_space_size(labels: np.ndarray, quotas: np.ndarray) -> int:
-    counts = np.bincount(labels, minlength=quotas.shape[0])
-    total = 1
-    for c, q in zip(counts, quotas):
-        total *= math.comb(int(c), int(q))
-        if total > 10 ** 9:
-            break
-    return total
-
-
-def constrained_solve(points, labels, quotas, measure: str = "remote-edge", *,
+def constrained_solve(points, labels, quotas=None,
+                      measure: str = "remote-edge", *,
+                      matroid: Optional[Matroid] = None,
                       metric="euclidean", swap_rounds: int = 10,
                       exact_limit: int = 5000,
                       dm: Optional[np.ndarray] = None) -> np.ndarray:
-    """Feasible greedy + local search.  Returns row indices into ``points``
-    with ``exactly quotas[g]`` picks from every group g (k = Σ quotas).
+    """Feasible greedy + oracle-checked local search.  Returns row indices
+    into ``points`` forming a feasible basis of the matroid (``k`` = the
+    matroid's target size; for exact quotas, exactly ``quotas[g]`` picks per
+    group).
 
-    When the enumeration space ``prod_g C(n_g, q_g)`` is at most
-    ``exact_limit`` the exact brute-force solver runs instead (small
-    instances deserve the true optimum; pass ``exact_limit=0`` to force the
-    greedy + local-search path).
+    When the enumeration space (Σ over feasible count vectors of
+    ``prod_g C(n_g, c_g)``) is at most ``exact_limit`` the exact brute-force
+    solver runs instead (small instances deserve the true optimum; pass
+    ``exact_limit=0`` to force the greedy + local-search path).
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(0)
+    >>> pts = rng.normal(size=(40, 2)).astype(np.float32)
+    >>> lab = rng.integers(0, 2, size=40)
+    >>> idx = constrained_solve(pts, lab, [2, 2], exact_limit=0)
+    >>> np.bincount(lab[idx], minlength=2).tolist()
+    [2, 2]
     """
+    mat = as_matroid(matroid, quotas)
     labels = np.asarray(labels)
-    quotas = np.asarray(quotas, np.int64)
-    _check_quotas(labels, quotas)
-    if exact_limit and _search_space_size(labels, quotas) <= exact_limit:
-        _, idx = brute_force_constrained(points, labels, quotas, measure,
-                                         metric=metric)
+    mat.validate_ground_set(labels)
+    if exact_limit and mat.search_space_size(labels,
+                                             cap=exact_limit) <= exact_limit:
+        _, idx = brute_force_constrained(points, labels, measure=measure,
+                                         matroid=mat, metric=metric)
         return idx
     if dm is None:
         dm = _pairwise_np(points, metric)
-    sel = feasible_greedy(dm, labels, quotas)
+    sel = feasible_greedy(dm, labels, matroid=mat)
     if swap_rounds > 0 and measure in LOCAL_SEARCH_MEASURES:
-        sel = local_search(dm, labels, sel, measure, max_rounds=swap_rounds)
+        sel = local_search(dm, labels, sel, measure, matroid=mat,
+                           max_rounds=swap_rounds)
     return sel
 
 
-def solve_and_value(points, labels, quotas, measure: str = "remote-edge", *,
-                    metric="euclidean", swap_rounds: int = 10,
+def solve_and_value(points, labels, quotas=None,
+                    measure: str = "remote-edge", *,
+                    matroid: Optional[Matroid] = None, metric="euclidean",
+                    swap_rounds: int = 10,
                     exact_limit: int = 5000) -> Tuple[np.ndarray, float]:
     """``constrained_solve`` + objective evaluation of the selected subset —
     the shared tail of every constrained driver.  Returns (indices, value)."""
-    sel = constrained_solve(points, labels, quotas, measure, metric=metric,
-                            swap_rounds=swap_rounds, exact_limit=exact_limit)
+    sel = constrained_solve(points, labels, quotas, measure, matroid=matroid,
+                            metric=metric, swap_rounds=swap_rounds,
+                            exact_limit=exact_limit)
     sol = jnp.asarray(np.asarray(points)[sel])
     dm = np.asarray(get_metric(metric).pairwise(sol, sol))
     return sel, diversity(measure, dm)
 
 
-def brute_force_constrained(points, labels, quotas, measure: str, *,
+def brute_force_constrained(points, labels, quotas=None,
+                            measure: str = "remote-edge", *,
+                            matroid: Optional[Matroid] = None,
                             metric="euclidean") -> Tuple[float, np.ndarray]:
-    """Exact constrained optimum by enumeration over per-group combinations.
+    """Exact constrained optimum by enumeration: every feasible count vector
+    of the matroid × every per-group combination realizing it.
 
-    Returns (value, indices).  Cost is ``prod_g C(n_g, q_g)`` subset
-    evaluations — test scale only.
+    Returns (value, indices).  Cost is ``Σ_c prod_g C(n_g, c_g)`` subset
+    evaluations — test scale only.  For exact quotas there is a single count
+    vector and this is the original per-group enumeration.
     """
+    mat = as_matroid(matroid, quotas)
     labels = np.asarray(labels)
-    quotas = np.asarray(quotas, np.int64)
-    _check_quotas(labels, quotas)
-    m = quotas.shape[0]
+    mat.validate_ground_set(labels)
+    m = mat.m
     dm = _pairwise_np(points, metric)
     group_members = [np.where(labels == g)[0] for g in range(m)]
-    per_group = [itertools.combinations(gm.tolist(), int(q))
-                 for gm, q in zip(group_members, quotas)]
+    avail = np.asarray([gm.shape[0] for gm in group_members], np.int64)
     best_val, best_idx = -np.inf, None
-    for combo in itertools.product(*per_group):
-        idx = np.asarray([i for part in combo for i in part], np.int64)
-        val = diversity(measure, dm[np.ix_(idx, idx)])
-        if val > best_val:
-            best_val, best_idx = val, idx
+    for cvec in mat.basis_count_vectors(avail):
+        per_group = [itertools.combinations(gm.tolist(), int(q))
+                     for gm, q in zip(group_members, cvec)]
+        for combo in itertools.product(*per_group):
+            idx = np.asarray([i for part in combo for i in part], np.int64)
+            val = diversity(measure, dm[np.ix_(idx, idx)])
+            if val > best_val:
+                best_val, best_idx = val, idx
     if best_idx is None:
         raise ValueError("empty search space (all quotas zero?)")
     return float(best_val), best_idx

@@ -1,16 +1,18 @@
-"""Streaming partition-matroid diversity: one SMM state per group.
+"""Streaming matroid-constrained diversity: one SMM state per group.
 
 Mirrors ``repro.core.smm.StreamingCoreset`` but for labelled streams: the
 matroid-coreset composition (see package docstring) says running the paper's
 streaming construction *independently per group* and taking the union yields a
-constrained-problem core-set.  Each incoming ``(chunk, labels)`` pair is
-routed to the per-group SMM states with one boolean partition of the chunk —
-the per-group updates then reuse the chunked/vectorized SMM path unchanged
-(one ``(c_g, |T_g|)`` distance matmul per touched group).
+constrained-problem core-set — for ANY label-count matroid, since the
+composition argument only moves points to same-group proxies.  Each incoming
+``(chunk, labels)`` pair is routed to the per-group SMM states with one
+boolean partition of the chunk — the per-group updates then reuse the
+chunked/vectorized SMM path unchanged (one ``(c_g, |T_g|)`` distance matmul
+per touched group).
 
 ``fair_streaming_diversity`` is the convenience end-to-end driver used by the
 test-suite and benchmarks: stream → per-group core-sets → feasible-greedy +
-local-search solve on the union.
+oracle-checked local-search solve on the union.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ from .solver import constrained_solve
 
 
 class FairStreamingCoreset:
-    """Per-group streaming core-sets for a partition matroid over m groups.
+    """Per-group streaming core-sets for a label-count matroid over m groups.
 
     Usage::
 
@@ -32,10 +34,20 @@ class FairStreamingCoreset:
         for chunk, labels in labelled_stream:
             smm.update(chunk, labels)
         pts, labels = smm.finalize()        # union, tagged with group ids
+
+    ``matroid=`` derives ``m``/``k`` from any ``repro.constrained.matroid``
+    oracle instead of spelling them out (the stream-side state is identical —
+    the oracle only matters to the downstream solver).
     """
 
-    def __init__(self, m: int, k: int, kprime: int, dim: int, *,
+    def __init__(self, m: Optional[int] = None, k: Optional[int] = None,
+                 kprime: int = 64, dim: int = 0, *, matroid=None,
                  metric="euclidean", mode: str = "plain"):
+        from .matroid import derive_mk
+
+        m, k = derive_mk(matroid, m, k, "FairStreamingCoreset")
+        if dim <= 0:
+            raise ValueError("FairStreamingCoreset needs a positive dim")
         if m < 1:
             raise ValueError(f"need m >= 1 groups, got {m}")
         self.m, self.k, self.kprime, self.dim = m, k, kprime, dim
@@ -92,7 +104,7 @@ class FairStreamingCoreset:
         return r
 
 
-def fair_streaming_diversity(points, labels, quotas, *,
+def fair_streaming_diversity(points, labels, quotas=None, *, matroid=None,
                              measure: str = "remote-edge",
                              kprime: Optional[int] = None, chunk: int = 4096,
                              metric="euclidean", mode: Optional[str] = None,
@@ -100,15 +112,18 @@ def fair_streaming_diversity(points, labels, quotas, *,
     """End-to-end single-pass streaming driver.
 
     Streams ``points``/``labels`` in chunks through per-group SMM states and
-    solves on the union.  Returns (solution_points (k, d), solution_labels).
+    solves on the union with the matroid oracle (``quotas=`` is sugar for an
+    exact-quota ``PartitionMatroid``).  Returns (solution_points (k, d),
+    solution_labels).
     """
     from repro.core.measures import NEEDS_INJECTIVE
 
+    from .matroid import as_matroid
+
+    mat = as_matroid(matroid, quotas)
     pts = np.asarray(points, np.float32)
     labels = np.asarray(labels)
-    quotas = np.asarray(quotas, np.int64)
-    m = quotas.shape[0]
-    k = int(quotas.sum())
+    m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
     if mode is None:
@@ -118,6 +133,7 @@ def fair_streaming_diversity(points, labels, quotas, *,
     for i in range(0, pts.shape[0], chunk):
         smm.update(pts[i:i + chunk], labels[i:i + chunk])
     cand_pts, cand_labels = smm.finalize()
-    sel = constrained_solve(cand_pts, cand_labels, quotas, measure,
-                            metric=metric, swap_rounds=swap_rounds)
+    sel = constrained_solve(cand_pts, cand_labels, measure=measure,
+                            matroid=mat, metric=metric,
+                            swap_rounds=swap_rounds)
     return cand_pts[sel], cand_labels[sel]

@@ -68,6 +68,15 @@ def build_coreset(points, k: int, kprime: int, measure: str, *,
     ``b``/``chunk`` select the batched lookahead-b engine (``gmm_batched``)
     instead of the one-center-per-sweep loop; ``b`` is snapped to a divisor
     of ``kprime``.
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(0)
+    >>> pts = rng.normal(size=(500, 4)).astype(np.float32)
+    >>> cs = build_coreset(pts, k=4, kprime=16, measure="remote-edge")
+    >>> cs.size                     # k' centers, all valid
+    16
+    >>> float(cs.radius) > 0.0      # anticover radius r_T (telemetry)
+    True
     """
     from repro.core.gmm import (effective_block, gmm as _gmm, gmm_batched,
                                 gmm_ext as _gmm_ext, gmm_gen as _gmm_gen)
@@ -105,6 +114,15 @@ def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = 
     """End-to-end: core-set + sequential α-approx solver.
 
     Returns (solution_points (k,d) ndarray, value, coreset).
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(0)
+    >>> pts = rng.normal(size=(1000, 3)).astype(np.float32)
+    >>> sol, value, cs = diversity_maximize(pts, k=5, measure="remote-edge")
+    >>> sol.shape
+    (5, 3)
+    >>> bool(value > 0.0)
+    True
     """
     from .measures import diversity
     from .metrics import get_metric

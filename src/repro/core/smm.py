@@ -243,14 +243,26 @@ def _seq_insert(state: SMMState, chunk, cvalid, start, metric_name: str,
 
 
 class StreamingCoreset:
-    """Host-side driver around the jitted SMM steps.
+    """Host-side driver around the jitted SMM steps — the paper's one-pass
+    streaming core-set (§4/§6.1) with `O(k'·k)` state.
 
-    Usage::
+    ``mode="plain"`` keeps centers only (remote-edge/cycle, Thm 4);
+    ``mode="ext"`` keeps up to k delegates per center (the clique-type
+    measures, Thm 5); ``mode="gen"`` keeps multiplicities (generalized
+    core-sets, Thm 9).  Feed chunks of any size — state is chunk-invariant.
 
-        smm = StreamingCoreset(k=16, kprime=256, dim=3, mode="ext")
-        for chunk in stream:           # numpy/jax arrays (c, dim)
-            smm.update(chunk)
-        coreset = smm.finalize()       # Coreset or GeneralizedCoreset
+    >>> import numpy as np
+    >>> from repro.core import StreamingCoreset, solve_on_coreset
+    >>> rng = np.random.default_rng(0)
+    >>> smm = StreamingCoreset(k=4, kprime=16, dim=3)
+    >>> for _ in range(5):                  # any chunking works
+    ...     smm.update(rng.normal(size=(200, 3)).astype(np.float32))
+    >>> smm.n_seen
+    1000
+    >>> cs = smm.finalize()                 # composable Coreset
+    >>> sol = solve_on_coreset(cs, k=4, measure="remote-edge")
+    >>> sol.shape
+    (4, 3)
     """
 
     def __init__(self, k: int, kprime: int, dim: int, *, metric="euclidean",

@@ -69,31 +69,53 @@ def balanced_quotas(group_labels: np.ndarray, k: int, m: Optional[int] = None
 def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
                    kprime: Optional[int] = None, num_reducers: int = 1,
                    metric="euclidean", group_labels=None, quotas=None,
-                   b: int = 1, chunk: int = 0) -> np.ndarray:
+                   matroid=None, b: int = 1, chunk: int = 0) -> np.ndarray:
     """Returns indices of the k selected examples.
 
     With ``group_labels`` (an ``(n,)`` int array of category ids) the
-    selection is constrained to a partition matroid: ``quotas[g]`` picks from
-    every group g (defaults to a balanced split of k across groups), via the
-    ``repro.constrained`` subsystem.
+    selection is matroid-constrained via the ``repro.constrained``
+    subsystem: ``quotas=`` is sugar for an exact-quota partition matroid
+    (``quotas[g]`` picks from every group g, defaulting to a balanced split
+    of k across groups), while ``matroid=`` accepts any
+    ``repro.constrained.matroid`` oracle — quota ranges, transversal slot
+    eligibility, laminar nested caps.
 
     ``b``/``chunk`` tune the single-sweep selection engine shared by every
     path (lookahead-b center blocking + chunk-fused sweeps; see
     ``core.gmm.gmm_batched`` / ``constrained.coreset``): ``b=1`` is exact
     GMM, ``b`` in 4–16 cuts point-set sweeps ~b× for large pools at a few-%
     selection-fidelity cost.
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(0)
+    >>> emb = rng.normal(size=(200, 8)).astype(np.float32)
+    >>> idx = select_diverse(emb, 8)                     # unconstrained
+    >>> len(idx) == len(set(idx.tolist())) == 8
+    True
+    >>> lab = rng.integers(0, 4, size=200)
+    >>> idx = select_diverse(emb, 6, group_labels=lab, quotas=[3, 1, 1, 1])
+    >>> np.bincount(lab[idx], minlength=4).tolist()
+    [3, 1, 1, 1]
     """
     pts = np.asarray(embeddings, np.float32)
     if group_labels is not None:
+        from repro.constrained import PartitionMatroid
+
         labels = np.asarray(group_labels)
-        if quotas is None:
-            quotas = balanced_quotas(labels, k)
-        quotas = np.asarray(quotas, np.int64)
-        if int(quotas.sum()) != k:
-            raise ValueError(f"sum(quotas)={int(quotas.sum())} != k={k}")
+        if matroid is None:
+            if quotas is None:
+                quotas = balanced_quotas(labels, k)
+            quotas = np.asarray(quotas, np.int64)
+            if int(quotas.sum()) != k:
+                raise ValueError(f"sum(quotas)={int(quotas.sum())} != k={k}")
+            matroid = PartitionMatroid(quotas)
+        elif quotas is not None:
+            raise ValueError("pass either matroid= or quotas=, not both")
+        if matroid.k != k:
+            raise ValueError(f"matroid.k={matroid.k} != k={k}")
         if num_reducers > 1:
             from repro.constrained import simulate_fair_mr
-            sol, sol_lab, _ = simulate_fair_mr(pts, labels, quotas,
+            sol, sol_lab, _ = simulate_fair_mr(pts, labels, matroid=matroid,
                                                num_reducers=num_reducers,
                                                measure=measure, kprime=kprime,
                                                metric=metric, b=b, chunk=chunk)
@@ -102,12 +124,14 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
             return _match_rows(pts, sol, k, row_labels=labels,
                                sol_labels=sol_lab)
         from repro.constrained import fair_diversity_maximize
-        idx, _, _ = fair_diversity_maximize(pts, labels, quotas, measure,
-                                            kprime=kprime, metric=metric,
-                                            b=b, chunk=chunk)
+        idx, _, _ = fair_diversity_maximize(pts, labels, measure=measure,
+                                            matroid=matroid, kprime=kprime,
+                                            metric=metric, b=b, chunk=chunk)
         return np.asarray(idx)
     if quotas is not None:
         raise ValueError("quotas= requires group_labels=")
+    if matroid is not None:
+        raise ValueError("matroid= requires group_labels=")
     if num_reducers > 1:
         sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
                              kprime=kprime, metric=metric, b=b, chunk=chunk)

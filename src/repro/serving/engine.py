@@ -76,20 +76,31 @@ class ServingEngine:
 
 def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
                    measure: str = "remote-edge", *, group_labels=None,
-                   quotas=None, b: int = 1, chunk: int = 0) -> np.ndarray:
+                   quotas=None, matroid=None, b: int = 1,
+                   chunk: int = 0) -> np.ndarray:
     """Pick the k most diverse candidates; returns their indices.
 
     ``quotas`` (with per-candidate ``group_labels``) constrains the result to
-    a partition matroid — exactly ``quotas[g]`` picks from category g (fair
-    serving: per-source / per-topic slates), and must sum to ``k``.
-    ``quotas`` without ``group_labels`` is an error; ``group_labels`` alone
-    balances k across the categories.
+    an exact-quota partition matroid — exactly ``quotas[g]`` picks from
+    category g (fair serving: per-source / per-topic slates), and must sum to
+    ``k``; ``matroid=`` accepts any ``repro.constrained.matroid`` oracle
+    instead (quota ranges for SLO bands, transversal slot eligibility,
+    laminar nested caps).  ``quotas``/``matroid`` without ``group_labels`` is
+    an error; ``group_labels`` alone balances k across the categories.
 
     ``b``/``chunk`` pass through to the single-sweep selection engine
     (``select_diverse``) — worth setting for large candidate pools where the
     rerank is latency-critical.
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(1)
+    >>> emb = rng.normal(size=(64, 16)).astype(np.float32)
+    >>> lab = rng.integers(0, 3, size=64)
+    >>> idx = diverse_rerank(emb, 6, group_labels=lab, quotas=[2, 2, 2])
+    >>> np.bincount(lab[idx], minlength=3).tolist()
+    [2, 2, 2]
     """
     from repro.data.selection import select_diverse
     return select_diverse(candidate_embeddings, k, measure=measure,
                           group_labels=group_labels, quotas=quotas,
-                          b=b, chunk=chunk)
+                          matroid=matroid, b=b, chunk=chunk)

@@ -16,8 +16,18 @@ SUBPROC_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
 
 # The runtime image has no ``hypothesis``; install a deterministic fallback
 # (same given/settings/strategies surface) so the property tests still run
-# instead of failing at collection.  The real package wins when present.
+# instead of failing at collection.  The real package ALWAYS wins when
+# importable — the shim only fills a missing dependency, it never shadows.
+# ``REPRO_NO_HYPOTHESIS_FALLBACK=1`` turns the silent shim into a hard error
+# (CI images that are supposed to bake the real package in set it so a
+# regressed image fails loudly).  Documented in README "Development"; drop
+# the whole block once the runtime image bakes ``hypothesis`` in.
 if importlib.util.find_spec("hypothesis") is None:
+    if os.environ.get("REPRO_NO_HYPOTHESIS_FALLBACK") == "1":
+        raise ImportError(
+            "hypothesis is not installed and REPRO_NO_HYPOTHESIS_FALLBACK=1 "
+            "forbids the deterministic fallback shim "
+            "(tests/_hypothesis_fallback.py); pip install hypothesis")
     # import by path: ``tests`` is not a package, and the repo root is only
     # on sys.path under ``python -m pytest``, not the bare ``pytest`` entry
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,372 @@
+"""Matroid-oracle layer tests: the matroid axioms on every shipped oracle,
+crafted transversal/laminar feasibility instances, the quota-range greedy's
+lower-bound reservation, and the bit-identical regression of the
+``PartitionMatroid`` (exact quotas) path against a frozen copy of the
+pre-refactor hard-coded quota solver."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.constrained import (LaminarMatroid, PartitionMatroid,
+                               TransversalMatroid, as_matroid,
+                               brute_force_constrained, constrained_solve,
+                               fair_diversity_maximize, feasible_greedy,
+                               local_search)
+from repro.core.metrics import get_metric
+
+
+def _random_matroids(rng):
+    """A grab-bag of small oracles exercising every implementation."""
+    yield PartitionMatroid([2, 1, 2])
+    yield PartitionMatroid(q_min=[1, 0, 0], q_max=[3, 2, 2], k=4)
+    yield PartitionMatroid(q_min=[0, 0], q_max=[4, 4], k=3)
+    elig = rng.random((3, 4)) < 0.6
+    elig[np.arange(3), rng.integers(0, 4, size=3)] = True  # no dead group
+    yield TransversalMatroid(elig)
+    yield TransversalMatroid(np.array([[1, 1, 0], [0, 1, 1], [1, 0, 1]],
+                                      bool), k=2)
+    yield LaminarMatroid(4, [([0, 1], 2), ([2], 1), ([0, 1, 2, 3], 4)])
+    yield LaminarMatroid(3, [([0], 1), ([1], 1), ([0, 1, 2], 3)])
+
+
+def _independent_subsets(mat, labels, rng, tries=60):
+    """Sample independent label-subsets of varying size via random greedy."""
+    out = []
+    for _ in range(tries):
+        order = rng.permutation(len(labels))
+        sel = []
+        stop = rng.integers(1, mat.k + 1)
+        for i in order:
+            if len(sel) >= stop:
+                break
+            if mat.independence_oracle(labels[sel + [i]]):
+                sel.append(int(i))
+        out.append(sel)
+    return out
+
+
+# --------------------------------------------------------------------------
+# matroid axioms on the count-vector oracle
+# --------------------------------------------------------------------------
+
+def test_exchange_property():
+    """For independent A, B with |A| < |B| there is x ∈ B∖A with A+x
+    independent — the defining matroid axiom, checked on sampled label
+    subsets of every shipped oracle."""
+    rng = np.random.default_rng(0)
+    for mat in _random_matroids(rng):
+        labels = rng.integers(0, mat.m, size=40)
+        subsets = _independent_subsets(mat, labels, rng)
+        for a in subsets:
+            for b in subsets:
+                if len(a) >= len(b):
+                    continue
+                extras = [x for x in b if x not in a]
+                assert any(
+                    mat.independence_oracle(labels[a + [x]]) for x in extras
+                ), (type(mat).__name__, a, b)
+
+
+def test_downward_closure_and_empty_set():
+    rng = np.random.default_rng(1)
+    for mat in _random_matroids(rng):
+        labels = rng.integers(0, mat.m, size=30)
+        assert mat.independence_oracle(np.zeros(0, np.int64))
+        for sel in _independent_subsets(mat, labels, rng, tries=20):
+            for drop in range(len(sel)):
+                sub = sel[:drop] + sel[drop + 1:]
+                assert mat.independence_oracle(labels[sub])
+
+
+def test_rank_matches_brute_force():
+    """Greedy rank == max independent subset size by enumeration (tiny)."""
+    import itertools
+    rng = np.random.default_rng(2)
+    for mat in _random_matroids(rng):
+        labels = rng.integers(0, mat.m, size=7)
+        best = 0
+        for r in range(len(labels) + 1):
+            for combo in itertools.combinations(range(len(labels)), r):
+                if mat.independence_oracle(labels[list(combo)]):
+                    best = max(best, r)
+        assert mat.rank(labels) == best, type(mat).__name__
+
+
+# --------------------------------------------------------------------------
+# crafted transversal / laminar instances
+# --------------------------------------------------------------------------
+
+def test_transversal_hall_violation():
+    # groups 0 and 1 both only fit slot 0 -> two picks from {G0, G1} fail
+    elig = np.array([[1, 0], [1, 0], [0, 1]], bool)
+    tm = TransversalMatroid(elig)
+    assert tm.counts_feasible(np.array([1, 0, 1]))
+    assert tm.counts_feasible(np.array([0, 1, 1]))
+    assert not tm.counts_feasible(np.array([1, 1, 0]))
+    assert not tm.counts_feasible(np.array([2, 0, 0]))
+    assert tm.rank(np.array([0, 0, 1, 1])) == 1  # only slot 0 reachable
+
+
+def test_transversal_augmenting_path():
+    # matching needs reassignment: g0 takes s0 first, then g1 (only s0)
+    # forces g0 to move to s1 — a 2-step augmenting path
+    elig = np.array([[1, 1], [1, 0]], bool)
+    tm = TransversalMatroid(elig)
+    assert tm.counts_feasible(np.array([1, 1]))
+    assert not tm.counts_feasible(np.array([0, 2]))
+    assert tm.counts_feasible(np.array([2, 0]))
+
+
+def test_transversal_solution_matchable():
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(200, 3)).astype(np.float32)
+    lab = rng.integers(0, 3, size=200)
+    elig = np.array([[1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 1, 1]], bool)
+    tm = TransversalMatroid(elig)
+    sel = constrained_solve(pts, lab, matroid=tm, exact_limit=0)
+    assert len(sel) == 4 == len(set(sel.tolist()))
+    assert tm.independence_oracle(lab[sel])
+
+
+def test_laminar_nested_caps():
+    lam = LaminarMatroid(4, [([0, 1], 2), ([0], 1), ([0, 1, 2, 3], 3)])
+    assert lam.k == 3
+    assert lam.counts_feasible(np.array([1, 1, 1, 0]))
+    assert not lam.counts_feasible(np.array([2, 0, 1, 0]))   # |S ∩ {0}| = 2
+    assert not lam.counts_feasible(np.array([1, 2, 0, 0]))   # |S ∩ {0,1}| = 3
+    assert lam.counts_feasible(np.array([0, 2, 1, 0]))
+
+
+def test_laminar_rejects_non_laminar():
+    with pytest.raises(ValueError, match="laminar"):
+        LaminarMatroid(3, [([0, 1], 1), ([1, 2], 1), ([0, 1, 2], 2)])
+    with pytest.raises(ValueError, match="root"):
+        LaminarMatroid(3, [([0, 1], 1)])           # no root, no k
+
+
+def test_laminar_solution_feasible():
+    rng = np.random.default_rng(6)
+    pts = rng.normal(size=(300, 3)).astype(np.float32)
+    lab = rng.integers(0, 4, size=300)
+    lam = LaminarMatroid(4, [([0, 1], 2), ([2, 3], 2), ([0, 1, 2, 3], 3)])
+    idx, _, _ = fair_diversity_maximize(pts, lab, matroid=lam, kprime=16)
+    assert len(idx) == 3 == len(set(idx.tolist()))
+    assert lam.independence_oracle(lab[idx])
+
+
+# --------------------------------------------------------------------------
+# quota ranges (q_min / q_max)
+# --------------------------------------------------------------------------
+
+def test_quota_range_lower_bound_reservation():
+    """The greedy must hold back picks for lower-bound groups even when they
+    never win the farthest-point race: group 1 is a tight cluster near the
+    origin and carries q_min=2."""
+    rng = np.random.default_rng(7)
+    far = rng.normal(size=(40, 2)).astype(np.float32) * 10.0
+    near = rng.normal(size=(40, 2)).astype(np.float32) * 0.01
+    pts = np.concatenate([far, near])
+    lab = np.concatenate([np.zeros(40, np.int64), np.ones(40, np.int64)])
+    pm = PartitionMatroid(q_min=[0, 2], q_max=[4, 4], k=5)
+    sel = constrained_solve(pts, lab, matroid=pm, exact_limit=0)
+    counts = np.bincount(lab[sel], minlength=2)
+    assert pm.basis_feasible(counts)
+    assert counts[1] >= 2
+
+
+def test_quota_range_validation():
+    with pytest.raises(ValueError, match="q_min"):
+        PartitionMatroid(q_min=[2, 0], q_max=[1, 3], k=2)
+    with pytest.raises(ValueError, match="outside"):
+        PartitionMatroid(q_min=[0, 0], q_max=[2, 2], k=5)
+    with pytest.raises(ValueError, match="explicit k"):
+        PartitionMatroid(q_min=[0, 0], q_max=[2, 2])
+    pm = PartitionMatroid(q_min=[3, 0], q_max=[3, 3], k=4)
+    lab = np.array([0, 0, 1, 1, 1])                # only 2 of group 0
+    with pytest.raises(ValueError, match="quota"):
+        constrained_solve(np.eye(5, 3, dtype=np.float32), lab, matroid=pm)
+
+
+def test_quota_range_cross_group_swaps_allowed():
+    """With slack ranges the exchange neighborhood includes cross-group
+    swaps; the oracle must admit them and the result must stay feasible and
+    no worse than the greedy basis."""
+    rng = np.random.default_rng(8)
+    pts = rng.normal(size=(150, 3)).astype(np.float32)
+    lab = rng.integers(0, 3, size=150)
+    pm = PartitionMatroid(q_min=[0, 0, 0], q_max=[4, 4, 4], k=6)
+    dm = np.asarray(get_metric("euclidean").pairwise(jnp.asarray(pts),
+                                                     jnp.asarray(pts)))
+    sel0 = feasible_greedy(dm, lab, matroid=pm)
+    sel1 = local_search(dm, lab, sel0, "remote-edge", matroid=pm)
+    assert pm.basis_feasible(np.bincount(lab[sel1], minlength=3))
+    v0 = dm[np.ix_(sel0, sel0)][~np.eye(6, dtype=bool)].min()
+    v1 = dm[np.ix_(sel1, sel1)][~np.eye(6, dtype=bool)].min()
+    assert v1 >= v0 - 1e-9
+
+
+def test_negative_labels_rejected_at_solver_boundary():
+    """The engine's -1 pad sentinel must never reach the solver: the greedy
+    mask gather would wrap it to group m-1."""
+    pts = np.eye(6, 3, dtype=np.float32)
+    lab = np.array([0, 0, 1, 1, 1, -1])
+    for mat in (PartitionMatroid([1, 1]),
+                TransversalMatroid(np.ones((2, 2), bool)),
+                LaminarMatroid(2, [([0, 1], 2)])):
+        with pytest.raises(ValueError, match="out of range"):
+            constrained_solve(pts, lab, matroid=mat)
+
+
+def test_search_space_size_cap_bails_early():
+    """constrained_solve passes exact_limit as the cap, so a huge transversal
+    candidate set must not enumerate its full count-vector space."""
+    import time
+    tm = TransversalMatroid(np.ones((4, 8), bool))
+    lab = np.repeat(np.arange(4), 100)               # 100 per group, k=8
+    t0 = time.perf_counter()
+    assert tm.search_space_size(lab, cap=5000) > 5000
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_as_matroid_sugar():
+    pm = as_matroid(None, [2, 1])
+    assert isinstance(pm, PartitionMatroid) and pm.exact and pm.k == 3
+    with pytest.raises(ValueError, match="not both"):
+        as_matroid(pm, [2, 1])
+    with pytest.raises(ValueError, match="required"):
+        as_matroid(None, None)
+    with pytest.raises(TypeError, match="Matroid"):
+        as_matroid(np.array([2, 1]))
+
+
+# --------------------------------------------------------------------------
+# bit-identical regression vs the pre-refactor hard-coded quota path
+# --------------------------------------------------------------------------
+# Frozen reference: the exact greedy + same-group-swap implementation the
+# subsystem shipped before the oracle refactor (PR 1/2).  The oracle path
+# with an exact-quota PartitionMatroid must reproduce it bit-for-bit.
+
+def _ref_feasible_greedy(dm, labels, quotas, start=None):
+    n = dm.shape[0]
+    labels = np.asarray(labels)
+    rem = np.asarray(quotas, np.int64).copy()
+    k = int(rem.sum())
+    if k == 0:
+        return np.zeros((0,), np.int64)
+    allowed = rem[labels] > 0
+    if start is None:
+        start = int(np.where(allowed, dm.sum(axis=1), -np.inf).argmax())
+    sel = [start]
+    rem[labels[start]] -= 1
+    taken = np.zeros(n, bool)
+    taken[start] = True
+    min_dist = dm[start].astype(np.float64).copy()
+    for _ in range(k - 1):
+        feas = (rem[labels] > 0) & ~taken
+        cand = np.where(feas, min_dist, -np.inf)
+        j = int(cand.argmax())
+        sel.append(j)
+        taken[j] = True
+        rem[labels[j]] -= 1
+        min_dist = np.minimum(min_dist, dm[j])
+    return np.asarray(sel, np.int64)
+
+
+def _ref_local_search(dm, labels, sel, measure, max_rounds=10, tol=1e-9):
+    def offdiag_min(sub):
+        if sub.shape[0] < 2:
+            return np.inf
+        return float((sub + np.where(np.eye(sub.shape[0], dtype=bool),
+                                     np.inf, 0.0)).min())
+
+    n = dm.shape[0]
+    labels = np.asarray(labels)
+    sel = np.asarray(sel, np.int64).copy()
+    k = sel.shape[0]
+    if k < 2:
+        return sel
+    in_sel = np.zeros(n, bool)
+    in_sel[sel] = True
+    clique = measure == "remote-clique"
+    for _ in range(max_rounds):
+        improved = False
+        for pos in range(k):
+            p = sel[pos]
+            rest = np.delete(sel, pos)
+            cand = np.where((labels == labels[p]) & ~in_sel)[0]
+            if cand.size == 0:
+                continue
+            d_cand = dm[np.ix_(cand, rest)]
+            if clique:
+                cur = dm[p, rest].sum()
+                gain = d_cand.sum(axis=1) - cur
+                b = int(gain.argmax())
+                if gain[b] > tol:
+                    in_sel[p], in_sel[cand[b]] = False, True
+                    sel[pos] = cand[b]
+                    improved = True
+            else:
+                base = offdiag_min(dm[np.ix_(rest, rest)])
+                cur = min(base, float(dm[p, rest].min()))
+                new = np.minimum(d_cand.min(axis=1), base)
+                b = int(new.argmax())
+                if new[b] > cur + tol:
+                    in_sel[p], in_sel[cand[b]] = False, True
+                    sel[pos] = cand[b]
+                    improved = True
+        if not improved:
+            break
+    return sel
+
+
+@pytest.mark.parametrize("measure", ["remote-edge", "remote-clique"])
+def test_partition_matroid_bit_identical_to_quota_path(measure):
+    """Greedy picks, local-search swaps and therefore the final index
+    sequences must be IDENTICAL (order included) between the oracle path
+    with exact quotas and the frozen pre-refactor implementation."""
+    metric = get_metric("euclidean")
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        n, m = 120, 3
+        pts = rng.normal(size=(n, 3)).astype(np.float32)
+        lab = rng.integers(0, m, size=n)
+        lab[:m] = np.arange(m)
+        quotas = np.asarray([2, 3, 1])
+        dm = np.asarray(metric.pairwise(jnp.asarray(pts), jnp.asarray(pts)))
+
+        ref = _ref_feasible_greedy(dm, lab, quotas)
+        got_sugar = feasible_greedy(dm, lab, quotas)
+        got_oracle = feasible_greedy(dm, lab,
+                                     matroid=PartitionMatroid(quotas))
+        np.testing.assert_array_equal(ref, got_sugar)
+        np.testing.assert_array_equal(ref, got_oracle)
+
+        ref_ls = _ref_local_search(dm, lab, ref, measure)
+        got_legacy = local_search(dm, lab, ref, measure)
+        got_matroid = local_search(dm, lab, ref, measure,
+                                   matroid=PartitionMatroid(quotas))
+        np.testing.assert_array_equal(ref_ls, got_legacy)
+        np.testing.assert_array_equal(ref_ls, got_matroid)
+
+        full_sugar = constrained_solve(pts, lab, quotas, measure,
+                                       exact_limit=0, dm=dm)
+        full_oracle = constrained_solve(pts, lab, measure=measure,
+                                        matroid=PartitionMatroid(quotas),
+                                        exact_limit=0, dm=dm)
+        np.testing.assert_array_equal(ref_ls, full_sugar)
+        np.testing.assert_array_equal(ref_ls, full_oracle)
+
+
+def test_brute_force_matches_quota_enumeration():
+    """Exact path: the matroid enumeration must visit exactly the per-group
+    combination space of the quota vector and return the same optimum."""
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(10, 2)).astype(np.float32)
+    lab = rng.integers(0, 2, size=10)
+    lab[:2] = [0, 1]
+    val_sugar, idx_sugar = brute_force_constrained(pts, lab, [2, 2],
+                                                   "remote-edge")
+    val_mat, idx_mat = brute_force_constrained(
+        pts, lab, measure="remote-edge", matroid=PartitionMatroid([2, 2]))
+    assert val_sugar == val_mat
+    np.testing.assert_array_equal(idx_sugar, idx_mat)
