@@ -1,0 +1,176 @@
+"""Adaptive-engine quality/speed study: fixed b vs ``b="auto"`` across a
+cluster-count sweep (ISSUE 4 acceptance).
+
+The lookahead-b engine degrades when k' exceeds the data's effective cluster
+count (each sweep's first pick is exact, so quality falls toward exact GMM
+with k'/b centers); the adaptive controller must close that gap — within 10%
+of the exact b=1 radius on EVERY shape — while keeping the >= 3× wall-clock
+win over b=1 on the large shapes where the lookahead is safe.  Each row
+records both sides of that bargain, and ``emit_json`` writes the
+machine-readable ``BENCH_adaptive.json`` artifact the CI perf gate and trend
+summary consume (``benchmarks/compare.py``).
+
+Shapes marked ``large`` are the speedup-bearing ones (n >= 2^16 in the quick
+profile); the small clustered shapes exist to stress quality, not speed —
+in the flat-radius regime the controller intentionally falls back to exact
+b=1 sweeps, so no speedup is expected or required there.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gmm
+from repro.core.adaptive import gmm_adaptive
+from repro.core.gmm import gmm_batched
+from repro.data import clustered_dataset
+
+
+def _time_all(fns, repeats: int = 3):
+    """Wall clock for several engines, ROUND-ROBIN interleaved so background
+    load drift on a shared CPU hits every engine equally.  Returns
+    (best (len(fns),), cycles (repeats, len(fns))): ``best`` is the usual
+    best-of-N per engine; ``cycles`` keeps the per-cycle times so ratios can
+    be computed within a cycle (engines run back-to-back there, which
+    correlates the load they see — the robust way to measure a speedup on a
+    machine whose capacity drifts between seconds-apart windows)."""
+    for fn in fns:
+        jax.block_until_ready(fn())  # warm up jit caches, drain the queue
+    cycles = np.zeros((repeats, len(fns)))
+    for r in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            cycles[r, i] = time.perf_counter() - t0
+    return list(cycles.min(axis=0)), cycles
+
+
+def _dataset(n: int, d: int, clusters: Optional[int], seed: int = 0,
+             spread: float = 0.05):
+    if clusters is None:
+        return jnp.asarray(np.random.default_rng(seed)
+                           .normal(size=(n, d)).astype(np.float32))
+    # tight clusters (default spread): the degradation regime needs
+    # within-cluster spread far below the cluster separation so the
+    # post-coverage radius curve is flat
+    return jnp.asarray(clustered_dataset(n, clusters=clusters, dim=d,
+                                         seed=seed, spread=spread))
+
+
+def shapes(quick: bool = True) -> List[Dict]:
+    n_small = 2 ** 14 if quick else 2 ** 16
+    n_large = 2 ** 20 if quick else 2 ** 21
+    return [
+        # quality sweep: k' spans the effective cluster count (n small so
+        # the exact-b=1 reference stays cheap; nothing here is about speed)
+        {"name": "clu4", "n": n_small, "d": 8, "clusters": 4, "kprime": 64,
+         "b": 8, "chunk": 4096, "large": False},
+        {"name": "clu16", "n": n_small, "d": 8, "clusters": 16, "kprime": 64,
+         "b": 8, "chunk": 4096, "large": False},
+        {"name": "clu64", "n": n_small, "d": 8, "clusters": 64, "kprime": 64,
+         "b": 8, "chunk": 4096, "large": False},
+        {"name": "uniform", "n": n_small, "d": 8, "clusters": None,
+         "kprime": 64, "b": 8, "chunk": 4096, "large": False},
+        # speedup-bearing shapes: low-d large-n, where the b=1 sweep is
+        # memory-bound and the lookahead's ~b x traffic cut shows up as
+        # wall-clock (higher d is compute-bound on CPU and flop counts are
+        # identical across engines)
+        {"name": "uniform-large", "n": n_large, "d": 4, "clusters": None,
+         "kprime": 128, "b": 16, "chunk": 16384, "large": True},
+        # mild clustering (wide spread): structure without the pathological
+        # tightness that caps safe lookahead at clusters-per-pool — on the
+        # tight-cluster plateau shapes above, exact quality and >1.5x
+        # speedup are mutually exclusive for ANY engine (the safe pick rate
+        # is bounded by the cluster count per sweep), so the speed
+        # acceptance lives on shapes where speed is achievable
+        {"name": "clu1k-large", "n": n_large, "d": 4, "clusters": 1024,
+         "spread": 0.5, "kprime": 128, "b": 16, "chunk": 16384,
+         "large": True},
+    ]
+
+
+def run(quick: bool = True, *,
+        only: Optional[List[str]] = None) -> List[Dict]:
+    """Benchmark b=1 (exact), fixed b, and b="auto" per shape."""
+    rows: List[Dict] = []
+    for sh in shapes(quick):
+        if only and sh["name"] not in only:
+            continue
+        pts = _dataset(sh["n"], sh["d"], sh["clusters"],
+                       spread=sh.get("spread", 0.05))
+        kp, b, chunk = sh["kprime"], sh["b"], sh["chunk"]
+
+        (t_b1, t_bf, t_auto), cycles = _time_all([
+            lambda: gmm(pts, kp).min_dist,
+            lambda: gmm_batched(pts, kp, b=b, chunk=chunk)[2],
+            lambda: gmm_adaptive(pts, kp, b0=b, chunk=chunk).min_dist,
+        ])
+        r_b1 = float(gmm(pts, kp).radius)
+        r_bf = float(gmm_batched(pts, kp, b=b, chunk=chunk)[1])
+        res = gmm_adaptive(pts, kp, b0=b, chunk=chunk)
+        r_auto = float(res.radius)
+
+        # speedup = median of per-cycle ratios (load-correlated; see
+        # _time_all) — best-of times still reported for trend reading
+        speedups = np.median(cycles[:, :1] / np.maximum(cycles, 1e-9),
+                             axis=0)
+        for (engine, t, r), sp in zip(
+                (("b1", t_b1, r_b1), (f"b{b}", t_bf, r_bf),
+                 ("auto", t_auto, r_auto)), speedups):
+            rows.append({
+                "shape": sh["name"], "engine": engine, "n": sh["n"],
+                "d": sh["d"], "clusters": sh["clusters"] or 0, "kprime": kp,
+                "large": sh["large"],
+                "time_s": round(t, 4),
+                "radius": round(r, 6),
+                "radius_ratio_vs_b1": round(r / max(r_b1, 1e-12), 4),
+                "speedup_vs_b1": round(float(sp), 2),
+            })
+        rows[-1]["b_schedule"] = [list(ph) for ph in res.schedule]
+        print(f"[adaptive] {sh['name']:<14} b1={t_b1:6.3f}s "
+              f"b{b}={t_bf:6.3f}s (r×{rows[-2]['radius_ratio_vs_b1']:.3f}) "
+              f"auto={t_auto:6.3f}s (r×{rows[-1]['radius_ratio_vs_b1']:.3f},"
+              f" {res.schedule})")
+    return rows
+
+
+def summarize(rows: List[Dict]) -> Dict:
+    """Acceptance view: worst auto radius ratio anywhere, min auto speedup
+    on the large shapes, and the fixed-b worst ratio (the gap auto closes)."""
+    auto = [r for r in rows if r["engine"] == "auto"]
+    fixed = [r for r in rows if r["engine"] not in ("auto", "b1")]
+    large = [r for r in auto if r["large"]]
+    return {
+        "auto_worst_radius_ratio": max((r["radius_ratio_vs_b1"]
+                                        for r in auto), default=0.0),
+        "fixed_worst_radius_ratio": max((r["radius_ratio_vs_b1"]
+                                         for r in fixed), default=0.0),
+        "auto_min_speedup_large": min((r["speedup_vs_b1"] for r in large),
+                                      default=0.0),
+        "auto_radius_within_10pct": all(r["radius_ratio_vs_b1"] <= 1.10
+                                        for r in auto),
+    }
+
+
+def emit_json(rows: List[Dict], path: str = "BENCH_adaptive.json") -> Dict:
+    doc = {
+        "benchmark": "adaptive-engine",
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "summary": summarize(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[adaptive] wrote {path} (summary: {doc['summary']})")
+    return doc
+
+
+if __name__ == "__main__":
+    import sys
+    emit_json(run(quick="--full" not in sys.argv))

@@ -1,0 +1,221 @@
+"""Perf regression gate + trend report over the bench JSON artifacts.
+
+``python -m benchmarks.compare`` diffs a fresh quick-profile run (the
+``BENCH_*.json`` files in the current directory) against the committed
+baselines in ``benchmarks/baselines/`` and exits non-zero when any engine
+shape regressed by more than the threshold (default 25%).
+
+Comparison metric: *normalized* wall-clock — each row's ``time_s`` divided
+by its benchmark's in-run reference leg (the exact b=1 row of the same run,
+per shape where the benchmark has shapes).  Normalizing inside each run
+makes the gate portable across machines: CI runners and dev boxes differ in
+absolute speed, but "the batched engine is 6× faster than the b=1 sweep it
+replaced" is a property of the code, and that is the claim the gate
+protects.  Absolute times are still printed in the report for trend
+reading.
+
+``--summary FILE`` appends a markdown trend table (speedups + radius-quality
+ratios, baseline vs fresh) — CI points this at ``$GITHUB_STEP_SUMMARY`` to
+publish the per-run dashboard the ROADMAP asked for.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+#: benchmark file -> (row key fields, reference-row predicate, ref scope)
+#: the reference row supplies the in-run normalizer; scope "shape" uses one
+#: reference per shape, "global" one per document.
+SPECS = {
+    "BENCH_gmm.json": {
+        "key": ("path",),
+        "is_ref": lambda r: r["path"] == "gmm-b1",
+        "scope": "global",
+        "quality": None,
+    },
+    "BENCH_adaptive.json": {
+        "key": ("shape", "engine"),
+        "is_ref": lambda r: r["engine"] == "b1",
+        "scope": "shape",
+        "quality": "radius_ratio_vs_b1",
+    },
+}
+
+
+def load(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _key(row: dict, fields) -> str:
+    return ":".join(str(row[f]) for f in fields)
+
+
+def normalized_times(doc: dict, spec: dict) -> Dict[str, float]:
+    """Row key -> time_s / reference time_s (the machine-portable metric)."""
+    rows = doc["rows"]
+    if spec["scope"] == "shape":
+        ref = {r["shape"]: r["time_s"] for r in rows if spec["is_ref"](r)}
+        return {_key(r, spec["key"]): r["time_s"] / max(ref.get(
+            r.get("shape"), 0.0), 1e-9) for r in rows}
+    ref_t = next((r["time_s"] for r in rows if spec["is_ref"](r)), None)
+    if not ref_t:
+        return {}
+    return {_key(r, spec["key"]): r["time_s"] / ref_t for r in rows}
+
+
+def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
+                min_time: float = 0.05) -> Tuple[List[dict], List[str]]:
+    """Returns (per-row records, regression messages).  Rows whose absolute
+    wall-clock is below ``min_time`` in both runs are report-only: a 10 ms
+    row swings far past any threshold on timer/load noise alone, and the
+    engine-shape coverage the gate protects lives in the heavyweight rows.
+    """
+    bn, fn = normalized_times(base, spec), normalized_times(fresh, spec)
+    braw = {_key(r, spec["key"]): r for r in base["rows"]}
+    fraw = {_key(r, spec["key"]): r for r in fresh["rows"]}
+    records, regressions = [], []
+    for key in fn:
+        rec = {
+            "key": key,
+            "base_time_s": braw[key]["time_s"] if key in braw else None,
+            "fresh_time_s": fraw[key]["time_s"],
+            "base_norm": bn.get(key),
+            "fresh_norm": fn[key],
+        }
+        q = spec["quality"]
+        if q:
+            rec["base_quality"] = braw.get(key, {}).get(q)
+            rec["fresh_quality"] = fraw[key].get(q)
+        if key in bn and bn[key] > 1e-9:
+            rec["delta"] = fn[key] / bn[key] - 1.0
+            gated = (rec["fresh_time_s"] >= min_time
+                     or (rec["base_time_s"] or 0.0) >= min_time)
+            if gated and rec["delta"] > threshold:
+                regressions.append(
+                    f"{key}: normalized time {bn[key]:.3f} -> {fn[key]:.3f} "
+                    f"(+{100 * rec['delta']:.0f}% > "
+                    f"{100 * threshold:.0f}% threshold)")
+        records.append(rec)
+    # a row the baseline gates that vanished from the fresh run is itself a
+    # regression (lost coverage must not read as green)
+    for key in bn:
+        if key not in fn and (braw[key]["time_s"] or 0.0) >= min_time:
+            regressions.append(f"{key}: present in baseline but missing "
+                               f"from the fresh run (lost bench coverage)")
+    return records, regressions
+
+
+def _fmt(x, nd=3):
+    if x is None:
+        return "—"
+    return f"{x:.{nd}f}"
+
+
+def render_summary(results: Dict[str, Tuple[List[dict], List[str]]],
+                   docs: Dict[str, Tuple[Optional[dict], dict]]) -> str:
+    """Markdown trend dashboard: one table per benchmark (baseline vs fresh
+    normalized time + quality ratios), plus the headline speedup/summary
+    blocks each benchmark emits."""
+    out = ["# Bench trend report", ""]
+    for name, (records, regressions) in results.items():
+        base_doc, fresh_doc = docs[name]
+        out.append(f"## {name}")
+        out.append("")
+        has_quality = any("fresh_quality" in r for r in records)
+        head = "| shape/engine | base s | fresh s | base ×b1 | fresh ×b1 |"
+        rule = "|---|---|---|---|---|"
+        if has_quality:
+            head += " base r/r(b1) | fresh r/r(b1) |"
+            rule += "---|---|"
+        head += " Δ norm |"
+        rule += "---|"
+        out.extend([head, rule])
+        for r in sorted(records, key=lambda x: x["key"]):
+            row = (f"| {r['key']} | {_fmt(r['base_time_s'])} | "
+                   f"{_fmt(r['fresh_time_s'])} | {_fmt(r['base_norm'])} | "
+                   f"{_fmt(r['fresh_norm'])} |")
+            if has_quality:
+                row += (f" {_fmt(r.get('base_quality'))} | "
+                        f"{_fmt(r.get('fresh_quality'))} |")
+            delta = r.get("delta")
+            row += f" {'—' if delta is None else f'{100 * delta:+.0f}%'} |"
+            out.append(row)
+        out.append("")
+        headline = (fresh_doc.get("speedups") or fresh_doc.get("summary")
+                    or {})
+        if headline:
+            out.append("headline: `" + json.dumps(headline) + "`")
+            out.append("")
+        if regressions:
+            out.append("**REGRESSIONS:**")
+            out.extend(f"- {msg}" for msg in regressions)
+            out.append("")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE_DIR,
+                    help="directory holding the committed baseline JSONs")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly generated JSONs")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fail on normalized-time regression above this")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown trend report to this file "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--min-time", type=float, default=0.05,
+                    help="rows faster than this in both runs are "
+                         "report-only (timer noise)")
+    args = ap.parse_args(argv)
+
+    results, docs = {}, {}
+    all_regressions: List[str] = []
+    compared = 0
+    for name, spec in SPECS.items():
+        fresh = load(os.path.join(args.fresh, name))
+        if fresh is None:
+            print(f"[compare] {name}: no fresh run, skipped")
+            continue
+        base = load(os.path.join(args.baseline, name))
+        docs[name] = (base, fresh)
+        if base is None:
+            print(f"[compare] {name}: no baseline committed, report-only")
+            results[name] = (compare_doc(fresh, fresh, spec, args.threshold,
+                                         args.min_time)[0], [])
+            continue
+        records, regressions = compare_doc(base, fresh, spec, args.threshold,
+                                           args.min_time)
+        results[name] = (records, regressions)
+        all_regressions.extend(f"{name} {m}" for m in regressions)
+        compared += 1
+        print(f"[compare] {name}: {len(records)} rows, "
+              f"{len(regressions)} regression(s)")
+
+    if args.summary and results:
+        report = render_summary(results, docs)
+        with open(args.summary, "a") as f:
+            f.write(report + "\n")
+        print(f"[compare] trend report appended to {args.summary}")
+
+    if all_regressions:
+        print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in all_regressions:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    if compared:
+        print("[compare] gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -86,6 +86,17 @@ def main(argv=None) -> None:
     print(table(rows, ["path", "n", "k", "b", "m", "time_s", "sweeps",
                        "effective_gbps"], "GMM engine"))
 
+    print("\n" + "=" * 72)
+    print("Adaptive engine — fixed b vs b=\"auto\" cluster sweep "
+          "(BENCH_adaptive.json)")
+    print("=" * 72)
+    from benchmarks import bench_adaptive
+    rows = bench_adaptive.run(quick=quick)
+    bench_adaptive.emit_json(rows, path="BENCH_adaptive.json")
+    print(table(rows, ["shape", "engine", "n", "clusters", "kprime",
+                       "time_s", "radius_ratio_vs_b1", "speedup_vs_b1"],
+                "Adaptive engine"))
+
     if not args.skip_roofline and os.path.isdir("results"):
         print("\n" + "=" * 72)
         print("§Roofline — dry-run derived terms (TPU v5e model)")

@@ -58,7 +58,8 @@ unconstrained machinery:
 Serving/data integration: ``repro.serving.diverse_rerank(..., quotas=...)``
 and ``repro.data.select_diverse(..., group_labels=...)`` route here.
 """
-from .coreset import GroupedCoreset, fair_diversity_maximize, grouped_coreset
+from .coreset import (GroupedCoreset, fair_diversity_maximize,
+                      grouped_adaptive, grouped_coreset)
 from .mapreduce import (FairCoreset, mr_fair_diversity, mr_grouped_coreset,
                         simulate_fair_mr)
 from .matroid import (LaminarMatroid, Matroid, PartitionMatroid,
@@ -68,7 +69,8 @@ from .solver import (brute_force_constrained, constrained_solve,
 from .streaming import FairStreamingCoreset, fair_streaming_diversity
 
 __all__ = [
-    "GroupedCoreset", "grouped_coreset", "fair_diversity_maximize",
+    "GroupedCoreset", "grouped_coreset", "grouped_adaptive",
+    "fair_diversity_maximize",
     "FairCoreset", "mr_grouped_coreset", "mr_fair_diversity",
     "simulate_fair_mr", "constrained_solve", "feasible_greedy",
     "local_search", "brute_force_constrained", "solve_and_value",

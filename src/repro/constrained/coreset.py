@@ -25,9 +25,9 @@ every group's chunk-local top candidates under the label mask;
 MXU matmul per tile serves all ``m`` group masks (flops are free on the MXU;
 HBM traffic is the constraint) — same interface, same selections.
 
-Tuning: ``b`` in 4–16 cuts point-set sweeps from k' to k'/b + 2 at a few-%
+Tuning: ``b`` in 4–16 cuts point-set sweeps from k' to k'/b + 1 at a few-%
 anticover-radius cost (``b=1`` reproduces exact per-group GMM bit-for-bit);
-each sweep oversamples 2b candidates per group and an exact in-block GMM
+each sweep oversamples 4b candidates per group and an exact in-block GMM
 keeps the best b.  Caveat: lookahead quality degrades when k' exceeds the
 data's effective cluster count — only each sweep's first pick is exact, so
 the radius falls toward that of exact GMM with k'/b centers; keep b well
@@ -48,8 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gmm import (_adjust_chunk, _gmm_impl, _pad_to_chunk,
-                            delegates_from_assign, effective_block, gmm_ext)
+from repro.core.gmm import (_gmm_impl, _schedule_select_impl,
+                            delegates_from_assign, effective_block, gmm_ext,
+                            pad_for_engine)
 from repro.core.measures import NEEDS_INJECTIVE
 from repro.core.metrics import get_metric
 
@@ -65,6 +66,7 @@ class GroupedCoreset(NamedTuple):
     valid: jnp.ndarray      # (m, s) bool
     radius: jnp.ndarray     # (m,) per-group proxy-distance bound r_T
     group_count: jnp.ndarray  # (m,) int32 — |group g| in the input
+    cert: Optional[object] = None  # RadiusCertificate (adaptive/auto paths)
 
     def flatten(self):
         """Host-side (cand_idx, cand_labels) for the valid union rows."""
@@ -88,34 +90,19 @@ def _group_stats(labels, m: int):
     return masks, counts, starts
 
 
-def pad_for_engine(points, labels, chunk: int):
-    """Snap ``chunk`` to the point count and pad (points, labels) so that it
-    divides n — pad rows carry label -1, which matches no group, so they can
-    never be selected or counted.  Works under tracing (shapes are static).
-
-    ``chunk=0`` defaults to 4096-row tiles (not the whole array): the sweep
-    and the ext assign pass gather per-point center blocks, so an unbounded
-    chunk would materialize an (n, b·d)/(n, k'·d) tile and defeat the
-    engine's cache/VMEM-resident design.  b=1 selection is chunk-invariant
-    (per-chunk top-k + first-max merge == global argmax), so the default
-    only bounds memory, never changes results."""
-    n = points.shape[0]
-    ch = _adjust_chunk(n, chunk or 4096)
-    pad = _pad_to_chunk(n, ch)
-    if pad:
-        points = jnp.pad(points, ((0, pad), (0, 0)))
-        labels = jnp.pad(labels, (0, pad), constant_values=-1)
-    return points, labels, ch
-
-
 # --------------------------------------------------------------------------
-# single-sweep selection engine (group-blocked batched GMM)
+# single-sweep selection engine (group-blocked batched GMM) — the engine body
+# itself lives in ``core.gmm._schedule_select_impl`` (the unconstrained
+# batched GMM is its m=1 case); this wrapper adds the per-group
+# validity/radius bookkeeping and keeps the historical interface.
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("m", "kprime", "b", "chunk",
-                                             "metric_name", "use_pallas"))
+                                             "metric_name", "use_pallas",
+                                             "schedule"))
 def _grouped_select_impl(points, labels, m: int, kprime: int, b: int,
-                         chunk: int, metric_name: str, use_pallas: bool):
+                         chunk: int, metric_name: str, use_pallas: bool,
+                         schedule=None):
     """All ``m`` per-group GMM runs in lock-step: one fused sweep per round.
 
     Returns (idx (m, k'), valid (m, k'), radius (m,), counts (m,),
@@ -124,123 +111,36 @@ def _grouped_select_impl(points, labels, m: int, kprime: int, b: int,
     GMM runs are independent), so each sweep costs n·b·d distance work —
     m× less than the vmapped formulation — and the field is (n,), not
     (m, n).  ``b=1`` is exact per-group GMM; ``b>1`` is the lookahead-b
-    approximation (kprime must be a multiple of b).
+    approximation (kprime must be a multiple of b); ``schedule`` overrides
+    ``b`` with an explicit (block, rounds) phase plan (the static form of
+    the adaptive controller's decisions, used by the MR reducers).
     """
-    metric = get_metric(metric_name)
-    n, d = points.shape
-    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
     _, counts, starts = _group_stats(labels, m)
-    rounds = kprime // b
-    # 2× candidate oversampling: each sweep surfaces 2b candidates per group
-    # and the exact in-block GMM keeps the best b — recovers most of the
-    # fidelity a larger block loses, at zero extra point-set sweeps.
-    p = min(2 * b, n) if b > 1 else 1
-
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        def sweep(min_dist, centers):
-            return kops.grouped_gmm_topb(points, centers, min_dist, labels,
-                                         metric_name, p)
-    else:
-        nch = n // chunk
-        gids = jnp.arange(m, dtype=labels.dtype)[:, None]
-        safe_lab = jnp.clip(labels, 0, m - 1)     # pad rows (-1) -> any group
-
-        def sweep(min_dist, centers):
-            """One fused pass for all groups: each point gathers its own
-            group's bc-center block ((chunk, bc, d) — n·bc·d distance work
-            total), updates the shared running-min field, and every group's
-            chunk-local top-p is extracted under its label mask; the
-            (n, m·bc) distance matrix never exists."""
-
-            def chunk_fn(c):
-                x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
-                lb = jax.lax.dynamic_slice(labels, (c * chunk,), (chunk,))
-                sl = jax.lax.dynamic_slice(safe_lab, (c * chunk,), (chunk,))
-                md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
-                cen = centers[sl]                         # (chunk, bc, d)
-                dist = jax.vmap(metric.point_to_set)(cen, x)   # (chunk, bc)
-                new_md = jnp.minimum(md, jnp.min(dist, axis=1))
-                masked = jnp.where(lb[None, :] == gids, new_md[None, :],
-                                   neg_inf)               # (m, chunk)
-                cd, ci = jax.lax.top_k(masked, min(p, chunk))   # (m, p)
-                return new_md, cd, (ci + c * chunk).astype(jnp.int32)
-
-            new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
-            pc = cd.shape[2]
-            min_dist = new_md.reshape(n)
-            flat_d = jnp.moveaxis(cd, 0, 1).reshape(m, nch * pc)
-            flat_i = jnp.moveaxis(ci, 0, 1).reshape(m, nch * pc)
-            sel_d, sel = jax.lax.top_k(flat_d, min(p, nch * pc))  # merge
-            return min_dist, sel_d, jnp.take_along_axis(flat_i, sel, axis=1)
-
-    def inblock(cand_d, cand_i, take):
-        """Exact local GMM over each group's candidate pool (vmapped; p×p):
-        greedily pick ``take`` of the p candidates, correcting for mutual
-        distances within the pool."""
-        def one(cd, ci):
-            def pick(j, carry):
-                cd, chosen = carry
-                s = jnp.argmax(cd)
-                chosen = chosen.at[j].set(ci[s])
-                dd = metric.point_to_set(points[ci], points[ci[s]])
-                cd = jnp.minimum(cd, dd).at[s].set(neg_inf)
-                return cd, chosen
-
-            _, chosen = jax.lax.fori_loop(
-                0, take, pick, (cd, jnp.zeros((take,), jnp.int32)))
-            return chosen
-
-        return jax.vmap(one)(cand_d, cand_i)
-
-    idx = jnp.zeros((m, kprime), jnp.int32).at[:, 0].set(starts)
-    min0 = jnp.full((n,), jnp.inf, jnp.float32)
-    if b > 1:
-        # block 0: sweep the seeds once, then lookahead-fill slots 1..b-1
-        # (greedy over the top-p-from-seed candidates, exact within the pool)
-        min_dist, cand_d, cand_i = sweep(min0, points[starts][:, None, :])
-        chosen = inblock(cand_d, cand_i, b)
-        idx = idx.at[:, 1:b].set(chosen[:, :b - 1])
-    else:
-        min_dist = min0  # body's first sweep covers the seed
-
-    def body(r, state):
-        min_dist, idx = state
-        prev = jax.lax.dynamic_slice(idx, (0, (r - 1) * b), (m, b))
-        min_dist, cand_d, cand_i = sweep(min_dist, points[prev])
-        idx = jax.lax.dynamic_update_slice(idx, inblock(cand_d, cand_i, b),
-                                           (0, r * b))
-        return min_dist, idx
-
-    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx))
-    # final sweep: fold the last block into the field; its per-group masked
-    # max IS the anticover radius r_T
-    last = jax.lax.dynamic_slice(idx, (0, (rounds - 1) * b), (m, b))
-    min_dist, cand_d, _ = sweep(min_dist, points[last])
-    radius = jnp.where(counts > 0, jnp.maximum(cand_d[:, 0], 0.0), 0.0)
+    if schedule is None:
+        schedule = ((b, kprime // b),)
+    idx, rad, min_dist, _, _ = _schedule_select_impl(
+        points, labels, starts, m, kprime, schedule, chunk, metric_name,
+        use_pallas)
+    radius = jnp.where(counts > 0, jnp.maximum(rad, 0.0), 0.0)
     # a group with c < k' members yields duplicate selections at the tail;
     # slots >= c are marked invalid (greedy exhausts distinct points first)
     valid = jnp.arange(kprime)[None, :] < jnp.minimum(counts, kprime)[:, None]
     return idx, valid, radius, counts, min_dist
 
 
-@functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "b", "chunk",
-                                             "metric_name", "use_pallas"))
-def _grouped_ext_blocked_impl(points, labels, m: int, k: int, kprime: int,
-                              b: int, chunk: int, metric_name: str,
-                              use_pallas: bool):
-    """Grouped GMM-EXT on the single-sweep engine: blocked selection, then ONE
-    chunked fused pass recovers every point's nearest OWN-group kernel center
+@functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "chunk",
+                                             "metric_name"))
+def _grouped_delegates_impl(points, labels, idx, m: int, k: int, kprime: int,
+                            chunk: int, metric_name: str):
+    """Delegate extraction for a grouped kernel ``idx`` (m, k'): ONE chunked
+    fused pass recovers every point's nearest OWN-group kernel center
     (a (chunk, k', d) gathered tile — n·k'·d work, m× less than the all-group
     sweep, and the (n, m·k') matrix never exists), then the shared delegate
     extraction runs per group (out-of-group rows are masked to the sentinel
     cluster there, so the single shared assignment serves every group)."""
     metric = get_metric(metric_name)
     n, d = points.shape
-    idx, _, radius, counts, _ = _grouped_select_impl(
-        points, labels, m, kprime, b, chunk, metric_name, use_pallas)
-    masks, _, _ = _group_stats(labels, m)
+    masks, counts, _ = _group_stats(labels, m)
 
     centers3 = points[idx]                                    # (m, k', d)
     safe_lab = jnp.clip(labels, 0, m - 1)
@@ -264,6 +164,22 @@ def _grouped_ext_blocked_impl(points, labels, m: int, k: int, kprime: int,
     # an empty group contributes nothing (the center-forcing step in the
     # delegate extraction would otherwise fabricate one spurious delegate)
     dvalid = dvalid & (counts > 0)[:, None]
+    return didx, dvalid
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "b", "chunk",
+                                             "metric_name", "use_pallas",
+                                             "schedule"))
+def _grouped_ext_blocked_impl(points, labels, m: int, k: int, kprime: int,
+                              b: int, chunk: int, metric_name: str,
+                              use_pallas: bool, schedule=None):
+    """Grouped GMM-EXT on the single-sweep engine: blocked (or scheduled)
+    selection + the shared one-pass delegate extraction."""
+    idx, _, radius, counts, _ = _grouped_select_impl(
+        points, labels, m, kprime, b, chunk, metric_name, use_pallas,
+        schedule=schedule)
+    didx, dvalid = _grouped_delegates_impl(points, labels, idx, m, k, kprime,
+                                           chunk, metric_name)
     return didx, dvalid, radius, counts
 
 
@@ -309,14 +225,87 @@ def _grouped_ext_impl(points, labels, m: int, k: int, kprime: int,
 
 
 # --------------------------------------------------------------------------
+# adaptive (auto-tuned) grouped builder
+# --------------------------------------------------------------------------
+
+def grouped_adaptive(points, labels, m: int, k: int, kprime, *,
+                     measure: str = "remote-edge", metric="euclidean",
+                     use_pallas: bool = False, b="auto", chunk: int = 0,
+                     eps: Optional[float] = None,
+                     kprime_max: Optional[int] = None) -> GroupedCoreset:
+    """Radius-certified grouped builder: all m per-group GMM runs advance in
+    lock-step under the adaptive-b controller (``core.adaptive``), shrinking
+    the lookahead block when ANY inhabited group's greedy-consistency margin
+    falls below its fresh radius; ``kprime="auto"`` additionally grows k'
+    geometrically until every inhabited group's measured certificate ratio
+    meets ``eps`` (groups smaller than the current selection are certified
+    trivially — all their points are centers).  Returns a ``GroupedCoreset``
+    whose ``cert`` carries the worst-group certificate plus per-group
+    ratios."""
+    from repro.core.adaptive import (adaptive_select, auto_milestones,
+                                     certificate_from_trajectory, _ratio)
+
+    points = jnp.asarray(points)
+    labels_np = np.asarray(labels)
+    n = points.shape[0]
+    metric_name = get_metric(metric).name
+    counts_np = np.bincount(labels_np[labels_np >= 0], minlength=m)[:m]
+    starts = np.zeros((m,), np.int32)
+    for g in range(m):
+        hits = np.nonzero(labels_np == g)[0]
+        starts[g] = hits[0] if hits.size else 0
+    b0 = 8 if b == "auto" else max(1, int(b))
+    eps_t = 0.1 if eps is None else eps
+    if kprime == "auto":
+        kmax, miles = auto_milestones(k, n, kprime_max)
+        run = adaptive_select(points, labels_np, starts, m, kmax, b0=b0,
+                              chunk=chunk, metric=metric,
+                              use_pallas=use_pallas, milestones=miles,
+                              eps=eps_t, scale_count=k,
+                              group_counts=counts_np)
+    else:
+        run = adaptive_select(points, labels_np, starts, m, int(kprime),
+                              b0=b0, chunk=chunk, metric=metric,
+                              use_pallas=use_pallas, scale_count=k,
+                              group_counts=counts_np)
+    kp = run.ksel
+    counts = jnp.asarray(counts_np.astype(np.int32))
+    radius = jnp.where(counts > 0,
+                       jnp.maximum(jnp.asarray(run.radius), 0.0), 0.0)
+    # per-group certificate ratios (scale sampled at the first >= k fold)
+    si = next((i for i, c in enumerate(run.counts) if c >= k),
+              len(run.counts) - 1)
+    ratios = tuple(
+        _ratio(max(float(run.radius[g]), 0.0), float(run.traj[si, g]))
+        if counts_np[g] > 0 else 0.0 for g in range(m))
+    cert = certificate_from_trajectory(
+        run.counts, np.maximum(run.traj, 0.0).max(axis=1), k,
+        eps=eps_t if kprime == "auto" else eps,
+        b_schedule=run.schedule, group_ratios=ratios)
+    idx = jnp.asarray(run.idx)
+    if measure in NEEDS_INJECTIVE:
+        pts_p, lab_p, ch = pad_for_engine(points,
+                                          jnp.asarray(labels_np, jnp.int32),
+                                          chunk)
+        didx, dvalid = _grouped_delegates_impl(pts_p, lab_p, idx, m, k, kp,
+                                               ch, metric_name)
+        return GroupedCoreset(idx=didx, valid=dvalid, radius=radius,
+                              group_count=counts, cert=cert)
+    valid = jnp.arange(kp)[None, :] < jnp.minimum(counts, kp)[:, None]
+    return GroupedCoreset(idx=idx, valid=valid, radius=radius,
+                          group_count=counts, cert=cert)
+
+
+# --------------------------------------------------------------------------
 # public builder + end-to-end driver
 # --------------------------------------------------------------------------
 
 def grouped_coreset(points, labels, m: Optional[int] = None,
-                    k: Optional[int] = None, kprime: Optional[int] = None, *,
+                    k: Optional[int] = None, kprime=None, *,
                     matroid=None, measure: str = "remote-edge",
-                    metric="euclidean", use_pallas: bool = False, b: int = 1,
-                    chunk: int = 0) -> GroupedCoreset:
+                    metric="euclidean", use_pallas: bool = False, b=1,
+                    chunk: int = 0, schedule=None,
+                    eps: Optional[float] = None) -> GroupedCoreset:
     """Build the union-of-per-group core-sets for a label-count matroid.
 
     ``labels`` is an ``(n,)`` int array in ``[0, m)``.  Each group contributes
@@ -333,7 +322,10 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
 
     All paths run on the single-sweep engine (see module docstring): ``b=1``
     (default) is exact per-group GMM, ``b>1`` enables lookahead-b center
-    blocking (b is snapped to a divisor of ``kprime``), ``chunk`` sizes the
+    blocking (b is snapped to a divisor of ``kprime``), ``b="auto"`` /
+    ``kprime="auto"`` run the radius-certified adaptive controller
+    (``grouped_adaptive``; ``eps`` is the auto-k' accuracy target),
+    ``schedule`` pins an explicit (block, rounds) plan, ``chunk`` sizes the
     fused sweep tile, and ``use_pallas=True`` uses the group-blocked Pallas
     kernel for the sweep.
     """
@@ -347,26 +339,34 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
     n = points.shape[0]
     if labels.shape != (n,):
         raise ValueError(f"labels shape {labels.shape} != ({n},)")
+    if b == "auto" or kprime == "auto":
+        return grouped_adaptive(points, labels, m, k, kprime, measure=measure,
+                                metric=metric, use_pallas=use_pallas, b=b,
+                                chunk=chunk, eps=eps)
     if not 1 <= kprime <= n:
         raise ValueError(f"kprime={kprime} out of range for n={n}")
     metric_name = get_metric(metric).name
-    b = effective_block(kprime, b)
+    if schedule is None:
+        b = effective_block(kprime, b)
     points, labels, chunk = pad_for_engine(points, labels, chunk)
     if measure in NEEDS_INJECTIVE:
         idx, valid, radius, counts = _grouped_ext_blocked_impl(
-            points, labels, m, k, kprime, b, chunk, metric_name, use_pallas)
+            points, labels, m, k, kprime, b, chunk, metric_name, use_pallas,
+            schedule=schedule)
     else:
         idx, valid, radius, counts, _ = _grouped_select_impl(
-            points, labels, m, kprime, b, chunk, metric_name, use_pallas)
+            points, labels, m, kprime, b, chunk, metric_name, use_pallas,
+            schedule=schedule)
     return GroupedCoreset(idx=idx, valid=valid, radius=radius,
                           group_count=counts)
 
 
 def fair_diversity_maximize(points, labels, quotas=None,
                             measure: str = "remote-edge", *, matroid=None,
-                            kprime: Optional[int] = None, metric="euclidean",
+                            kprime=None, metric="euclidean",
                             use_pallas: bool = False, swap_rounds: int = 10,
-                            b: int = 1, chunk: int = 0):
+                            b=1, chunk: int = 0,
+                            eps: Optional[float] = None):
     """End-to-end single-machine constrained pipeline: per-group core-set →
     feasible-greedy + oracle-checked local-search solve on the union.
 
@@ -376,7 +376,9 @@ def fair_diversity_maximize(points, labels, quotas=None,
 
     Returns (indices (k,) into ``points`` forming a feasible matroid basis,
     value, GroupedCoreset).  ``b``/``chunk`` tune the selection engine (see
-    ``grouped_coreset``).
+    ``grouped_coreset``); ``b="auto"`` / ``kprime="auto"`` run the
+    radius-certified adaptive engine (``eps`` sets the auto-k' accuracy
+    target; the returned core-set then carries a ``RadiusCertificate``).
     """
     from .matroid import as_matroid
     from .solver import solve_and_value
@@ -387,10 +389,11 @@ def fair_diversity_maximize(points, labels, quotas=None,
     m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
-    kprime = min(kprime, pts.shape[0])
+    if kprime != "auto":
+        kprime = min(kprime, pts.shape[0])
     cs = grouped_coreset(pts, labels_np, m, k, kprime, measure=measure,
                          metric=metric, use_pallas=use_pallas, b=b,
-                         chunk=chunk)
+                         chunk=chunk, eps=eps)
     cand_idx, cand_labels = cs.flatten()
     sel, value = solve_and_value(pts[cand_idx], cand_labels, measure=measure,
                                  matroid=mat, metric=metric,

@@ -61,19 +61,24 @@ class FairCoreset(NamedTuple):
 
 
 def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
-            mode: str, use_pallas: bool, b: int = 1, chunk: int = 0):
+            mode: str, use_pallas: bool, b: int = 1, chunk: int = 0,
+            schedule=None):
     """Per-reducer body: group-blocked per-group core-set of the local shard
     on the single-sweep engine (one fused sweep per round for all m groups;
-    see ``constrained.coreset``).  Returns (pts (m*s, d), labels (m*s,),
-    valid (m*s,), radius ())."""
-    b = effective_block(kprime, b)
+    see ``constrained.coreset``).  ``schedule`` pins the static (block,
+    rounds) plan a ``b="auto"`` probe resolved.  Returns (pts (m*s, d),
+    labels (m*s,), valid (m*s,), radius ())."""
+    if schedule is None:
+        b = effective_block(kprime, b)
     shard_p, lab_p, chunk = pad_for_engine(shard, lab, chunk)
     if mode == "ext":
         idx, valid, radius, _ = _grouped_ext_blocked_impl(
-            shard_p, lab_p, m, k, kprime, b, chunk, metric_name, use_pallas)
+            shard_p, lab_p, m, k, kprime, b, chunk, metric_name, use_pallas,
+            schedule=schedule)
     else:
         idx, valid, radius, _, _ = _grouped_select_impl(
-            shard_p, lab_p, m, kprime, b, chunk, metric_name, use_pallas)
+            shard_p, lab_p, m, kprime, b, chunk, metric_name, use_pallas,
+            schedule=schedule)
     s = idx.shape[1]
     pts = shard[idx.reshape(-1)]
     glab = jnp.repeat(jnp.arange(m, dtype=jnp.int32), s)
@@ -81,17 +86,23 @@ def _round1(shard, lab, m: int, k: int, kprime: int, metric_name: str,
 
 
 def mr_grouped_coreset(points, labels, m: Optional[int] = None,
-                       k: Optional[int] = None, kprime: int = 32,
+                       k: Optional[int] = None, kprime=32,
                        measure: str = "remote-edge",
                        mesh: Optional[Mesh] = None, *, matroid=None,
                        data_axes: Sequence[str] = ("data",),
                        metric="euclidean", use_pallas: bool = False,
-                       b: int = 1, chunk: int = 0) -> FairCoreset:
+                       b=1, chunk: int = 0,
+                       eps: float = 0.1) -> FairCoreset:
     """2-round MR fair core-set on a mesh: ``points (n, d)`` and ``labels
     (n,)`` are sharded over ``data_axes``; returns the replicated union.
     ``matroid=`` derives ``m``/``k`` from an oracle (the construction itself
-    is matroid-agnostic — it only sees group labels)."""
+    is matroid-agnostic — it only sees group labels).  ``b="auto"`` /
+    ``kprime="auto"`` probe the labelled input once on the host and compile
+    the adaptive controller's decisions into every reducer as a static
+    (block, rounds) schedule."""
     from repro.compat import shard_map
+
+    from repro.core.distributed import _resolve_reducer_plan
 
     from .matroid import derive_mk
 
@@ -104,13 +115,16 @@ def mr_grouped_coreset(points, labels, m: Optional[int] = None,
     n, _ = points.shape
     if n % nshards:
         raise ValueError(f"n={n} not divisible by {nshards} reducers")
+    kprime, schedule, b = _resolve_reducer_plan(
+        points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
+        per_shard=n // nshards, labels=labels, m=m)
     metric_name = get_metric(metric).name
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
     def body(shard, lab):
         pts, glab, valid, radius = _round1(shard, lab, m, k, kprime,
                                            metric_name, mode, use_pallas,
-                                           b, chunk)
+                                           b, chunk, schedule)
         g_pts = jax.lax.all_gather(pts, axes, tiled=True)
         g_lab = jax.lax.all_gather(glab, axes, tiled=True)
         g_valid = jax.lax.all_gather(valid, axes, tiled=True)
@@ -159,11 +173,13 @@ def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("m", "k", "kprime", "metric_name",
-                                             "mode", "b", "chunk"))
+                                             "mode", "b", "chunk", "schedule"))
 def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
-                metric_name: str, mode: str, b: int = 1, chunk: int = 0):
+                metric_name: str, mode: str, b: int = 1, chunk: int = 0,
+                schedule=None):
     def one(s, sl):
-        return _round1(s, sl, m, k, kprime, metric_name, mode, False, b, chunk)
+        return _round1(s, sl, m, k, kprime, metric_name, mode, False, b,
+                       chunk, schedule)
 
     return jax.vmap(one)(shards, slabels)
 
@@ -171,9 +187,10 @@ def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
 def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
                      num_reducers: int,
                      measure: str = "remote-edge",
-                     kprime: Optional[int] = None, metric="euclidean",
+                     kprime=None, metric="euclidean",
                      partition: str = "contiguous", seed: int = 0,
-                     swap_rounds: int = 10, b: int = 1, chunk: int = 0):
+                     swap_rounds: int = 10, b=1, chunk: int = 0,
+                     eps: float = 0.1):
     """Simulate the ℓ-reducer 2-round constrained MR run on one device.
 
     Returns (solution_points, solution_labels, value).  ``partition`` follows
@@ -191,12 +208,18 @@ def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
         np.asarray(points, np.float32), num_reducers, partition=partition,
         seed=seed, labels=np.asarray(labels, np.int32))
     d = pts.shape[1]
-    kprime = min(kprime, shards.shape[1])
+    from repro.core.distributed import _resolve_reducer_plan
+    if kprime != "auto":
+        kprime = min(kprime, shards.shape[1])
+    kprime, schedule, b = _resolve_reducer_plan(
+        pts, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
+        per_shard=shards.shape[1], labels=np.asarray(slabels).reshape(-1),
+        m=m)
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
     g_pts, g_lab, g_valid, g_rad = _sim_round1(shards, slabels, m, k, kprime,
                                                get_metric(metric).name, mode,
-                                               b, chunk)
+                                               b, chunk, schedule)
     flat_pts = np.asarray(g_pts.reshape(-1, d))
     flat_lab = np.asarray(g_lab.reshape(-1))
     flat_valid = np.asarray(g_valid.reshape(-1))

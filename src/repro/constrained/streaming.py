@@ -16,6 +16,7 @@ oracle-checked local-search solve on the union.
 """
 from __future__ import annotations
 
+from dataclasses import replace as dataclasses_replace
 from typing import Optional, Tuple
 
 import numpy as np
@@ -102,6 +103,28 @@ class FairStreamingCoreset:
             if smm.state is not None:
                 r = max(r, 4.0 * float(smm.state.d_thr))
         return r
+
+    def certificates(self):
+        """Per-group streaming ``RadiusCertificate``s (see
+        ``StreamingCoreset.certificate``); empty groups are skipped."""
+        return {g: smm.certificate()
+                for g, smm in enumerate(self._per_group) if smm.n_seen > 0}
+
+    def certificate(self):
+        """Worst-group combined certificate: the union core-set's proxy
+        error is the max group radius, and its certified ratio the max
+        group ratio (per-merge re-certification happens inside each group's
+        SMM state; this just aggregates the current logs)."""
+        from repro.core.adaptive import RadiusCertificate
+
+        per = self.certificates()
+        if not per:
+            return RadiusCertificate(kprime=self.kprime, radius=0.0,
+                                     scale=0.0, ratio=0.0, kind="streaming")
+        worst = max(per.values(), key=lambda c: c.ratio)
+        return dataclasses_replace(
+            worst, group_ratios=tuple(per[g].ratio if g in per else 0.0
+                                      for g in range(self.m)))
 
 
 def fair_streaming_diversity(points, labels, quotas=None, *, matroid=None,

@@ -1,8 +1,11 @@
 """Core library: the paper's diversity-maximization machinery in JAX."""
+from .adaptive import (AdaptiveGMMResult, RadiusCertificate, auto_kprime,
+                       gmm_adaptive, resolve_engine_plan)
 from .coreset import (Coreset, GeneralizedCoreset, build_coreset,
                       coreset_from_points, diversity_maximize)
-from .gmm import (GMMExtResult, GMMResult, effective_block, gmm, gmm_batched,
-                  gmm_ext, gmm_gen)
+from .gmm import (GMMExtResult, GMMResult, ScheduleResult, effective_block,
+                  gmm, gmm_batched, gmm_ext, gmm_gen, gmm_schedule,
+                  schedule_sweep_counts, validate_schedule)
 from .measures import (MEASURES, NEEDS_INJECTIVE, brute_force_opt, diversity,
                        diversity_of_subset)
 from .metrics import Metric, get_metric, register_metric
@@ -11,8 +14,11 @@ from .smm import SMMState, StreamingCoreset
 
 __all__ = [
     "Coreset", "GeneralizedCoreset", "build_coreset", "coreset_from_points",
-    "diversity_maximize", "GMMResult", "GMMExtResult", "effective_block",
-    "gmm", "gmm_batched", "gmm_ext", "gmm_gen",
+    "diversity_maximize", "GMMResult", "GMMExtResult", "ScheduleResult",
+    "effective_block", "gmm", "gmm_batched", "gmm_ext", "gmm_gen",
+    "gmm_schedule", "schedule_sweep_counts", "validate_schedule",
+    "AdaptiveGMMResult", "RadiusCertificate", "auto_kprime", "gmm_adaptive",
+    "resolve_engine_plan",
     "MEASURES", "NEEDS_INJECTIVE", "brute_force_opt", "diversity",
     "diversity_of_subset", "Metric", "get_metric", "register_metric",
     "SEQ_ALPHA", "instantiate", "solve", "solve_on_coreset", "SMMState",

@@ -1,0 +1,617 @@
+"""Radius-certified adaptive selection: auto-tuned lookahead blocks (b) and
+accuracy-targeted core-set sizing (k').
+
+The paper's (α+ε) guarantee hinges on the core-set size k' making the
+anticover radius r_T(k') small against the optimal diversity; the k-center
+companion line of work (Ceccarello et al., arXiv:1802.09205) shows the same
+radius signal can *drive* the sizing instead of being checked after the
+fact.  This module closes the loop on both engine knobs:
+
+* **Adaptive b** (``gmm_adaptive`` / ``adaptive_select``): the lookahead-b
+  engine is exact on each sweep's first pick but selects the rest of a block
+  from a stale field, which degrades once k' exceeds the data's effective
+  cluster count (the ROADMAP's "b=8 silently degrades" item).  Every sweep
+  already measures the exact anticover radius (the masked field max) and
+  every in-block pick its corrected anticover distance — the
+  *greedy-consistency margin*.  Exact GMM satisfies margin >= every later
+  radius; when a block's margin drops below the next measured radius the
+  lookahead provably went sub-greedy, and the controller halves the block
+  (down to a bit-exact b=1 continuation of plain GMM from the live state).
+  The signal costs nothing: both scalars fall out of the sweep the engine
+  runs anyway.
+
+* **Auto k'** (``auto_kprime``): grow the selection geometrically and stop
+  when the measured certificate hits the accuracy target.  The certificate
+  compares r_T(k') against the anticover *scale* at k — the field max after
+  the first k picks, a measured lower bound on the optimal remote-edge
+  diversity (OPT >= rho_k >= scale_k, Fact 1) — so
+  ``ratio = 2·r_T(k')/scale_k`` bounds the additive-relative core-set error
+  for the remote measures; for the clique-type measures (which use the
+  delegate construction on top of the same kernel) it is the standard
+  conservative proxy.  Because the engine's state (field + prefix) is just a
+  paused GMM run, growing k' resumes the same run — no work is repeated.
+
+Everything is returned as a ``RadiusCertificate`` attached to the
+``Coreset``/``GeneralizedCoreset`` containers, and ``resolve_engine_plan``
+converts a cheap probe run into the *static* (block, rounds) schedule the
+MapReduce reducers need inside ``shard_map`` (where a host-paced controller
+cannot run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gmm import (_grouped_inblock, _make_grouped_sweep, pad_for_engine,
+                  mask_to_labels, schedule_sweep_counts, validate_schedule)
+from .metrics import get_metric
+
+
+# --------------------------------------------------------------------------
+# certificate container
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RadiusCertificate:
+    """Measured evidence that a core-set meets its radius/accuracy target.
+
+    ``radius`` is the exact anticover radius r_T of the selection (masked
+    field max after the final fold — not a model, a measurement).  ``scale``
+    is the anticover radius after the first k picks, a measured lower bound
+    on the optimal diversity scale (OPT >= rho_k >= scale, paper Fact 1), and
+    ``ratio = 2·radius/scale`` is the certified additive-relative core-set
+    error bound for the remote measures.  ``counts``/``radii`` is the
+    per-sweep radius trajectory (non-increasing by construction) and
+    ``b_schedule`` the (block, rounds) phases the engine actually executed.
+    ``kind`` is "batch" for the selection engines and "streaming" for the
+    SMM states, where ``counts`` is points seen at each merge and ``radius``
+    the 4·d_i proxy bound.
+    """
+    kprime: int
+    radius: float
+    scale: float
+    ratio: float
+    eps_target: Optional[float] = None
+    meets_target: Optional[bool] = None
+    counts: Tuple[int, ...] = ()
+    radii: Tuple[float, ...] = ()
+    b_schedule: Tuple[Tuple[int, int], ...] = ()
+    kind: str = "batch"
+    group_ratios: Optional[Tuple[float, ...]] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def auto_milestones(k: int, n: int, kprime_max=None):
+    """The geometric auto-k' growth plan shared by every auto path
+    (single-machine, MR probe, grouped): start at max(2k, 32), double up to
+    the cap (default max(256, 16k), clamped to n).  Returns
+    (kmax, milestones); kmax itself is the implicit final milestone."""
+    kmax = min(n, kprime_max if kprime_max else max(256, 16 * k))
+    kmax = max(kmax, min(k, n))
+    first = min(kmax, max(2 * k, 32))
+    miles, c = [], first
+    while c < kmax:
+        miles.append(c)
+        c *= 2
+    return kmax, miles
+
+
+def _ratio(radius: float, scale: float) -> float:
+    if radius <= 0.0:
+        return 0.0
+    if scale <= 0.0 or not np.isfinite(scale):
+        return float("inf")
+    return 2.0 * radius / scale
+
+
+def certificate_from_trajectory(counts: Sequence[int],
+                                radii: Sequence[float], k: int,
+                                *, eps: Optional[float] = None,
+                                b_schedule=(), kind: str = "batch",
+                                group_ratios=None) -> RadiusCertificate:
+    """Build the certificate from a (counts, radii) trajectory: the scale is
+    the first radius sample with >= k centers folded (conservative — later
+    samples are only smaller)."""
+    counts = tuple(int(c) for c in counts)
+    radii = tuple(float(r) for r in radii)
+    radius = radii[-1] if radii else float("inf")
+    scale = next((r for c, r in zip(counts, radii) if c >= k), radius)
+    ratio = _ratio(radius, scale)
+    return RadiusCertificate(
+        kprime=counts[-1] if counts else 0, radius=radius, scale=scale,
+        ratio=ratio, eps_target=eps,
+        meets_target=None if eps is None else bool(ratio <= eps),
+        counts=counts, radii=radii,
+        b_schedule=tuple(tuple(x) for x in b_schedule), kind=kind,
+        group_ratios=group_ratios)
+
+
+# --------------------------------------------------------------------------
+# jitted steps (shared by the m=1 and grouped adaptive loops)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "p", "chunk", "metric_name",
+                                             "use_pallas"),
+                   donate_argnums=(2,))
+def _fold_impl(points, labels, min_dist, pending, m: int, p: int, chunk: int,
+               metric_name: str, use_pallas: bool):
+    """Fold the pending center block (an (m, bp) int32 index block) into the
+    field and surface each group's top-p candidate pool.  ``cd[:, 0]`` is
+    the exact anticover radius of the selection folded so far — the
+    controller's one host transfer."""
+    sweep = _make_grouped_sweep(points, labels, m, p, chunk, metric_name,
+                                use_pallas)
+    return sweep(min_dist, points[pending])
+
+
+@functools.partial(jax.jit, static_argnames=("m", "take", "p", "chunk",
+                                             "metric_name", "use_pallas"),
+                   donate_argnums=(2,))
+def _block_step_impl(points, labels, min_dist, pending, m: int, take: int,
+                     p: int, chunk: int, metric_name: str, use_pallas: bool):
+    """One supervised engine block in a single dispatch: fold the pending
+    centers, pull the oversampled pool, run the exact in-block GMM for
+    ``take`` tentative picks.  ``pending`` is an (m, bp) int32 index block
+    (gathered on device, saving a host-side dispatch).  Returns (min_dist,
+    chosen (m, take), stats (m, take+1)) where ``stats[:, 0]`` is the exact
+    anticover radius of everything folded so far and ``stats[:, 1:]`` the
+    tentative picks' corrected anticover distances — packed so the host
+    controller blocks on a single transfer per supervised block."""
+    sweep = _make_grouped_sweep(points, labels, m, p, chunk, metric_name,
+                                use_pallas)
+    md, cd, ci = sweep(min_dist, points[pending])
+    chosen, seld = _grouped_inblock(points, metric_name, cd, ci, take)
+    return md, chosen, jnp.concatenate([cd[:, :1], seld], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "kcap", "chunk",
+                                             "metric_name", "use_pallas"))
+def _resume_impl(points, labels, min_dist, idx, start, end, m: int, kcap: int,
+                 chunk: int, metric_name: str, use_pallas: bool):
+    """Bit-exact b=1 continuation of plain GMM from a live engine state, in
+    ONE dispatch: picks columns [start, end) (dynamic bounds).  Entry
+    invariant: columns < start are selected and all but the last are folded
+    (re-folding a folded column is a no-op, so a freshly-certified state
+    resumes cleanly).  Returns (min_dist, idx, tcol) with tcol[r] = the
+    per-group anticover radius measured when column r was picked."""
+    sweep = _make_grouped_sweep(points, labels, m, 1, chunk, metric_name,
+                                use_pallas)
+    tcol = jnp.full((kcap, m), jnp.inf, jnp.float32)
+
+    def body(r, state):
+        md, idx, tcol = state
+        prev = jax.lax.dynamic_slice(idx, (0, r - 1), (m, 1))
+        md, cd, ci = sweep(md, points[prev])
+        idx = jax.lax.dynamic_update_slice(idx, ci, (0, r))
+        tcol = jax.lax.dynamic_update_slice(tcol, cd[:, :1].T, (r, 0))
+        return md, idx, tcol
+
+    return jax.lax.fori_loop(start, end, body, (min_dist, idx, tcol))
+
+
+# --------------------------------------------------------------------------
+# the host-paced adaptive loop (generic over m groups; m=1 == unconstrained)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdaptiveRun:
+    """Raw outcome of ``adaptive_select`` (device arrays + host telemetry)."""
+    idx: np.ndarray            # (m, ksel) int32 selections
+    ksel: int                  # centers selected per group
+    radius: np.ndarray         # (m,) measured anticover radius
+    min_dist: jnp.ndarray      # (n,) final field (device)
+    counts: Tuple[int, ...]    # trajectory x-axis (centers folded)
+    traj: np.ndarray           # (S, m) per-group radius at each sample
+    schedule: Tuple[Tuple[int, int], ...]  # executed (block, rounds) phases
+    shrink_at: Tuple[int, ...]  # positions where the controller shrank b
+
+
+def _compress_schedule(takes: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
+    phases = []
+    for t in takes:
+        if phases and phases[-1][0] == t:
+            phases[-1][1] += 1
+        else:
+            phases.append([t, 1])
+    return tuple((b, r) for b, r in phases)
+
+
+def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
+                    b0: int = 8, gamma: float = 0.0, tau: float = 0.15,
+                    cliff: float = 0.35,
+                    chunk: int = 0, metric: str = "euclidean",
+                    use_pallas: bool = False,
+                    milestones: Sequence[int] = (), eps: Optional[float] = None,
+                    scale_count: Optional[int] = None,
+                    group_counts=None) -> AdaptiveRun:
+    """Host-paced adaptive engine: one fused fold+pool+pick dispatch per
+    block, a few-scalar certificate check on the host.
+
+    Three adaptations keep every committed pick greedy-consistent without
+    giving up the lookahead's sweep savings:
+
+    * **within-block truncation** (``tau``, ``cliff``): a tentative pick is
+      discarded — along with the rest of its block — when its corrected
+      anticover distance falls below ``tau`` times the sweep's measured
+      radius OR below ``cliff`` times the previous pick's distance.  The
+      ``tau`` bar is the anticover scale of greedy consistency (exact GMM's
+      picks always clear every later radius); the ``cliff`` bar is its
+      scale-free complement: on clustered data the in-block distances drop
+      off a cliff (to the within-cluster scale, a ≤0.2× step measured) the
+      moment the pool's distinct clusters are exhausted, and that step
+      stays diagnostic even late in a run when the radius itself has
+      shrunk toward the cluster scale and a fixed ``tau·radius`` bar goes
+      blind.  Healthy dense-field lookahead decays smoothly (≥0.6× steps,
+      bottoming out around 0.2–0.4·radius — harmless: ≤ a few % of final
+      radius at full commitment), so ``tau=0.15``/``cliff=0.35`` split the
+      regimes with ~2× margin on either side and the engine degrades
+      toward one certified pick per sweep exactly where lookahead stops
+      paying.
+    * **pool widening**: heavy truncation usually means the pool itself is
+      too narrow (on strongly clustered data the top-p field values can all
+      sit in one or two clusters), so the oversampling factor doubles (16b
+      up to 32b) whenever less than half a block commits, and relaxes back
+      when full blocks flow again — the sweep cost is unchanged (the pool
+      is a fused per-tile top-k), only the tiny in-block GMM grows.
+    * **cross-block margin** (``gamma``, off by default): if a committed
+      block's weakest corrected distance drops below ``gamma`` times the
+      next measured radius, the lookahead went sub-greedy despite the pool
+      and the block size is halved.  Committed picks already clear
+      ``tau·floor ≈ tau·radius``, so any ``gamma`` near ``tau`` fights the
+      truncation (measured: it spirals block sizes down on healthy dense
+      data); it exists as an extra-strict knob, not a default.
+
+    Two consecutive single-pick blocks switch to ``_resume_impl`` — a
+    bit-exact b=1 continuation of plain GMM in one dispatch.
+
+    With ``milestones`` (sorted center counts) and ``eps``, the loop stops
+    at the first milestone whose measured certificate ratio
+    (2·radius/scale, scale sampled at ``scale_count``) meets ``eps`` in
+    every inhabited group — this is the ``auto_kprime`` growth loop, and it
+    never repeats work because the engine state is just a paused GMM run.
+    """
+    points = jnp.asarray(points)
+    labels = jnp.asarray(labels, jnp.int32)
+    n = points.shape[0]
+    metric_name = get_metric(metric).name
+    pts_p, lab_p, ch = pad_for_engine(points, labels, chunk)
+    counts_np = (np.asarray(group_counts, np.int64)
+                 if group_counts is not None else np.full((m,), n, np.int64))
+    k_cap = max(1, min(k_cap, n))
+    starts_np = np.asarray(starts, np.int32)
+
+    idx_host = np.zeros((m, k_cap), np.int32)
+    idx_host[:, 0] = starts_np
+    md = jnp.full((pts_p.shape[0],), jnp.inf, jnp.float32)
+    b_cur = max(1, min(b0, k_cap))
+    pending = jnp.asarray(starts_np)[:, None]      # (m, bp) index block
+    pending_folded = False
+    pos = 1
+    traj_counts, traj_vals, takes, shrink_at = [], [], [], []
+    prev_margin = prev_active = None
+    ones_streak = 0
+    miles = sorted(c for c in set(int(x) for x in milestones) if c < k_cap)
+    scale = None
+    stopped = False
+    last_rnow = None
+
+    def milestone_met(rnow):
+        if eps is None or scale is None:
+            return False
+        alive = counts_np > 0
+        done = counts_np <= pos
+        ratios = np.array([_ratio(float(r), float(s))
+                           for r, s in zip(rnow, scale)])
+        return bool(np.all(~alive | done | (ratios <= eps)))
+
+    def observe(rnow):
+        nonlocal scale, stopped
+        traj_counts.append(pos)
+        traj_vals.append(rnow)
+        if scale is None and scale_count is not None and pos >= scale_count:
+            scale = rnow.copy()
+        while miles and pos >= miles[0]:
+            miles.pop(0)
+            if milestone_met(rnow):
+                stopped = True
+
+    p_mult = 16
+    while pos < k_cap and not stopped:
+        if b_cur > 1:
+            take = min(b_cur, k_cap - pos)
+            p = min(p_mult * b_cur, pts_p.shape[0])
+            md, chosen, stats = _block_step_impl(
+                pts_p, lab_p, md, pending, m, take, p, ch, metric_name,
+                use_pallas)
+            stats_np = np.asarray(stats)    # the one blocking transfer
+            rnow = stats_np[:, 0]
+            pending_folded, last_rnow = True, rnow
+            observe(rnow)
+            if stopped:
+                break
+            active = counts_np > pos
+            if prev_margin is not None and np.any(
+                    prev_active & (prev_margin
+                                   < gamma * np.maximum(rnow, 0.0))):
+                b_cur = max(1, b_cur // 2)
+                shrink_at.append(pos)
+            # certified within-block truncation: keep the prefix of picks
+            # that clear BOTH bars in every group that still has fresh
+            # points — tau x the current radius (the greedy-consistency
+            # scale) and cliff x the previous pick (the scale-free cluster
+            # cliff detector).  The pool floor is NOT a usable reference: on
+            # tightly clustered data a wide pool's tail digs into
+            # within-cluster mass and the floor collapses with it.
+            seld_np = stats_np[:, 1:]
+            thr = tau * np.maximum(rnow, 0.0)
+            above_tau = seld_np >= thr[:, None]
+            no_cliff = np.ones_like(above_tau)
+            if take > 1:
+                no_cliff[:, 1:] = seld_np[:, 1:] >= cliff * seld_np[:, :-1]
+            ok = ~active[:, None] | (above_tau & no_cliff)
+            take_eff = take
+            for j in range(1, take):
+                if not ok[:, j].all():
+                    take_eff = j
+                    break
+            committed = chosen[:, :take_eff]
+            idx_host[:, pos:pos + take_eff] = np.asarray(committed)
+            pending = committed
+            prev_margin = np.min(
+                np.where(active[:, None], seld_np[:, :take_eff], np.inf),
+                axis=1)
+            prev_active = active
+            takes.append(take_eff)
+            pending_folded = False
+            pos += take_eff
+            # pool adaptation: heavy truncation -> widen; full blocks -> relax
+            if take_eff <= take // 2:
+                p_mult = min(32, p_mult * 2)
+            elif take_eff == take:
+                p_mult = max(16, p_mult // 2)
+            if take_eff == 1:
+                ones_streak += 1
+                if ones_streak >= 2 and b_cur > 1:
+                    b_cur = 1
+                    shrink_at.append(pos)
+            else:
+                ones_streak = 0
+        else:
+            # bit-exact b=1 tail, one dispatch per milestone segment
+            if not pending_folded:
+                md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
+                                       metric_name, use_pallas)
+                rnow = np.asarray(cd[:, 0])
+                pending_folded, last_rnow = True, rnow
+                observe(rnow)
+                if stopped:
+                    break
+            end = k_cap
+            for c in miles:
+                if c > pos:
+                    end = min(end, c)
+                    break
+            idx_dev = jnp.asarray(idx_host)
+            md, idx_dev, tcol = _resume_impl(
+                pts_p, lab_p, md, idx_dev, jnp.asarray(max(pos, 1)),
+                jnp.asarray(end), m, k_cap, ch, metric_name, use_pallas)
+            idx_host = np.asarray(idx_dev)
+            tc = np.asarray(tcol)
+            for r in range(pos, end):
+                traj_counts.append(r)
+                traj_vals.append(tc[r])
+                if scale is None and scale_count is not None \
+                        and r >= scale_count:
+                    scale = tc[r].copy()
+            takes.extend([1] * (end - pos))
+            prev_margin = prev_active = None
+            pending = idx_dev[:, end - 1:end]
+            pending_folded = False
+            pos = end
+            if miles and pos >= miles[0]:
+                md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
+                                       metric_name, use_pallas)
+                rnow = np.asarray(cd[:, 0])
+                pending_folded, last_rnow = True, rnow
+                observe(rnow)
+
+    # final fold: the measured anticover radius of everything selected
+    if not pending_folded:
+        md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
+                               metric_name, use_pallas)
+        rfin = np.asarray(cd[:, 0])
+        traj_counts.append(pos)
+        traj_vals.append(rfin)
+    else:
+        rfin = last_rnow
+
+    return AdaptiveRun(idx=idx_host[:, :pos], ksel=pos,
+                       radius=rfin, min_dist=md[:n],
+                       counts=tuple(traj_counts),
+                       traj=np.stack(traj_vals, axis=0),
+                       schedule=_compress_schedule(takes),
+                       shrink_at=tuple(shrink_at))
+
+
+# --------------------------------------------------------------------------
+# unconstrained front-ends
+# --------------------------------------------------------------------------
+
+class AdaptiveGMMResult(NamedTuple):
+    idx: jnp.ndarray          # (ksel,) selected indices
+    radius: jnp.ndarray       # () measured anticover radius
+    min_dist: jnp.ndarray     # (n,)
+    counts: tuple             # trajectory x-axis
+    traj: np.ndarray          # (S,) radius trajectory
+    schedule: tuple           # executed (block, rounds) phases
+    cert: RadiusCertificate
+
+
+def gmm_adaptive(points, k: int, *, b0: int = 8, metric="euclidean",
+                 mask=None, start=0, chunk: int = 0,
+                 use_pallas: bool = False, gamma: float = 0.0,
+                 tau: float = 0.15,
+                 scale_count: Optional[int] = None,
+                 eps: Optional[float] = None) -> AdaptiveGMMResult:
+    """Adaptive-b GMM: lookahead-b speed where the radius curve is steep, a
+    bit-exact b=1 fallback once it flattens (``b="auto"`` everywhere in the
+    public API routes here).  Unlike ``gmm_batched``, any k works — the
+    schedule is discovered, not prescribed."""
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    labels = mask_to_labels(jnp.asarray(mask))
+    run = adaptive_select(points, labels, [start], 1, k, b0=b0, gamma=gamma,
+                          tau=tau, chunk=chunk, metric=metric,
+                          use_pallas=use_pallas,
+                          scale_count=scale_count or min(k, n), eps=eps)
+    cert = certificate_from_trajectory(
+        run.counts, run.traj[:, 0], scale_count or min(k, n), eps=eps,
+        b_schedule=run.schedule)
+    return AdaptiveGMMResult(idx=jnp.asarray(run.idx[0]),
+                             radius=jnp.asarray(float(run.radius[0])),
+                             min_dist=run.min_dist, counts=run.counts,
+                             traj=run.traj[:, 0], schedule=run.schedule,
+                             cert=cert)
+
+
+def auto_kprime(points, k: int, eps: float = 0.1,
+                measure: str = "remote-edge", *, metric="euclidean",
+                b="auto", chunk: int = 0, use_pallas: bool = False,
+                kprime_max: Optional[int] = None, mask=None,
+                start=0) -> AdaptiveGMMResult:
+    """ε-targeted core-set sizing: grow k' geometrically until the measured
+    radius certificate meets the target (ratio = 2·r_T(k')/scale_k <= eps),
+    resuming the same engine run at every milestone.
+
+    ``measure`` is recorded for context; the certificate is the remote-edge
+    bound, which the delegate/multiplicity constructions for the clique-type
+    measures are built on top of (their kernel is this selection).  Returns
+    an ``AdaptiveGMMResult`` whose ``idx`` has the chosen k' and whose
+    ``cert`` carries the full trajectory.
+
+    >>> import numpy as np
+    >>> rng = np.random.default_rng(0)
+    >>> pts = rng.normal(size=(3000, 2)).astype(np.float32)
+    >>> res = auto_kprime(pts, k=5, eps=0.5)
+    >>> res.cert.meets_target            # measured 2*r/scale <= eps
+    True
+    >>> int(res.idx.shape[0]) == res.cert.kprime
+    True
+    >>> list(res.cert.radii) == sorted(res.cert.radii, reverse=True)
+    True
+    """
+    del measure  # certificate is measure-agnostic (remote-edge bound)
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    labels = mask_to_labels(jnp.asarray(mask))
+    if k < 1 or k > n:
+        raise ValueError(f"k={k} out of range for n={n}")
+    kmax, miles = auto_milestones(k, n, kprime_max)
+    b0 = 8 if b == "auto" else max(1, int(b))
+    run = adaptive_select(points, labels, [start], 1, kmax, b0=b0,
+                          chunk=chunk, metric=metric, use_pallas=use_pallas,
+                          milestones=miles, eps=eps, scale_count=k)
+    cert = certificate_from_trajectory(run.counts, run.traj[:, 0], k,
+                                       eps=eps, b_schedule=run.schedule)
+    return AdaptiveGMMResult(idx=jnp.asarray(run.idx[0]),
+                             radius=jnp.asarray(float(run.radius[0])),
+                             min_dist=run.min_dist, counts=run.counts,
+                             traj=run.traj[:, 0], schedule=run.schedule,
+                             cert=cert)
+
+
+# --------------------------------------------------------------------------
+# probe -> static plan (for shard_map reducers, where no host loop can run)
+# --------------------------------------------------------------------------
+
+def plan_from_schedule(executed, kprime: int,
+                       probe_k: int) -> Tuple[Tuple[int, int], ...]:
+    """Convert an executed adaptive schedule into a static two-phase plan
+    covering ``kprime`` picks: keep the probe's leading full-size blocks for
+    the same *fraction* of the run, finish at b=1.  Exact-GMM tails and
+    whole-run lookahead both fall out naturally."""
+    if not executed:
+        return ((1, kprime),)
+    b0 = executed[0][0]
+    head_picks = 1  # the seed
+    for bsz, rounds in executed:
+        if bsz != b0:
+            break
+        head_picks += bsz * rounds
+    if b0 <= 1:
+        return ((1, kprime),)
+    frac = min(1.0, head_picks / max(probe_k, 1))
+    head_rounds = int(frac * kprime) // b0
+    head_rounds = max(0, min(head_rounds, kprime // b0))
+    tail = kprime - head_rounds * b0
+    if head_rounds == 0:
+        return ((1, kprime),)
+    if tail == 0:
+        return ((b0, head_rounds),)
+    return ((b0, head_rounds), (1, tail))
+
+
+def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
+                        metric="euclidean", labels=None, m: int = 1,
+                        chunk: int = 0, use_pallas: bool = False,
+                        sample: int = 8192):
+    """Resolve ``b="auto"`` / ``kprime="auto"`` into static engine inputs for
+    paths that run inside ``shard_map``/``vmap`` (the MapReduce reducers): a
+    cheap strided-subsample probe runs the adaptive controller once on the
+    host, and its outcome is frozen into (kprime:int, schedule|None, cert).
+
+    Numeric knobs pass through untouched (schedule=None means "use ``b`` as
+    given").
+    """
+    if b != "auto" and kprime != "auto":
+        return kprime, None, None
+    pts = np.asarray(points)
+    n = pts.shape[0]
+    stride = max(1, n // max(1, min(sample, n)))
+    sub = pts[::stride]
+    lab = (np.zeros((sub.shape[0],), np.int32) if labels is None
+           else np.asarray(labels)[::stride].astype(np.int32))
+    mm = 1 if labels is None else m
+    sn = sub.shape[0]
+    counts = np.bincount(lab[lab >= 0], minlength=mm)[:mm]
+    starts = np.zeros((mm,), np.int32)
+    for g in range(mm):
+        hits = np.nonzero(lab == g)[0]
+        starts[g] = hits[0] if hits.size else 0
+    k_probe = min(k, sn)
+    if kprime == "auto":
+        kmax, miles = auto_milestones(k_probe, sn)
+        run = adaptive_select(sub, lab, starts, mm, kmax,
+                              b0=8 if b == "auto" else max(1, int(b)),
+                              chunk=chunk, metric=metric,
+                              use_pallas=use_pallas, milestones=miles,
+                              eps=eps, scale_count=k_probe,
+                              group_counts=counts if labels is not None
+                              else None)
+        kp = run.ksel
+    else:
+        kp = int(kprime)
+        run = adaptive_select(sub, lab, starts, mm, min(kp, sn), b0=8,
+                              chunk=chunk, metric=metric,
+                              use_pallas=use_pallas, scale_count=k_probe,
+                              group_counts=counts if labels is not None
+                              else None)
+    cert = certificate_from_trajectory(
+        run.counts, run.traj.max(axis=1), k_probe,
+        eps=eps if kprime == "auto" else None, b_schedule=run.schedule)
+    schedule = (plan_from_schedule(run.schedule, kp, run.ksel)
+                if b == "auto" else None)
+    if schedule is not None:
+        validate_schedule(schedule, kp)
+    return kp, schedule, cert

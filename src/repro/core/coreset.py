@@ -20,6 +20,7 @@ class Coreset(NamedTuple):
     valid: jnp.ndarray       # (cap,) bool
     weights: jnp.ndarray     # (cap,) int32  (1 for valid rows, 0 otherwise)
     radius: jnp.ndarray      # () — proxy-distance bound r_T (telemetry)
+    cert: Optional[object] = None  # RadiusCertificate (adaptive/auto paths)
 
     def compact(self) -> np.ndarray:
         """Materialize valid rows (host-side, dynamic shape)."""
@@ -35,6 +36,7 @@ class GeneralizedCoreset(NamedTuple):
     points: jnp.ndarray        # (kprime, d) kernel
     multiplicity: jnp.ndarray  # (kprime,) int32 (0 = invalid row)
     radius: jnp.ndarray        # () — delegate distance bound (Lemma 7's δ)
+    cert: Optional[object] = None  # RadiusCertificate (adaptive/auto paths)
 
     def compact(self):
         m = np.asarray(self.multiplicity)
@@ -56,9 +58,10 @@ def coreset_from_points(points, weights=None) -> Coreset:
                    radius=jnp.asarray(0.0, points.dtype))
 
 
-def build_coreset(points, k: int, kprime: int, measure: str, *,
+def build_coreset(points, k: int, kprime, measure: str, *,
                   metric="euclidean", use_pallas: bool = False,
-                  generalized: bool = False, b: int = 1, chunk: int = 0):
+                  generalized: bool = False, b=1, chunk: int = 0,
+                  eps: float = 0.1, schedule=None):
     """Sequential (single-partition) core-set per the paper's recipe:
 
     * remote-edge / remote-cycle  -> GMM(S, k')            (Thm 4)
@@ -67,7 +70,10 @@ def build_coreset(points, k: int, kprime: int, measure: str, *,
 
     ``b``/``chunk`` select the batched lookahead-b engine (``gmm_batched``)
     instead of the one-center-per-sweep loop; ``b`` is snapped to a divisor
-    of ``kprime``.
+    of ``kprime``.  ``b="auto"`` runs the radius-certified adaptive
+    controller and ``kprime="auto"`` grows k' until the measured radius
+    certificate meets the ``eps`` accuracy target (``core.adaptive``); both
+    attach the resulting ``RadiusCertificate`` as ``cs.cert``.
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -77,28 +83,67 @@ def build_coreset(points, k: int, kprime: int, measure: str, *,
     16
     >>> float(cs.radius) > 0.0      # anticover radius r_T (telemetry)
     True
+    >>> cs = build_coreset(pts, k=4, kprime="auto", measure="remote-edge",
+    ...                    eps=0.5)
+    >>> cs.cert.meets_target        # certified: 2*r_T/scale_k <= eps
+    True
     """
     from repro.core.gmm import (effective_block, gmm as _gmm, gmm_batched,
                                 gmm_ext as _gmm_ext, gmm_gen as _gmm_gen)
     from .measures import NEEDS_INJECTIVE
 
     points = jnp.asarray(points)
+    auto = kprime == "auto" or b == "auto"
+    cert = None
+    if kprime == "auto":
+        from .adaptive import auto_kprime
+        res = auto_kprime(points, k, eps, measure, metric=metric, b=b,
+                          chunk=chunk, use_pallas=use_pallas)
+        kprime, cert = int(res.idx.shape[0]), res.cert
+        kernel = res
+    elif b == "auto":
+        from .adaptive import gmm_adaptive
+        kernel = gmm_adaptive(points, kprime, metric=metric, chunk=chunk,
+                              use_pallas=use_pallas, scale_count=min(k, kprime))
+        cert = kernel.cert
     if generalized:
+        if auto:
+            from repro.core.gmm import gmm_ext_from_kernel
+            ext = gmm_ext_from_kernel(points, kernel.idx, kernel.radius, k,
+                                      metric=metric, chunk=chunk)
+            return GeneralizedCoreset(points=points[ext.kernel_idx],
+                                      multiplicity=ext.multiplicity,
+                                      radius=ext.radius, cert=cert)
         return _gmm_gen(points, k, kprime, metric=metric,
-                        use_pallas=use_pallas, b=b, chunk=chunk)
+                        use_pallas=use_pallas, b=b, chunk=chunk,
+                        schedule=schedule)
     if measure in NEEDS_INJECTIVE:
-        ext = _gmm_ext(points, k, kprime, metric=metric, use_pallas=use_pallas,
-                       b=b, chunk=chunk)
-        kp, kk = ext.delegate_idx.shape
+        if auto:
+            from repro.core.gmm import gmm_ext_from_kernel
+            ext = gmm_ext_from_kernel(points, kernel.idx, kernel.radius, k,
+                                      metric=metric, chunk=chunk)
+        else:
+            ext = _gmm_ext(points, k, kprime, metric=metric,
+                           use_pallas=use_pallas, b=b, chunk=chunk,
+                           schedule=schedule)
         flat_idx = ext.delegate_idx.reshape(-1)
         flat_valid = ext.delegate_valid.reshape(-1)
         pts = points[flat_idx]
         return Coreset(points=pts, valid=flat_valid,
-                       weights=flat_valid.astype(jnp.int32), radius=ext.radius)
-    b = effective_block(kprime, b)
-    if b > 1 or chunk:
+                       weights=flat_valid.astype(jnp.int32),
+                       radius=ext.radius, cert=cert)
+    if auto:
+        pts = points[kernel.idx]
+        n = pts.shape[0]
+        return Coreset(points=pts, valid=jnp.ones((n,), bool),
+                       weights=jnp.ones((n,), jnp.int32),
+                       radius=kernel.radius, cert=cert)
+    if schedule is None:
+        b = effective_block(kprime, b)
+    if schedule is not None or b > 1 or chunk:
         idx, radius, _ = gmm_batched(points, kprime, b=b, metric=metric,
-                                     chunk=chunk, use_pallas=use_pallas)
+                                     chunk=chunk, use_pallas=use_pallas,
+                                     schedule=schedule)
     else:
         res = _gmm(points, kprime, metric=metric, use_pallas=use_pallas)
         idx, radius = res.idx, res.radius
@@ -108,12 +153,15 @@ def build_coreset(points, k: int, kprime: int, measure: str, *,
                    weights=jnp.ones((n,), jnp.int32), radius=radius)
 
 
-def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = None,
+def diversity_maximize(points, k: int, measure: str, *, kprime=None,
                        metric="euclidean", use_pallas: bool = False,
-                       b: int = 1, chunk: int = 0):
+                       b=1, chunk: int = 0, eps: float = 0.1):
     """End-to-end: core-set + sequential α-approx solver.
 
-    Returns (solution_points (k,d) ndarray, value, coreset).
+    Returns (solution_points (k,d) ndarray, value, coreset).  ``b="auto"``
+    and ``kprime="auto"`` enable the radius-certified adaptive engine
+    (``eps`` sets the auto-k' target; see ``build_coreset``), and the
+    returned core-set then carries ``cs.cert``.
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -130,9 +178,10 @@ def diversity_maximize(points, k: int, measure: str, *, kprime: Optional[int] = 
 
     if kprime is None:
         kprime = max(2 * k, 32)
-    kprime = min(kprime, int(np.asarray(points).shape[0]))
+    if kprime != "auto":
+        kprime = min(kprime, int(np.asarray(points).shape[0]))
     cs = build_coreset(points, k, kprime, measure, metric=metric,
-                       use_pallas=use_pallas, b=b, chunk=chunk)
+                       use_pallas=use_pallas, b=b, chunk=chunk, eps=eps)
     sol = solve_on_coreset(cs, k, measure, metric=metric)
     m = get_metric(metric)
     dm = np.asarray(m.pairwise(jnp.asarray(sol), jnp.asarray(sol)))

@@ -42,42 +42,78 @@ from .sequential import instantiate, solve, solve_on_coreset
 # round 1 bodies (run per shard)
 # --------------------------------------------------------------------------
 
-def _local_coreset_plain(shard, kprime, metric, use_pallas, b=1, chunk=0):
-    b = _effective_block(kprime, b)
-    if b > 1 or chunk:
+def _local_coreset_plain(shard, kprime, metric, use_pallas, b=1, chunk=0,
+                         schedule=None):
+    if schedule is None:
+        b = _effective_block(kprime, b)
+    if schedule is not None or b > 1 or chunk:
         idx, radius, _ = gmm_batched(shard, kprime, b=b, metric=metric,
-                                     chunk=chunk, use_pallas=use_pallas)
+                                     chunk=chunk, use_pallas=use_pallas,
+                                     schedule=schedule)
         return shard[idx], radius
     res = _gmm(shard, kprime, metric=metric, use_pallas=use_pallas)
     return shard[res.idx], res.radius
 
 
-def _local_coreset_ext(shard, k, kprime, metric, use_pallas, b=1, chunk=0):
+def _local_coreset_ext(shard, k, kprime, metric, use_pallas, b=1, chunk=0,
+                       schedule=None):
     ext = _gmm_ext(shard, k, kprime, metric=metric, use_pallas=use_pallas,
-                   b=b, chunk=chunk)
+                   b=b, chunk=chunk, schedule=schedule)
     pts = shard[ext.delegate_idx.reshape(-1)]
     valid = ext.delegate_valid.reshape(-1)
     return pts, valid, ext.radius
 
 
-def _local_coreset_gen(shard, k, kprime, metric, use_pallas, b=1, chunk=0):
+def _local_coreset_gen(shard, k, kprime, metric, use_pallas, b=1, chunk=0,
+                       schedule=None):
     gen = _gmm_gen(shard, k, kprime, metric=metric, use_pallas=use_pallas,
-                   b=b, chunk=chunk)
+                   b=b, chunk=chunk, schedule=schedule)
     return gen.points, gen.multiplicity, gen.radius
+
+
+def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
+                          metric, chunk: int, per_shard: int,
+                          labels=None, m: int = 1):
+    """Freeze ``b="auto"``/``kprime="auto"`` into static reducer inputs.
+
+    A shard_map body cannot run the host-paced controller, so a cheap probe
+    (``core.adaptive.resolve_engine_plan``) runs once on a subsample of the
+    global input and its decisions are compiled into every reducer as a
+    static (block, rounds) schedule.  k' is clamped to the shard size.
+    Returns (kprime:int, schedule|None, b:int).
+    """
+    if b != "auto" and kprime != "auto":
+        return kprime, None, b
+    from repro.core.adaptive import plan_from_schedule, resolve_engine_plan
+
+    kp, schedule, _ = resolve_engine_plan(np.asarray(points), k, kprime, b,
+                                          eps=eps, metric=metric,
+                                          labels=labels, m=m, chunk=chunk)
+    kp = min(int(kp), per_shard)
+    if schedule is not None:
+        planned = sum(b_ * r for b_, r in schedule)
+        if planned != kp:        # k' was clamped: re-fit the plan's fraction
+            schedule = plan_from_schedule(schedule, kp, planned)
+    # kprime="auto" with an explicit numeric b keeps that b (no schedule);
+    # only b="auto" replaces the knob with the frozen plan
+    return kp, schedule, (1 if b == "auto" else b)
 
 
 # --------------------------------------------------------------------------
 # mesh path (shard_map)
 # --------------------------------------------------------------------------
 
-def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
+def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
                *, data_axes: Sequence[str] = ("data",), metric="euclidean",
                use_pallas: bool = False, generalized: bool = False,
-               b: int = 1, chunk: int = 0):
+               b=1, chunk: int = 0, eps: float = 0.1):
     """2-round MR core-set on a mesh.  ``points`` is globally (n, d) and gets
     sharded over ``data_axes``; returns a replicated Coreset/GeneralizedCoreset
     for the union T = ∪ T_i.  ``b``/``chunk`` tune the per-reducer selection
-    engine (lookahead-b batched GMM; see ``core.gmm.gmm_batched``)."""
+    engine (lookahead-b batched GMM; see ``core.gmm.gmm_batched``);
+    ``b="auto"`` / ``kprime="auto"`` run a host-side probe once and compile
+    its decisions into every reducer as a static (block, rounds) schedule
+    (``eps`` is the auto-k' accuracy target)."""
     from repro.compat import shard_map
 
     axes = tuple(data_axes)
@@ -85,11 +121,15 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
     n, d = points.shape
     if n % nshards:
         raise ValueError(f"n={n} not divisible by {nshards} reducers")
+    kprime, schedule, b = _resolve_reducer_plan(
+        points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
+        per_shard=n // nshards)
 
     if generalized:
         def body(shard):
             pts, mult, radius = _local_coreset_gen(shard, k, kprime, metric,
-                                                   use_pallas, b, chunk)
+                                                   use_pallas, b, chunk,
+                                                   schedule)
             g_pts = jax.lax.all_gather(pts, axes, tiled=True)
             g_mult = jax.lax.all_gather(mult, axes, tiled=True)
             g_rad = jax.lax.pmax(radius, axes)
@@ -104,7 +144,8 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
     if measure in NEEDS_INJECTIVE:
         def body(shard):
             pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
-                                                    use_pallas, b, chunk)
+                                                    use_pallas, b, chunk,
+                                                    schedule)
             g_pts = jax.lax.all_gather(pts, axes, tiled=True)
             g_valid = jax.lax.all_gather(valid, axes, tiled=True)
             g_rad = jax.lax.pmax(radius, axes)
@@ -118,7 +159,7 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
 
     def body(shard):
         pts, radius = _local_coreset_plain(shard, kprime, metric, use_pallas,
-                                           b, chunk)
+                                           b, chunk, schedule)
         g_pts = jax.lax.all_gather(pts, axes, tiled=True)
         g_rad = jax.lax.pmax(radius, axes)
         return g_pts, g_rad
@@ -132,24 +173,26 @@ def mr_coreset(points, k: int, kprime: int, measure: str, mesh: Mesh,
 
 
 def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
-                 kprime: Optional[int] = None,
+                 kprime=None,
                  data_axes: Sequence[str] = ("data",), metric="euclidean",
                  use_pallas: bool = False, three_round: bool = False,
-                 b: int = 1, chunk: int = 0):
+                 b=1, chunk: int = 0, eps: float = 0.1):
     """Full pipeline: 2-round (Thm 6) or 3-round generalized (Thm 10).
 
-    Returns (solution_points (k,d), value)."""
+    ``b="auto"`` / ``kprime="auto"`` probe once and freeze a static reducer
+    plan (see ``mr_coreset``).  Returns (solution_points (k,d), value)."""
     if kprime is None:
         kprime = max(2 * k, 32)
     if not three_round:
         cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
-                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk)
+                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk,
+                        eps=eps)
         sol = solve_on_coreset(cs, k, measure, metric=metric)
     else:
         gen = mr_coreset(points, k, kprime, measure, mesh,
                          data_axes=data_axes, metric=metric,
                          use_pallas=use_pallas, generalized=True,
-                         b=b, chunk=chunk)
+                         b=b, chunk=chunk, eps=eps)
         pts, mult = gen.compact()
         idx = solve(measure, pts, k, weights=mult, metric=metric)
         uniq, counts = np.unique(idx, return_counts=True)
@@ -161,9 +204,9 @@ def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
     return sol, diversity(measure, dm)
 
 
-def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
+def mr_coreset_recursive(points, k: int, kprime, measure: str, mesh: Mesh,
                          *, metric="euclidean", use_pallas: bool = False,
-                         b: int = 1, chunk: int = 0):
+                         b=1, chunk: int = 0, eps: float = 0.1):
     """Thm 8: two-level reduction — per-device core-sets over ``data``,
     re-contracted over ``pod`` (requires a ('pod','data',...) mesh)."""
     from repro.compat import shard_map
@@ -171,15 +214,21 @@ def mr_coreset_recursive(points, k: int, kprime: int, measure: str, mesh: Mesh,
     if "pod" not in mesh.axis_names:
         raise ValueError("recursive scheme expects a 'pod' axis")
     ext = measure in NEEDS_INJECTIVE
+    nshards = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
+    kprime, schedule, b = _resolve_reducer_plan(
+        points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
+        per_shard=points.shape[0] // nshards)
 
     def body(shard):
         if ext:
             pts, valid, radius = _local_coreset_ext(shard, k, kprime, metric,
-                                                    use_pallas, b, chunk)
+                                                    use_pallas, b, chunk,
+                                                    schedule)
             mask = valid
         else:
             pts, radius = _local_coreset_plain(shard, kprime, metric,
-                                               use_pallas, b, chunk)
+                                               use_pallas, b, chunk,
+                                               schedule)
             mask = jnp.ones((pts.shape[0],), bool)
         # level 1: union within pod
         pod_pts = jax.lax.all_gather(pts, "data", tiled=True)
@@ -241,46 +290,52 @@ def partition_shards(points, num_reducers: int, *, partition: str = "contiguous"
     return pts, shards, slabels
 
 @functools.partial(jax.jit, static_argnames=("k", "kprime", "metric", "mode",
-                                             "b", "chunk"))
+                                             "b", "chunk", "schedule"))
 def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str,
-                b: int = 1, chunk: int = 0):
+                b: int = 1, chunk: int = 0, schedule=None):
     if mode == "plain":
         def one(s):
             pts, radius = _local_coreset_plain(s, kprime, metric, False,
-                                               b, chunk)
+                                               b, chunk, schedule)
             return pts, jnp.ones((kprime,), bool), radius
     elif mode == "ext":
         def one(s):
-            ext = _gmm_ext(s, k, kprime, metric=metric, b=b, chunk=chunk)
+            ext = _gmm_ext(s, k, kprime, metric=metric, b=b, chunk=chunk,
+                           schedule=schedule)
             return (s[ext.delegate_idx.reshape(-1)],
                     ext.delegate_valid.reshape(-1), ext.radius)
     else:  # gen
         def one(s):
-            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk)
+            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk,
+                         schedule=schedule)
             return g.points, g.multiplicity > 0, g.radius
 
     return jax.vmap(one)(shards)
 
 
 def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
-                kprime: Optional[int] = None, metric="euclidean",
+                kprime=None, metric="euclidean",
                 generalized: bool = False, partition: str = "contiguous",
-                seed: int = 0, b: int = 1, chunk: int = 0):
+                seed: int = 0, b=1, chunk: int = 0, eps: float = 0.1):
     """Simulate the ℓ-reducer 2-round MR run on one device (vmap over shards).
 
     ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
     adversarial = sort by first coordinate so each reducer sees a small-volume
-    region)."""
+    region).  ``b="auto"`` / ``kprime="auto"`` probe once and freeze a static
+    reducer schedule, exactly like ``mr_coreset``."""
     if kprime is None:
         kprime = max(2 * k, 32)
     pts, shards, _ = partition_shards(points, num_reducers,
                                       partition=partition, seed=seed)
     d = pts.shape[1]
+    kprime, schedule, b = _resolve_reducer_plan(
+        pts, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
+        per_shard=shards.shape[1])
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")
     g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric, mode,
-                                        b, chunk)
+                                        b, chunk, schedule)
     flat_pts = g_pts.reshape(-1, d)
     flat_valid = g_valid.reshape(-1)
     radius = jnp.max(g_rad)
@@ -288,7 +343,8 @@ def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
     if generalized:
         # rerun per-shard to obtain integer multiplicities
         def one(s):
-            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk)
+            g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk,
+                         schedule=schedule)
             return g.points, g.multiplicity, g.radius
         gp, gm, gr = jax.jit(jax.vmap(one))(shards)
         gen = GeneralizedCoreset(points=gp.reshape(-1, d),

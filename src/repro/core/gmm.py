@@ -114,141 +114,257 @@ def gmm(points, k: int, *, metric="euclidean", mask=None, start=0,
                      get_metric(metric).name, use_pallas)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "b", "metric_name"))
-def _gmm_batched_impl(points, mask, start, k: int, b: int, metric_name: str):
-    metric = get_metric(metric_name)
-    n = points.shape[0]
-    neg_inf = jnp.asarray(-jnp.inf, points.dtype)
-    rounds = k // b
+# --------------------------------------------------------------------------
+# the single-sweep selection engine (schedule-driven, group-blocked)
+#
+# One implementation serves every core-set path: the unconstrained batched
+# GMM is the m=1 case of the grouped (per-label lock-step) engine, and a
+# selection *schedule* — a tuple of (block, rounds) phases — generalizes the
+# fixed lookahead-b loop so the adaptive controller (``core.adaptive``) and
+# the MapReduce reducers (which need a static plan inside shard_map) share
+# the same compiled body.  Each sweep records the masked field max — the
+# exact anticover radius of the set selected so far — at zero extra cost,
+# which is what the radius certificates are built from.
+# --------------------------------------------------------------------------
 
-    def body(r, state):
-        min_dist, idx = state
-        # distance to the b centers chosen in the previous round — ONE sweep
-        # over the point set for b centers (the Pallas kernel's center block)
-        prev = jax.lax.dynamic_slice(idx, ((r - 1) * b,), (b,))
-        centers = points[prev]                        # (b, d)
-        d = metric.pairwise(points, centers)          # (n, b)
-        min_dist = jnp.minimum(min_dist, jnp.min(d, axis=1))
-        masked = jnp.where(mask, min_dist, neg_inf)
-        # lookahead-b: take the top-b candidates of the updated field, then
-        # correct *within the block* for their mutual distances (exact local
-        # GMM over the candidates)
-        cand_d, cand_i = jax.lax.top_k(masked, b)
+def _make_grouped_sweep(points, labels, m: int, p: int, chunk: int,
+                        metric_name: str, use_pallas: bool):
+    """Build the fused sweep closure: fold a center block into the shared
+    running-min field and extract every group's top-``p`` candidates.
 
-        def pick(j, carry):
-            cd, chosen = carry
-            sel = jnp.argmax(cd)
-            chosen = chosen.at[j].set(cand_i[sel])
-            dd = metric.point_to_set(points[cand_i], points[cand_i[sel]])
-            cd = jnp.minimum(cd, dd)
-            cd = cd.at[sel].set(neg_inf)
-            return cd, chosen
-
-        _, chosen = jax.lax.fori_loop(0, b, pick,
-                                      (cand_d, jnp.zeros((b,), jnp.int32)))
-        idx = jax.lax.dynamic_update_slice(idx, chosen, (r * b,))
-        return min_dist, idx
-
-    idx0 = jnp.zeros((k,), jnp.int32)
-    # round 0: exact first block seeded at `start`
-    min0 = jnp.where(mask, metric.point_to_set(points, points[start]), neg_inf)
-    idx0 = idx0.at[0].set(start)
-
-    def pick0(j, carry):
-        md, idx = carry
-        sel = jnp.argmax(jnp.where(mask, md, neg_inf))
-        idx = idx.at[j].set(sel)
-        md = jnp.minimum(md, metric.point_to_set(points, points[sel]))
-        return md, idx
-
-    min_dist, idx0 = jax.lax.fori_loop(1, b, pick0, (min0, idx0))
-    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx0))
-    # final sweep for the last block + radius
-    last = jax.lax.dynamic_slice(idx, ((rounds - 1) * b,), (b,))
-    d = metric.pairwise(points, points[last])
-    min_dist = jnp.minimum(min_dist, jnp.min(d, axis=1))
-    radius = jnp.max(jnp.where(mask, min_dist, neg_inf))
-    return idx, radius, min_dist
-
-
-@functools.partial(jax.jit, static_argnames=("k", "b", "chunk", "metric_name",
-                                             "use_pallas"))
-def _gmm_batched_chunked_impl(points, mask, start, k: int, b: int, chunk: int,
-                              metric_name: str, use_pallas: bool = False):
-    """Chunk-fused batched GMM: per sweep, each point chunk computes its
-    distance block, running-min update and LOCAL top-b in one pass — the
-    (n, b) distance matrix and the global sort never reach HBM.  This is the
-    jax-level expression of the Pallas ``gmm_topb`` kernel's fusion;
-    ``use_pallas=True`` swaps the lax.map sweep for that kernel (identical
-    interface: the kernel grid replaces the chunk loop)."""
+    ``centers`` is (m, bc, d) — ``bc`` centers per group; a point only folds
+    its OWN group's block (the per-group GMM runs are independent), so each
+    sweep costs n·bc·d distance work and the field stays (n,).  ``m == 1``
+    takes the matmul fast path (no per-point gather); rows with label < 0
+    (mask padding) match no group and can never be selected.
+    """
     metric = get_metric(metric_name)
     n, d = points.shape
     neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
-    rounds = k // b
 
-    if use_pallas:
-        from repro.kernels import ops as kops
+    if m == 1:
+        mask = labels >= 0
+        if use_pallas:
+            from repro.kernels import ops as kops
 
-        def sweep(min_dist, centers):
-            return kops.gmm_topb(points, centers, min_dist, mask, metric_name)
-    else:
+            def sweep(min_dist, centers):
+                md, cd, ci = kops.gmm_topb(points, centers[0], min_dist,
+                                           mask, metric_name, p=p)
+                return md, cd[None, :], ci[None, :]
+            return sweep
+
         nch = n // chunk
 
         def sweep(min_dist, centers):
-            """One fused pass: (new min_dist, cand_d (b,), cand_i (b,))."""
+            c2 = centers[0]                               # (bc, d)
+
             def chunk_fn(c):
                 x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
                 md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
                 mk = jax.lax.dynamic_slice(mask, (c * chunk,), (chunk,))
-                dist = metric.pairwise(x, centers)            # (chunk, b)
+                dist = metric.pairwise(x, c2)             # (chunk, bc)
                 new_md = jnp.minimum(md, jnp.min(dist, axis=1))
                 masked = jnp.where(mk, new_md, neg_inf)
-                cd, ci = jax.lax.top_k(masked, min(b, chunk))
+                cd, ci = jax.lax.top_k(masked, min(p, chunk))
                 return new_md, cd, (ci + c * chunk).astype(jnp.int32)
 
             new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
             min_dist = new_md.reshape(n)
             flat_d, flat_i = cd.reshape(-1), ci.reshape(-1)
-            sel_d, sel = jax.lax.top_k(flat_d, b)             # (nch*b,) — tiny
-            return min_dist, sel_d, flat_i[sel]
+            sel_d, sel = jax.lax.top_k(flat_d, min(p, flat_d.shape[0]))
+            return min_dist, sel_d[None, :], flat_i[sel][None, :]
+        return sweep
 
-    def inblock(cand_d, cand_i):
-        """Exact local GMM over the b candidates."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        def sweep(min_dist, centers):
+            return kops.grouped_gmm_topb(points, centers, min_dist, labels,
+                                         metric_name, p)
+        return sweep
+
+    nch = n // chunk
+    gids = jnp.arange(m, dtype=labels.dtype)[:, None]
+    safe_lab = jnp.clip(labels, 0, m - 1)         # pad rows (-1) -> any group
+
+    def sweep(min_dist, centers):
+        """One fused pass for all groups: each point gathers its own group's
+        bc-center block ((chunk, bc, d) — n·bc·d distance work total),
+        updates the shared running-min field, and every group's chunk-local
+        top-p is extracted under its label mask; the (n, m·bc) distance
+        matrix never exists."""
+
+        def chunk_fn(c):
+            x = jax.lax.dynamic_slice(points, (c * chunk, 0), (chunk, d))
+            lb = jax.lax.dynamic_slice(labels, (c * chunk,), (chunk,))
+            sl = jax.lax.dynamic_slice(safe_lab, (c * chunk,), (chunk,))
+            md = jax.lax.dynamic_slice(min_dist, (c * chunk,), (chunk,))
+            cen = centers[sl]                         # (chunk, bc, d)
+            dist = jax.vmap(metric.point_to_set)(cen, x)   # (chunk, bc)
+            new_md = jnp.minimum(md, jnp.min(dist, axis=1))
+            masked = jnp.where(lb[None, :] == gids, new_md[None, :],
+                               neg_inf)               # (m, chunk)
+            cd, ci = jax.lax.top_k(masked, min(p, chunk))   # (m, p)
+            return new_md, cd, (ci + c * chunk).astype(jnp.int32)
+
+        new_md, cd, ci = jax.lax.map(chunk_fn, jnp.arange(nch))
+        pc = cd.shape[2]
+        min_dist = new_md.reshape(n)
+        flat_d = jnp.moveaxis(cd, 0, 1).reshape(m, nch * pc)
+        flat_i = jnp.moveaxis(ci, 0, 1).reshape(m, nch * pc)
+        sel_d, sel = jax.lax.top_k(flat_d, min(p, nch * pc))  # merge
+        return min_dist, sel_d, jnp.take_along_axis(flat_i, sel, axis=1)
+
+    return sweep
+
+
+def _grouped_inblock(points, metric_name: str, cand_d, cand_i, take: int):
+    """Exact local GMM over each group's candidate pool (vmapped; p×p):
+    greedily keep ``take`` of the p candidates, correcting for mutual
+    distances within the pool.  Returns (chosen (m, take), seld (m, take))
+    where ``seld[g, j]`` is pick j's corrected anticover distance — the
+    greedy-consistency signal the adaptive controller and the radius
+    certificates consume."""
+    metric = get_metric(metric_name)
+    neg_inf = jnp.asarray(-jnp.inf, jnp.float32)
+
+    def one(cd, ci):
         def pick(j, carry):
-            cd, chosen = carry
+            cd, chosen, seld = carry
             s = jnp.argmax(cd)
-            chosen = chosen.at[j].set(cand_i[s])
-            dd = metric.point_to_set(points[cand_i], points[cand_i[s]])
+            chosen = chosen.at[j].set(ci[s])
+            seld = seld.at[j].set(cd[s])
+            dd = metric.point_to_set(points[ci], points[ci[s]])
             cd = jnp.minimum(cd, dd).at[s].set(neg_inf)
-            return cd, chosen
-        _, chosen = jax.lax.fori_loop(0, b, pick,
-                                      (cand_d, jnp.zeros((b,), jnp.int32)))
-        return chosen
+            return cd, chosen, seld
 
-    def body(r, state):
-        min_dist, idx = state
-        prev = jax.lax.dynamic_slice(idx, ((r - 1) * b,), (b,))
-        min_dist, cand_d, cand_i = sweep(min_dist, points[prev])
-        idx = jax.lax.dynamic_update_slice(idx, inblock(cand_d, cand_i),
-                                           (r * b,))
-        return min_dist, idx
+        _, chosen, seld = jax.lax.fori_loop(
+            0, take, pick, (cd, jnp.zeros((take,), jnp.int32),
+                            jnp.zeros((take,), jnp.float32)))
+        return chosen, seld
 
-    # round 0: seed + exact first block via b single-center sweeps
-    idx0 = jnp.zeros((k,), jnp.int32).at[0].set(start)
-    min0 = jnp.full((n,), jnp.inf, jnp.float32)
+    return jax.vmap(one)(cand_d, cand_i)
 
-    def pick0(j, carry):
-        md, idx = carry
-        md, cand_d, cand_i = sweep(md, points[idx[j - 1]][None])
-        idx = idx.at[j].set(cand_i[0])
-        return md, idx
 
-    min_dist, idx0 = jax.lax.fori_loop(1, b, pick0, (min0, idx0))
-    min_dist, idx = jax.lax.fori_loop(1, rounds, body, (min_dist, idx0))
-    last = jax.lax.dynamic_slice(idx, ((rounds - 1) * b,), (b,))
-    min_dist, _, _ = sweep(min_dist, points[last])
-    radius = jnp.max(jnp.where(mask, min_dist, neg_inf))
-    return idx, radius, min_dist
+def validate_schedule(schedule, k: int):
+    """A schedule is a tuple of (block, rounds) phases covering k picks."""
+    total = 0
+    for i, (b, r) in enumerate(schedule):
+        if b < 1 or r < 1:
+            raise ValueError(f"bad schedule phase {(b, r)}")
+        total += b * r
+    if total != k:
+        raise ValueError(f"schedule {schedule} covers {total} picks, not {k}")
+    return tuple((int(b), int(r)) for b, r in schedule)
+
+
+def schedule_sweep_counts(schedule):
+    """Centers folded into the field at each sweep of ``schedule`` — the
+    x-axis of the radius trajectory the engine emits (the final entry is the
+    full selection, whose field max is the measured anticover radius)."""
+    counts = []
+    pos = 0
+    for pi, (b, r) in enumerate(schedule):
+        if pi == 0 and b > 1:
+            counts.append(1)                      # seed sweep
+        elif pi > 0:
+            counts.append(pos)                    # transition sweep
+        counts.extend(pos + t * b for t in range(1, r))
+        pos += r * b
+    counts.append(pos)                            # final fold
+    return tuple(counts)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "schedule", "chunk",
+                                             "metric_name", "use_pallas"))
+def _schedule_select_impl(points, labels, starts, m: int, k: int, schedule,
+                          chunk: int, metric_name: str, use_pallas: bool):
+    """All ``m`` per-group GMM runs in lock-step under a selection schedule.
+
+    Phase (b, r) selects r blocks of b centers each; b > 1 sweeps oversample
+    4b candidates per group and an exact in-block GMM keeps the best b (the
+    same lookahead the grouped engine shipped with, now shared by the
+    unconstrained path — including block 0, which lookahead-fills slots
+    1..b-1 from the seed sweep's pool instead of b thin sweeps).  b = 1 is
+    exact sequential GMM, bit-for-bit.
+
+    Returns (idx (m, k), radius (m,), min_dist (n,), traj (S, m),
+    bcd (S-1, m)) where S = len(schedule_sweep_counts(schedule)); ``traj[s]``
+    is each group's exact anticover radius after folding
+    ``schedule_sweep_counts(...)[s]`` centers and ``bcd[s]`` is the minimum
+    corrected pick distance of the block selected at sweep s (the
+    greedy-consistency margin: a selection is anticover-certified when every
+    block's margin stays above the final radius).
+    """
+    n, _ = points.shape
+    S = len(schedule_sweep_counts(schedule))
+
+    idx = jnp.zeros((m, k), jnp.int32).at[:, 0].set(starts)
+    md = jnp.full((n,), jnp.inf, jnp.float32)
+    traj = jnp.full((S, m), jnp.inf, jnp.float32)
+    bcd = jnp.full((S - 1, m), jnp.inf, jnp.float32)
+
+    sweeps = {}
+
+    def get_sweep(p):
+        if p not in sweeps:
+            sweeps[p] = _make_grouped_sweep(points, labels, m, p, chunk,
+                                            metric_name, use_pallas)
+        return sweeps[p]
+
+    sc = 0          # python sweep counter (static per phase)
+    pos = 0         # python picks committed (static per phase)
+    for pi, (b, r) in enumerate(schedule):
+        p = min(4 * b, n) if b > 1 else 1
+        sweep = get_sweep(p)
+        if pi == 0 and b > 1:
+            # seed sweep: fold the per-group seeds, lookahead-fill 1..b-1
+            md, cd, ci = sweep(md, points[idx[:, 0]][:, None, :])
+            traj = traj.at[sc].set(cd[:, 0])
+            chosen, seld = _grouped_inblock(points, metric_name, cd, ci, b)
+            idx = idx.at[:, 1:b].set(chosen[:, :b - 1])
+            bcd = bcd.at[sc].set(jnp.min(seld[:, :b - 1], axis=1))
+            sc += 1
+        elif pi > 0:
+            # transition sweep: fold the previous phase's pending block
+            prev_b = schedule[pi - 1][0]
+            prev = jax.lax.dynamic_slice(idx, (0, pos - prev_b), (m, prev_b))
+            md, cd, ci = sweep(md, points[prev])
+            traj = traj.at[sc].set(cd[:, 0])
+            chosen, seld = _grouped_inblock(points, metric_name, cd, ci, b)
+            idx = jax.lax.dynamic_update_slice(idx, chosen, (0, pos))
+            bcd = bcd.at[sc].set(jnp.min(seld, axis=1))
+            sc += 1
+        if r > 1:
+            base, sc_base = pos, sc
+
+            def body(t, state, b=b, base=base, sc_base=sc_base, sweep=sweep):
+                md, idx, traj, bcd = state
+                prev = jax.lax.dynamic_slice(idx, (0, base + (t - 1) * b),
+                                             (m, b))
+                md, cd, ci = sweep(md, points[prev])
+                si = sc_base + t - 1
+                traj = jax.lax.dynamic_update_slice(traj, cd[:, :1].T,
+                                                    (si, 0))
+                chosen, seld = _grouped_inblock(points, metric_name, cd, ci,
+                                                b)
+                idx = jax.lax.dynamic_update_slice(idx, chosen,
+                                                   (0, base + t * b))
+                bcd = jax.lax.dynamic_update_slice(
+                    bcd, jnp.min(seld, axis=1)[None, :], (si, 0))
+                return md, idx, traj, bcd
+
+            md, idx, traj, bcd = jax.lax.fori_loop(1, r, body,
+                                                   (md, idx, traj, bcd))
+            sc += r - 1
+        pos += r * b
+
+    # final fold: the per-group masked max IS the anticover radius r_T
+    last_b = schedule[-1][0]
+    prev = jax.lax.dynamic_slice(idx, (0, k - last_b), (m, last_b))
+    md, cd, _ = get_sweep(1)(md, points[prev])
+    traj = traj.at[S - 1].set(cd[:, 0])
+    return idx, cd[:, 0], md, traj, bcd
 
 
 def effective_block(k: int, b: int) -> int:
@@ -274,49 +390,109 @@ def _pad_to_chunk(n: int, chunk: int):
     return -(-n // chunk) * chunk - n
 
 
-def gmm_batched(points, k: int, *, b: int = 8, metric="euclidean", mask=None,
-                start=0, chunk: int = 0, use_pallas: bool = False):
+def pad_for_engine(points, labels, chunk: int):
+    """Snap ``chunk`` to the point count and pad (points, labels) so that it
+    divides n — pad rows carry label -1, which matches no group, so they can
+    never be selected or counted.  Works under tracing (shapes are static).
+
+    ``chunk=0`` defaults to 4096-row tiles (not the whole array): the sweep
+    and the ext assign pass gather per-point center blocks, so an unbounded
+    chunk would materialize an (n, b·d)/(n, k'·d) tile and defeat the
+    engine's cache/VMEM-resident design.  b=1 selection is chunk-invariant
+    (per-chunk top-k + first-max merge == global argmax), so the default
+    only bounds memory, never changes results."""
+    n = points.shape[0]
+    ch = _adjust_chunk(n, chunk or 4096)
+    pad = _pad_to_chunk(n, ch)
+    if pad:
+        points = jnp.pad(points, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    return points, labels, ch
+
+
+def mask_to_labels(mask):
+    """Unconstrained masks as engine labels: valid rows are group 0, masked
+    rows carry the sentinel label -1 (never selectable)."""
+    return jnp.where(mask, 0, -1).astype(jnp.int32)
+
+
+class ScheduleResult(NamedTuple):
+    idx: jnp.ndarray        # (k,) selected indices
+    radius: jnp.ndarray     # () — measured anticover radius r_T
+    min_dist: jnp.ndarray   # (n,) — d(p, T) for every point
+    counts: tuple           # static: centers folded at each sweep
+    traj: jnp.ndarray       # (S,) — anticover radius at each sweep
+    margins: jnp.ndarray    # (S-1,) — per-block min corrected pick distance
+    schedule: tuple         # the executed (block, rounds) phases
+
+
+def gmm_schedule(points, k: int, schedule, *, metric="euclidean", mask=None,
+                 start=0, chunk: int = 0,
+                 use_pallas: bool = False) -> ScheduleResult:
+    """Run the selection engine under an explicit (block, rounds) schedule
+    and return the full radius telemetry (trajectory + greedy-consistency
+    margins).  This is the primitive behind ``gmm_batched`` (single-phase
+    schedules), the MapReduce ``b="auto"`` plans (static multi-phase
+    schedules resolved by a probe) and the certificates of
+    ``core.adaptive``."""
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    schedule = validate_schedule(schedule, k)
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    labels = mask_to_labels(mask)
+    pts_p, lab_p, ch = pad_for_engine(points, labels, chunk)
+    idx, radius, min_dist, traj, bcd = _schedule_select_impl(
+        pts_p, lab_p, jnp.asarray([start], jnp.int32), 1, k, schedule, ch,
+        get_metric(metric).name, use_pallas)
+    return ScheduleResult(idx=idx[0], radius=radius[0],
+                          min_dist=min_dist[:n],
+                          counts=schedule_sweep_counts(schedule),
+                          traj=traj[:, 0], margins=bcd[:, 0],
+                          schedule=schedule)
+
+
+def gmm_batched(points, k: int, *, b=8, metric="euclidean", mask=None,
+                start=0, chunk: int = 0, use_pallas: bool = False,
+                schedule=None):
     """Batched GMM (beyond-paper optimization, EXPERIMENTS.md §Perf).
 
     Sequential GMM sweeps the point set once per center — arithmetic
     intensity ~0.5 flop/byte, hopelessly memory-bound.  This variant selects
-    ``b`` centers per sweep: top-b of the running min-distance field with an
-    exact in-block correction (local GMM over the b candidates).  HBM traffic
-    drops ~b×; the selection differs from exact GMM only when a sweep's
-    farthest-point field changes rank order mid-block (tests show the
-    anticover radius within a few % of exact on benchmark distributions).
+    ``b`` centers per sweep: each sweep oversamples the top-4b candidates of
+    the running min-distance field and an exact in-block correction (local
+    GMM over the pool) keeps the best b.  HBM traffic drops ~b×; the
+    selection differs from exact GMM only when a sweep's farthest-point
+    field changes rank order mid-block (tests show the anticover radius
+    within a few % of exact on benchmark distributions).  Block 0 is seeded
+    the same way: one sweep from ``start`` lookahead-fills slots 1..b-1 from
+    the oversampled pool, so a full run costs k/b + 1 sweeps.
 
     Tuning: ``b`` trades HBM traffic for selection fidelity — 4–16 is the
-    sweet spot (b=1 degrades to exact sequential GMM).  ``chunk`` bounds the
-    per-sweep working set of the jax-level fused path; pick it so a
-    (chunk, b) tile plus a (chunk, d) point slab stays cache/VMEM-resident
-    (2–8k rows typically).  ``use_pallas=True`` swaps the chunked sweep for
-    the fused ``gmm_topb`` kernel (chunking then happens in the kernel grid
-    and ``chunk`` is ignored).
+    sweet spot; b=1 is exact sequential GMM, bit-for-bit, and ``b="auto"``
+    runs the radius-certified adaptive controller (``core.adaptive``), which
+    shrinks the block to 1 as the radius curve flattens.  ``chunk`` bounds
+    the per-sweep working set of the jax-level fused path (2–8k rows
+    typically; 0 defaults to 4096-row tiles).  ``use_pallas=True`` swaps the
+    chunked sweep for the fused ``gmm_topb`` kernel (chunking then happens
+    in the kernel grid).  ``schedule`` overrides ``b`` with an explicit
+    (block, rounds) phase plan (see ``gmm_schedule``).
 
-    k must be a multiple of b (use ``effective_block`` to snap a knob).
+    Without a schedule, k must be a multiple of b (use ``effective_block``
+    to snap a knob).
     """
-    points = jnp.asarray(points)
-    n = points.shape[0]
-    if k % b:
-        raise ValueError(f"k={k} must be a multiple of b={b}")
-    if mask is None:
-        mask = jnp.ones((n,), bool)
-    if chunk or use_pallas:
-        ch = _adjust_chunk(n, 0 if use_pallas else chunk)
-        pad = 0 if use_pallas else _pad_to_chunk(n, ch)
-        pts_p = jnp.pad(points, ((0, pad), (0, 0))) if pad else points
-        mask_p = jnp.pad(mask, (0, pad), constant_values=False) if pad \
-            else mask
-        idx, radius, min_dist = _gmm_batched_chunked_impl(
-            pts_p, mask_p, jnp.asarray(start, jnp.int32), k, b, ch,
-            get_metric(metric).name, use_pallas)
-        min_dist = min_dist[:n]
-    else:
-        idx, radius, min_dist = _gmm_batched_impl(
-            points, mask, jnp.asarray(start, jnp.int32), k, b,
-            get_metric(metric).name)
-    return idx, radius, min_dist
+    if b == "auto" and schedule is None:
+        from .adaptive import gmm_adaptive
+        res = gmm_adaptive(points, k, metric=metric, mask=mask, start=start,
+                           chunk=chunk, use_pallas=use_pallas)
+        return res.idx, res.radius, res.min_dist
+    if schedule is None:
+        if k % b:
+            raise ValueError(f"k={k} must be a multiple of b={b}")
+        schedule = ((b, k // b),)
+    res = gmm_schedule(points, k, schedule, metric=metric, mask=mask,
+                       start=start, chunk=chunk, use_pallas=use_pallas)
+    return res.idx, res.radius, res.min_dist
 
 
 class GMMExtResult(NamedTuple):
@@ -395,8 +571,8 @@ def _assign_to_centers(points, idx, chunk: int, metric_name: str):
 
 
 def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
-            start=0, use_pallas: bool = False, b: int = 1,
-            chunk: int = 0) -> GMMExtResult:
+            start=0, use_pallas: bool = False, b=1,
+            chunk: int = 0, schedule=None) -> GMMExtResult:
     """GMM-EXT (Algorithm 1): kernel of k' centers + up to k-1 delegates each.
 
     Single scan formulation: the GMM loop already tracks the nearest-center
@@ -406,19 +582,22 @@ def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
 
     ``b > 1`` selects the kernel with the batched lookahead-b engine
     (``gmm_batched``; b is snapped to a divisor of k' via
-    ``effective_block``) and recovers the assignment with one extra chunked
-    argmin pass — (k'/b + 2) sweeps total instead of k'.
+    ``effective_block``), ``b="auto"`` with the radius-certified adaptive
+    controller, and ``schedule`` with an explicit static phase plan; all
+    recover the assignment with one extra chunked argmin pass —
+    (k'/b + 2) sweeps total instead of k' (selection + assignment).
     """
     points = jnp.asarray(points)
     n = points.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
     metric_name = get_metric(metric).name
-    b = effective_block(kprime, b)
-    if b > 1 or chunk:
+    if b != "auto" and schedule is None:
+        b = effective_block(kprime, b)
+    if b == "auto" or schedule is not None or b > 1 or chunk:
         idx, radius, _ = gmm_batched(points, kprime, b=b, metric=metric,
                                      mask=mask, start=start, chunk=chunk,
-                                     use_pallas=use_pallas)
+                                     use_pallas=use_pallas, schedule=schedule)
         assign = _assign_to_centers(points, idx, chunk, metric_name)
     else:
         res = gmm(points, kprime, metric=metric, mask=mask, start=start,
@@ -431,12 +610,33 @@ def gmm_ext(points, k: int, kprime: int, *, metric="euclidean", mask=None,
                         radius=radius, assign=assign)
 
 
+def gmm_ext_from_kernel(points, idx, radius, k: int, *, metric="euclidean",
+                        mask=None, chunk: int = 0) -> GMMExtResult:
+    """Delegate extraction for an already-selected kernel ``idx`` (k',): one
+    chunked argmin pass recovers the assignment, then the shared delegate
+    table is built.  Used by the adaptive/auto paths, whose kernel selection
+    happened in the host-paced controller."""
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    metric_name = get_metric(metric).name
+    idx = jnp.asarray(idx, jnp.int32)
+    kprime = int(idx.shape[0])
+    assign = _assign_to_centers(points, idx, chunk, metric_name)
+    cand, valid, mult, assign = delegates_from_assign(idx, assign, mask, k,
+                                                      kprime)
+    return GMMExtResult(kernel_idx=idx, delegate_idx=cand,
+                        delegate_valid=valid, multiplicity=mult,
+                        radius=jnp.asarray(radius), assign=assign)
+
+
 def gmm_gen(points, k: int, kprime: int, *, metric="euclidean", mask=None,
-            start=0, use_pallas: bool = False, b: int = 1,
-            chunk: int = 0) -> GeneralizedCoreset:
+            start=0, use_pallas: bool = False, b=1,
+            chunk: int = 0, schedule=None) -> GeneralizedCoreset:
     """GMM-GEN: generalized core-set of size s(T)=k', expanded size <= k·k'."""
     ext = gmm_ext(points, k, kprime, metric=metric, mask=mask, start=start,
-                  use_pallas=use_pallas, b=b, chunk=chunk)
+                  use_pallas=use_pallas, b=b, chunk=chunk, schedule=schedule)
     return GeneralizedCoreset(points=jnp.asarray(points)[ext.kernel_idx],
                               multiplicity=ext.multiplicity,
                               radius=ext.radius)

@@ -266,7 +266,8 @@ class StreamingCoreset:
     """
 
     def __init__(self, k: int, kprime: int, dim: int, *, metric="euclidean",
-                 mode: str = "plain", dtype=jnp.float32):
+                 mode: str = "plain", dtype=jnp.float32,
+                 eps: Optional[float] = None):
         if mode not in ("plain", "ext", "gen"):
             raise ValueError(mode)
         if kprime < k:
@@ -276,13 +277,19 @@ class StreamingCoreset:
             raise ValueError(f"SMM needs a true metric, got {metric!r}")
         self.k, self.kprime, self.dim = k, kprime, dim
         self.metric, self.mode, self.dtype = m.name, mode, dtype
+        self.eps = eps           # accuracy target recorded in the certificate
         self.cap = kprime + 1
         self._prefix = []        # buffers the first cap points
         self._state: Optional[SMMState] = None
         self.n_seen = 0
+        # per-merge re-certification log: (n_seen, d_i) at every merge — the
+        # streaming analogue of the batch engine's radius trajectory (the
+        # proxy-distance bound is 4·d_i, and d_i only moves at merges)
+        self._phase_log = []
 
     # -- init ---------------------------------------------------------------
     def _boot(self, pts0):
+        self._n_processed = self.cap
         cap, k, dim = self.cap, self.k, self.dim
         k_slots = k if self.mode == "ext" else 1
         T = jnp.asarray(pts0, self.dtype)
@@ -309,6 +316,10 @@ class StreamingCoreset:
         while int(jnp.sum(state.t_valid)) >= self.cap:
             state = state._replace(d_thr=state.d_thr * 2.0)
             state = _merge(state, self.metric, self.mode, self.k)
+        # stamp with the exact number of stream points processed when the
+        # merge fired (NOT n_seen, which already counts the whole in-flight
+        # chunk) — this keeps the re-certification log chunk-invariant.
+        self._phase_log.append((self._n_processed, float(state.d_thr)))
         return state
 
     # -- streaming ----------------------------------------------------------
@@ -326,14 +337,18 @@ class StreamingCoreset:
                 self._prefix = []
             if chunk.shape[0] == 0:
                 return
-        self._consume(jnp.asarray(chunk, self.dtype))
+        self._consume(jnp.asarray(chunk, self.dtype),
+                      self.n_seen - chunk.shape[0])
 
-    def _consume(self, chunk) -> None:
+    def _consume(self, chunk, base: int = 0) -> None:
         """Sync-free chunk loop: ``_classify_absorb`` classifies the tail,
         finds the first far position and commits the near-prefix updates in
         one device dispatch; the host reads back a single int32 scalar.  On
         the common no-far-point path that scalar is the only transfer for the
-        whole chunk — the ``far`` mask itself never leaves the device."""
+        whole chunk — the ``far`` mask itself never leaves the device.
+
+        ``base`` is the number of stream points processed before this chunk
+        (re-certification log stamps only)."""
         c = chunk.shape[0]
         pos = 0
         state = self._state
@@ -351,14 +366,58 @@ class StreamingCoreset:
             pos += int(consumed)
             if bool(full):
                 state = state._replace(d_thr=state.d_thr * 2.0)
+                self._n_processed = base + pos
                 state = self._merge_until_room(state)
         self._state = state
+
+    # -- certification ------------------------------------------------------
+    def certificate(self):
+        """Streaming ``RadiusCertificate``: the proxy-distance bound 4·d_i
+        against the anticover scale measured on the live centers.
+
+        ``radius`` is the certified upper bound on any point's distance to
+        its proxy (the stream's points are gone, so unlike the batch engine
+        this is the paper's bound, not a re-measurement).  ``scale`` runs
+        exact GMM over the <= k'+1 live centers — stream points all within
+        ``radius`` of T, so T's anticover scale at k lower-bounds the
+        stream's diversity scale up to the same proxy error.  The
+        trajectory is the per-merge phase log (n_seen, 4·d_i): chunking the
+        stream differently cannot change it, because the SMM state itself is
+        chunk-invariant."""
+        from .adaptive import RadiusCertificate, _ratio
+        from .gmm import gmm as _gmm
+
+        counts = tuple(n for n, _ in self._phase_log)
+        radii = tuple(4.0 * d for _, d in self._phase_log)
+        if self._state is None:
+            return RadiusCertificate(
+                kprime=self.kprime, radius=0.0, scale=0.0, ratio=0.0,
+                eps_target=self.eps,
+                meets_target=None if self.eps is None else True,
+                counts=counts, radii=radii, kind="streaming")
+        state = self._state
+        radius = 4.0 * float(state.d_thr)
+        n_valid = int(jnp.sum(state.t_valid))
+        if n_valid >= self.k:
+            res = _gmm(state.T, self.k, metric=self.metric,
+                       mask=state.t_valid,
+                       start=int(jnp.argmax(state.t_valid)))
+            scale = float(res.radius)
+        else:
+            scale = 0.0
+        ratio = _ratio(radius, scale)
+        return RadiusCertificate(
+            kprime=self.kprime, radius=radius, scale=scale, ratio=ratio,
+            eps_target=self.eps,
+            meets_target=None if self.eps is None else bool(ratio <= self.eps),
+            counts=counts, radii=radii, kind="streaming")
 
     # -- output -------------------------------------------------------------
     def finalize(self, *, allow_small: bool = False):
         """``allow_small=True`` returns whatever the stream held when it had
         fewer than ``k`` points (used by the constrained driver, where a tiny
-        group legitimately contributes all of its members)."""
+        group legitimately contributes all of its members).  The returned
+        core-set carries the streaming ``RadiusCertificate`` as ``.cert``."""
         if self._state is None:
             # tiny stream: everything fits in the prefix buffer
             pts = np.concatenate(self._prefix, axis=0) if self._prefix else \
@@ -367,7 +426,9 @@ class StreamingCoreset:
                 raise ValueError(f"stream had {pts.shape[0]} < k={self.k} points")
             w = np.ones((pts.shape[0],), np.int32)
             return Coreset(points=jnp.asarray(pts), valid=jnp.ones(len(pts), bool),
-                           weights=jnp.asarray(w), radius=jnp.asarray(0.0))
+                           weights=jnp.asarray(w), radius=jnp.asarray(0.0),
+                           cert=self.certificate())
+        cert = self.certificate()
         state = self._state
         n_valid = int(jnp.sum(state.t_valid))
         # top-up from M so that |T| >= k (paper's fix: M ∪ I has >= k'+1 >= k pts)
@@ -377,11 +438,11 @@ class StreamingCoreset:
         if self.mode == "plain":
             return Coreset(points=state.T, valid=state.t_valid,
                            weights=jnp.where(state.t_valid, 1, 0).astype(jnp.int32),
-                           radius=radius)
+                           radius=radius, cert=cert)
         if self.mode == "gen":
             mult = jnp.where(state.t_valid, jnp.maximum(state.e_cnt, 1), 0)
             return GeneralizedCoreset(points=state.T, multiplicity=mult,
-                                      radius=radius)
+                                      radius=radius, cert=cert)
         # ext: union of delegate sets
         cap, k_slots, dim = state.e_pts.shape
         pts = state.e_pts.reshape(cap * k_slots, dim)
@@ -389,11 +450,17 @@ class StreamingCoreset:
         row = jnp.repeat(jnp.arange(cap), k_slots)
         valid = state.t_valid[row] & (slot < state.e_cnt[row])
         return Coreset(points=pts, valid=valid,
-                       weights=valid.astype(jnp.int32), radius=radius)
+                       weights=valid.astype(jnp.int32), radius=radius,
+                       cert=cert)
 
     @property
     def state(self) -> Optional[SMMState]:
         return self._state
+
+    @property
+    def phase_log(self):
+        """Per-merge (n_seen, d_i) re-certification log (read-only copy)."""
+        return tuple(self._phase_log)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

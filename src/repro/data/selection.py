@@ -67,9 +67,10 @@ def balanced_quotas(group_labels: np.ndarray, k: int, m: Optional[int] = None
 
 
 def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
-                   kprime: Optional[int] = None, num_reducers: int = 1,
+                   kprime=None, num_reducers: int = 1,
                    metric="euclidean", group_labels=None, quotas=None,
-                   matroid=None, b: int = 1, chunk: int = 0) -> np.ndarray:
+                   matroid=None, b=1, chunk: int = 0,
+                   eps: float = 0.1) -> np.ndarray:
     """Returns indices of the k selected examples.
 
     With ``group_labels`` (an ``(n,)`` int array of category ids) the
@@ -84,7 +85,9 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
     path (lookahead-b center blocking + chunk-fused sweeps; see
     ``core.gmm.gmm_batched`` / ``constrained.coreset``): ``b=1`` is exact
     GMM, ``b`` in 4–16 cuts point-set sweeps ~b× for large pools at a few-%
-    selection-fidelity cost.
+    selection-fidelity cost, and ``b="auto"`` / ``kprime="auto"`` run the
+    radius-certified adaptive engine (``core.adaptive``; ``eps`` sets the
+    auto-k' accuracy target).
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -118,7 +121,8 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
             sol, sol_lab, _ = simulate_fair_mr(pts, labels, matroid=matroid,
                                                num_reducers=num_reducers,
                                                measure=measure, kprime=kprime,
-                                               metric=metric, b=b, chunk=chunk)
+                                               metric=metric, b=b, chunk=chunk,
+                                               eps=eps)
             # match within the solution point's group so duplicate embeddings
             # across groups can't silently break the quota guarantee
             return _match_rows(pts, sol, k, row_labels=labels,
@@ -126,7 +130,8 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
         from repro.constrained import fair_diversity_maximize
         idx, _, _ = fair_diversity_maximize(pts, labels, measure=measure,
                                             matroid=matroid, kprime=kprime,
-                                            metric=metric, b=b, chunk=chunk)
+                                            metric=metric, b=b, chunk=chunk,
+                                            eps=eps)
         return np.asarray(idx)
     if quotas is not None:
         raise ValueError("quotas= requires group_labels=")
@@ -134,10 +139,12 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
         raise ValueError("matroid= requires group_labels=")
     if num_reducers > 1:
         sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
-                             kprime=kprime, metric=metric, b=b, chunk=chunk)
+                             kprime=kprime, metric=metric, b=b, chunk=chunk,
+                             eps=eps)
     else:
         sol, _, _ = diversity_maximize(pts, k, measure, kprime=kprime,
-                                       metric=metric, b=b, chunk=chunk)
+                                       metric=metric, b=b, chunk=chunk,
+                                       eps=eps)
     return _match_rows(pts, sol, k)
 
 

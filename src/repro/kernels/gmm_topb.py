@@ -24,7 +24,7 @@ from .gmm_update import resolve_interpret
 
 
 def _topb_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
-                 min_out_ref, val_ref, idx_ref, *, mode, bn, b):
+                 min_out_ref, val_ref, idx_ref, *, mode, bn, p):
     i = pl.program_id(0)
     x = x_ref[...]                                   # (bn, d)
     c = c_ref[...]                                   # (b, d)
@@ -43,29 +43,33 @@ def _topb_kernel(x_ref, c_ref, xsq_ref, csq_ref, min_ref, mask_ref,
     new_min = jnp.minimum(min_ref[...], jnp.min(dist, axis=1))
     min_out_ref[...] = new_min
     masked = jnp.where(mask_ref[...], new_min, -jnp.inf)
-    vals, idxs = jax.lax.top_k(masked, b)            # tile-local top-b
+    vals, idxs = jax.lax.top_k(masked, p)            # tile-local top-p
     val_ref[...] = vals
     idx_ref[...] = (idxs + i * bn).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "bn", "p", "interpret"))
 def gmm_topb_pallas(points, centers, min_in, mask, *, mode: str = "euclidean",
-                    bn: int = 1024, interpret=None):
+                    bn: int = 1024, p: int = None, interpret=None):
     """Fused batched round.  points (n, d) [n % bn == 0], centers (b, d),
-    min_in (n,), mask (n,) -> (min_out (n,), cand_val (b,), cand_idx (b,)).
+    min_in (n,), mask (n,) -> (min_out (n,), cand_val (p,), cand_idx (p,)).
 
-    cand_* are the exact global top-b of the updated masked min-distance
-    field (tile-local top-b + cross-tile merge).  ``interpret=None``
-    auto-selects per backend (see ``gmm_update.resolve_interpret``)."""
+    cand_* are the exact global top-p of the updated masked min-distance
+    field (tile-local top-p + cross-tile merge).  ``p`` defaults to the
+    center-block size b; the adaptive/oversampled engines pass p=2b to pull
+    a candidate pool wider than the block from the same sweep.
+    ``interpret=None`` auto-selects per backend (see
+    ``gmm_update.resolve_interpret``)."""
     interpret = resolve_interpret(interpret)
     n, d = points.shape
     b = centers.shape[0]
-    assert n % bn == 0 and bn >= b, (n, bn, b)
+    p = b if p is None else p
+    assert n % bn == 0 and bn >= p, (n, bn, p)
     xsq = jnp.sum(points * points, axis=-1)
     csq = jnp.sum(centers * centers, axis=-1)
     grid = (n // bn,)
     min_out, vals, idxs = pl.pallas_call(
-        functools.partial(_topb_kernel, mode=mode, bn=bn, b=b),
+        functools.partial(_topb_kernel, mode=mode, bn=bn, p=p),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d), lambda i: (i, 0)),
@@ -77,28 +81,28 @@ def gmm_topb_pallas(points, centers, min_in, mask, *, mode: str = "euclidean",
         ],
         out_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((b,), lambda i: (i,)),
-            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((grid[0] * b,), jnp.float32),
-            jax.ShapeDtypeStruct((grid[0] * b,), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0] * p,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0] * p,), jnp.int32),
         ],
         interpret=interpret,
     )(points, centers, xsq, csq, min_in, mask)
-    # cross-tile merge: top-b of (grid*b) winners — exact global top-b
-    mvals, sel = jax.lax.top_k(vals, b)
+    # cross-tile merge: top-p of (grid*p) winners — exact global top-p
+    mvals, sel = jax.lax.top_k(vals, p)
     return min_out, mvals, idxs[sel]
 
 
 def gmm_topb_ref(points, centers, min_in, mask, mode: str = "euclidean",
-                 b: int = None):
+                 p: int = None):
     """Pure-jnp oracle."""
     from .ref import pairwise_ref
-    b = b if b is not None else centers.shape[0]
+    p = p if p is not None else centers.shape[0]
     d = pairwise_ref(points, centers, mode)
     new_min = jnp.minimum(min_in, jnp.min(d, axis=1))
     masked = jnp.where(mask, new_min, -jnp.inf)
-    vals, idxs = jax.lax.top_k(masked, b)
+    vals, idxs = jax.lax.top_k(masked, p)
     return new_min, vals, idxs.astype(jnp.int32)

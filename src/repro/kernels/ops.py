@@ -88,14 +88,15 @@ def gmm_update_select(points, centers, min_in, mask, metric_name: str,
     return min_out[:n], arg, mx
 
 
-@functools.partial(jax.jit, static_argnames=("metric_name", "bn"))
+@functools.partial(jax.jit, static_argnames=("metric_name", "p", "bn"))
 def gmm_topb(points, centers, min_in, mask, metric_name: str,
-             bn: int = 1024):
+             p: int = None, bn: int = 1024):
     """Fused batched GMM round on (n, d) points vs (b, d) centers.
 
-    Returns (min_out (n,), cand_val (b,), cand_idx (b,)) — the exact global
-    top-b of the updated masked min-distance field.  Padded rows are masked
-    out, so the candidates always index the original n points.
+    Returns (min_out (n,), cand_val (p,), cand_idx (p,)) — the exact global
+    top-p of the updated masked min-distance field (``p`` defaults to b; the
+    oversampled engines pass p=2b).  Padded rows are masked out, so the
+    candidates always index the original n points.
     """
     mode, norm = _metric_to_mode(metric_name)
     points = jnp.asarray(points, jnp.float32)
@@ -103,14 +104,14 @@ def gmm_topb(points, centers, min_in, mask, metric_name: str,
     if norm:
         points, centers = _normalize(points), _normalize(centers)
     n, d = points.shape
-    b = centers.shape[0]
-    bn_ = max(min(bn, _round_up(n, 8)), b)
+    p = centers.shape[0] if p is None else p
+    bn_ = max(min(bn, _round_up(n, 8)), p)
     npad = _round_up(n, bn_)
     pp = jnp.pad(points, ((0, npad - n), (0, 0)))
     mi = jnp.pad(min_in, (0, npad - n), constant_values=jnp.inf)
     mk = jnp.pad(mask, (0, npad - n), constant_values=False)
     min_out, vals, idxs = gmm_topb_pallas(pp, centers, mi, mk, mode=mode,
-                                          bn=bn_)
+                                          bn=bn_, p=p)
     return min_out[:n], vals, jnp.minimum(idxs, n - 1)
 
 

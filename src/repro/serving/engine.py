@@ -76,8 +76,9 @@ class ServingEngine:
 
 def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
                    measure: str = "remote-edge", *, group_labels=None,
-                   quotas=None, matroid=None, b: int = 1,
-                   chunk: int = 0) -> np.ndarray:
+                   quotas=None, matroid=None, b=1,
+                   chunk: int = 0, kprime=None,
+                   eps: float = 0.1) -> np.ndarray:
     """Pick the k most diverse candidates; returns their indices.
 
     ``quotas`` (with per-candidate ``group_labels``) constrains the result to
@@ -90,7 +91,9 @@ def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
 
     ``b``/``chunk`` pass through to the single-sweep selection engine
     (``select_diverse``) — worth setting for large candidate pools where the
-    rerank is latency-critical.
+    rerank is latency-critical; ``b="auto"`` / ``kprime="auto"`` hand the
+    knobs to the radius-certified adaptive engine (``eps`` sets the auto-k'
+    accuracy target).
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(1)
@@ -103,4 +106,5 @@ def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
     from repro.data.selection import select_diverse
     return select_diverse(candidate_embeddings, k, measure=measure,
                           group_labels=group_labels, quotas=quotas,
-                          matroid=matroid, b=b, chunk=chunk)
+                          matroid=matroid, b=b, chunk=chunk, kprime=kprime,
+                          eps=eps)

@@ -1,0 +1,313 @@
+"""Radius-certified adaptive selection engine tests (ISSUE 4):
+
+* radius-trajectory monotonicity across engines and schedules;
+* ``b="auto"`` within the certified bound of exact b=1 — including the
+  degradation regime (k' far above the effective cluster count) the
+  controller exists for;
+* ``auto_kprime`` hitting the ε target on clustered and uniform data;
+* chunk-size invariance of the streaming per-merge re-certification;
+* certificate plumbing through build_coreset / grouped / MR / streaming.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import (StreamingCoreset, auto_kprime, build_coreset,
+                        diversity_maximize, gmm, gmm_adaptive, gmm_schedule)
+from repro.core.adaptive import (RadiusCertificate,
+                                 certificate_from_trajectory,
+                                 plan_from_schedule, resolve_engine_plan)
+from repro.core.distributed import simulate_mr
+from repro.core.gmm import schedule_sweep_counts, validate_schedule
+from repro.data import clustered_dataset
+
+
+def _clustered(n=6000, clusters=4, dim=8, seed=0):
+    return np.asarray(clustered_dataset(n, clusters=clusters, dim=dim,
+                                        seed=seed))
+
+
+def _uniform(n=6000, dim=8, seed=1):
+    return np.random.default_rng(seed).normal(size=(n, dim)) \
+        .astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# trajectory invariants
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", [((8, 4),), ((8, 2), (4, 2), (1, 8)),
+                                      ((1, 32),)])
+def test_schedule_radius_trajectory_monotone(schedule):
+    """Every sweep's recorded radius is the masked field max of a field that
+    only shrinks — the trajectory must be non-increasing, and its counts
+    axis must match the static schedule bookkeeping."""
+    pts = _uniform(3000)
+    k = sum(b * r for b, r in schedule)
+    res = gmm_schedule(pts, k, schedule, chunk=512)
+    traj = np.asarray(res.traj)
+    assert traj.shape == (len(schedule_sweep_counts(schedule)),)
+    assert np.all(np.diff(traj) <= 1e-5)
+    assert res.counts[0] in (1,) and res.counts[-1] == k
+    assert np.all(np.diff(np.asarray(res.counts)) > 0)
+    # the final trajectory sample IS the measured radius
+    np.testing.assert_allclose(traj[-1], float(res.radius), rtol=1e-6)
+
+
+def test_adaptive_trajectory_monotone_and_counts():
+    res = gmm_adaptive(_clustered(), 48, scale_count=6)
+    traj = np.asarray(res.traj)
+    assert np.all(np.diff(traj) <= 1e-5)
+    assert len(res.counts) == traj.shape[0]
+    assert res.counts[-1] == 48
+    assert sum(b * r for b, r in res.schedule) == 48 - 1  # seed + blocks
+
+
+def test_schedule_b1_bit_exact_vs_gmm():
+    """((1, k)) through the schedule engine IS sequential GMM."""
+    pts = _uniform(2000, dim=4, seed=3)
+    res = gmm_schedule(pts, 24, ((1, 24),), chunk=512)
+    exact = gmm(pts, 24)
+    np.testing.assert_array_equal(np.asarray(res.idx), np.asarray(exact.idx))
+    np.testing.assert_allclose(float(res.radius), float(exact.radius),
+                               rtol=1e-6)
+
+
+def test_validate_schedule_rejects_bad_plans():
+    with pytest.raises(ValueError):
+        validate_schedule(((8, 2), (1, 3)), 32)
+    with pytest.raises(ValueError):
+        validate_schedule(((0, 4),), 0)
+    assert validate_schedule(((8, 2), (1, 16)), 32) == ((8, 2), (1, 16))
+
+
+# --------------------------------------------------------------------------
+# adaptive-b certified bound
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("clusters", [4, 16, None])
+def test_auto_b_within_certified_bound_of_b1(clusters):
+    """b="auto" radius within 10% of exact b=1 — including k' far above the
+    effective cluster count, where fixed b=8 degrades (the flat regime must
+    trigger the bit-exact b=1 fallback)."""
+    pts = _clustered(clusters=clusters) if clusters else _uniform()
+    kp = 64
+    exact = float(gmm(pts, kp).radius)
+    res = gmm_adaptive(pts, kp, b0=8, chunk=1024)
+    assert float(res.radius) <= 1.10 * exact + 1e-9
+    assert len(set(np.asarray(res.idx).tolist())) == kp
+    if clusters and kp > 4 * clusters:
+        # deep in the flat regime the controller must have shrunk the block
+        assert any(b == 1 for b, _ in res.schedule)
+
+
+def test_auto_b_shrinks_only_when_needed():
+    """On well-separated uniform data with k' small, the controller keeps
+    the full block (no shrink events) — the speedup is preserved."""
+    pts = _uniform(20000)
+    res = gmm_adaptive(pts, 32, b0=8, chunk=4096)
+    assert res.schedule[0][0] == 8
+    blocks = [b for b, _ in res.schedule]
+    assert max(blocks) == 8
+
+
+# --------------------------------------------------------------------------
+# auto_kprime hits the eps target
+# --------------------------------------------------------------------------
+
+# eps targets are dimension-appropriate: k' grows like (1/eps)^dim in the
+# doubling dimension (the paper's core size bound).  Once the engine covers
+# the clusters exactly (no lookahead waste), the certificate scale at k is
+# the WITHIN-cluster radius, so the reachable eps is set by the clusters'
+# intrinsic dimension — both datasets here have 2-dimensional content.
+@pytest.mark.parametrize("make,name,eps,eps_tight", [
+    (lambda: _clustered(clusters=4, dim=2, seed=5), "clustered-2d", 0.5,
+     0.3),
+    (lambda: _uniform(dim=2, seed=5), "uniform-2d", 0.6, 0.35),
+])
+def test_auto_kprime_meets_eps_target(make, name, eps, eps_tight):
+    pts = make()
+    res = auto_kprime(pts, k=6, eps=eps)
+    cert = res.cert
+    assert isinstance(cert, RadiusCertificate)
+    assert cert.meets_target, (name, cert.ratio, cert.kprime)
+    assert cert.ratio <= eps
+    # the certificate re-measures: radius is the true anticover radius
+    exact = gmm(pts, int(res.idx.shape[0]))
+    assert cert.radius <= 1.10 * float(exact.radius) + 1e-9
+    # tighter target -> at least as many centers
+    res_tight = auto_kprime(pts, k=6, eps=eps_tight)
+    assert res_tight.cert.kprime >= cert.kprime
+
+
+def test_auto_kprime_monotone_trajectory_and_cap():
+    pts = _uniform(1500, dim=4)
+    res = auto_kprime(pts, k=4, eps=1e-6, kprime_max=128)
+    # impossible target: grows to the cap and reports the miss honestly
+    assert res.cert.kprime == 128
+    assert res.cert.meets_target is False
+    assert np.all(np.diff(np.asarray(res.traj)) <= 1e-5)
+
+
+# --------------------------------------------------------------------------
+# certificate plumbing
+# --------------------------------------------------------------------------
+
+def test_build_coreset_auto_attaches_certificate():
+    pts = _clustered(3000, clusters=8, seed=7)
+    cs = build_coreset(pts, k=5, kprime="auto", measure="remote-edge",
+                       eps=0.3)
+    assert cs.cert is not None and cs.cert.meets_target
+    assert cs.size == cs.cert.kprime
+    # ext route shares the kernel certificate
+    cs_ext = build_coreset(pts, k=5, kprime="auto", measure="remote-clique",
+                           eps=0.3)
+    assert cs_ext.cert is not None and cs_ext.cert.meets_target
+    # fixed-k' adaptive-b also certifies
+    cs_b = build_coreset(pts, k=5, kprime=32, measure="remote-edge",
+                         b="auto")
+    assert cs_b.cert is not None and cs_b.cert.kprime == 32
+    sol, value, cs2 = diversity_maximize(pts, 5, "remote-edge",
+                                         kprime="auto", eps=0.3)
+    assert sol.shape == (5, pts.shape[1]) and value > 0
+    assert cs2.cert.meets_target
+
+
+def test_grouped_adaptive_purity_and_certificate():
+    from repro.constrained import grouped_coreset
+
+    rng = np.random.default_rng(8)
+    pts = _clustered(4000, clusters=8, seed=8)
+    lab = rng.integers(0, 3, size=4000).astype(np.int32)
+    lab[:3] = np.arange(3)
+    cs = grouped_coreset(pts, lab, 3, 4, "auto", b="auto", eps=0.4)
+    assert cs.cert is not None
+    assert cs.cert.group_ratios is not None and len(cs.cert.group_ratios) == 3
+    idx, valid = np.asarray(cs.idx), np.asarray(cs.valid)
+    for g in range(3):
+        rows = idx[g][valid[g]]
+        assert (lab[rows] == g).all()
+        assert len(set(rows.tolist())) == len(rows)
+    fi, fl = cs.flatten()
+    assert (lab[fi] == fl).all()
+
+
+def test_fair_auto_end_to_end_quota_feasible():
+    from repro.constrained import fair_diversity_maximize
+
+    rng = np.random.default_rng(9)
+    pts = _uniform(1200, dim=4, seed=9)
+    lab = rng.integers(0, 3, size=1200).astype(np.int32)
+    idx, value, cs = fair_diversity_maximize(pts, lab, quotas=[2, 2, 2],
+                                             kprime="auto", b="auto",
+                                             eps=0.4)
+    assert np.bincount(lab[np.asarray(idx)], minlength=3).tolist() == [2, 2, 2]
+    assert value > 0 and cs.cert is not None
+
+
+# --------------------------------------------------------------------------
+# MR probe plans
+# --------------------------------------------------------------------------
+
+def test_resolve_engine_plan_freezes_schedule():
+    pts = _clustered(4096, clusters=4, seed=10)
+    kp, schedule, cert = resolve_engine_plan(pts, 6, "auto", "auto", eps=0.3)
+    assert schedule is not None
+    validate_schedule(schedule, kp)
+    assert cert is not None and cert.kprime >= 12
+    # numeric knobs pass through untouched
+    assert resolve_engine_plan(pts, 6, 32, 4) == (32, None, None)
+
+
+def test_plan_from_schedule_shapes():
+    assert plan_from_schedule(((8, 4),), 64, 33) == ((8, 8),)
+    plan = plan_from_schedule(((8, 2), (1, 16)), 64, 33)
+    validate_schedule(plan, 64)
+    assert plan[0][0] == 8 and plan[-1][0] == 1
+    assert plan_from_schedule(((1, 33),), 64, 33) == ((1, 64),)
+
+
+def test_simulate_mr_auto_matches_quality():
+    pts = _uniform(4096, seed=11)
+    sol_auto, div_auto = simulate_mr(pts, 6, "remote-edge", num_reducers=4,
+                                     b="auto", kprime="auto", eps=0.3)
+    sol_b1, div_b1 = simulate_mr(pts, 6, "remote-edge", num_reducers=4)
+    assert sol_auto.shape == sol_b1.shape
+    assert div_auto >= 0.85 * div_b1
+
+
+# --------------------------------------------------------------------------
+# streaming per-merge re-certification
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["plain", "ext"])
+def test_streaming_recertification_chunk_invariant(mode):
+    """The per-merge phase log (and therefore the certificate) is a function
+    of the stream content only — any chunking yields the identical log."""
+    stream = np.random.default_rng(12).normal(size=(1500, 3)) \
+        .astype(np.float32)
+    certs = []
+    for chunk in (1, 7, 256, 1500):
+        smm = StreamingCoreset(k=6, kprime=24, dim=3, mode=mode, eps=2.0)
+        for i in range(0, len(stream), chunk):
+            smm.update(stream[i:i + chunk])
+        certs.append(smm.certificate())
+    ref = certs[0]
+    assert ref.kind == "streaming" and len(ref.counts) >= 1
+    for c in certs[1:]:
+        assert c.counts == ref.counts
+        np.testing.assert_allclose(c.radii, ref.radii, rtol=1e-6)
+        np.testing.assert_allclose(c.ratio, ref.ratio, rtol=1e-6)
+
+
+def test_streaming_finalize_attaches_cert_and_bounds_radius():
+    stream = np.random.default_rng(13).normal(size=(2000, 3)) \
+        .astype(np.float32)
+    smm = StreamingCoreset(k=5, kprime=32, dim=3, eps=100.0)
+    smm.update(stream)
+    cs = smm.finalize()
+    cert = cs.cert
+    assert cert is not None and cert.meets_target
+    # 4·d_i really is an upper bound on every stream point's proxy distance
+    import jax.numpy as jnp
+    from repro.core.metrics import get_metric
+    m = get_metric("euclidean")
+    T = np.asarray(cs.points)[np.asarray(cs.valid)]
+    d = np.asarray(m.pairwise(jnp.asarray(stream), jnp.asarray(T))).min(1)
+    assert d.max() <= cert.radius + 1e-5
+    # the log is non-empty and thresholds only ever doubled upward
+    assert len(cert.radii) >= 1
+    assert np.all(np.diff(cert.radii) >= -1e-9)
+
+
+def test_fair_streaming_certificates():
+    from repro.constrained import FairStreamingCoreset
+
+    rng = np.random.default_rng(14)
+    pts = rng.normal(size=(900, 3)).astype(np.float32)
+    lab = rng.integers(0, 3, size=900)
+    smm = FairStreamingCoreset(m=3, k=6, kprime=16, dim=3)
+    for i in range(0, 900, 128):
+        smm.update(pts[i:i + 128], lab[i:i + 128])
+    per = smm.certificates()
+    assert set(per) == {0, 1, 2}
+    combined = smm.certificate()
+    assert combined.kind == "streaming"
+    assert combined.group_ratios is not None
+    assert combined.ratio == max(c.ratio for c in per.values())
+
+
+# --------------------------------------------------------------------------
+# certificate container behavior
+# --------------------------------------------------------------------------
+
+def test_certificate_from_trajectory_fields():
+    cert = certificate_from_trajectory([1, 8, 16], [4.0, 2.0, 1.0], k=8,
+                                       eps=1.1, b_schedule=((8, 2),))
+    assert cert.scale == 2.0 and cert.radius == 1.0
+    assert cert.ratio == pytest.approx(1.0)
+    assert cert.meets_target is True
+    d = cert.to_dict()
+    assert d["kprime"] == 16 and tuple(d["b_schedule"]) == ((8, 2),)
+    degenerate = certificate_from_trajectory([1, 4], [0.0, 0.0], k=2)
+    assert degenerate.ratio == 0.0

@@ -1,0 +1,114 @@
+"""CI perf-gate machinery tests: the bench_adaptive artifact shape, the
+compare.py normalized-regression logic (machine-portable: in-run b=1
+reference), the min-time noise floor, and the markdown trend report."""
+import copy
+import json
+
+import pytest
+
+from benchmarks import bench_adaptive, compare
+
+
+def test_bench_adaptive_emits_machine_readable_json(tmp_path):
+    rows = bench_adaptive.run(quick=True, only=["clu4", "uniform"])
+    engines = {(r["shape"], r["engine"]) for r in rows}
+    assert {("clu4", "b1"), ("clu4", "b8"), ("clu4", "auto"),
+            ("uniform", "b1"), ("uniform", "auto")} <= engines
+    for r in rows:
+        for key in ("time_s", "radius", "radius_ratio_vs_b1",
+                    "speedup_vs_b1", "large"):
+            assert key in r, (r["shape"], r["engine"], key)
+    # the acceptance summary: auto within 10% of exact everywhere
+    doc = bench_adaptive.emit_json(rows, path=str(tmp_path / "BENCH.json"))
+    assert doc["summary"]["auto_radius_within_10pct"] is True
+    loaded = json.loads((tmp_path / "BENCH.json").read_text())
+    assert loaded["benchmark"] == "adaptive-engine"
+    assert loaded["rows"] == doc["rows"]
+
+
+def _doc(times, quality=None):
+    rows = []
+    for (shape, engine), t in times.items():
+        row = {"shape": shape, "engine": engine, "time_s": t}
+        if quality:
+            row["radius_ratio_vs_b1"] = quality.get((shape, engine), 1.0)
+        rows.append(row)
+    return {"benchmark": "adaptive-engine", "rows": rows, "summary": {}}
+
+
+SPEC = compare.SPECS["BENCH_adaptive.json"]
+
+
+def test_compare_normalizes_per_shape_and_detects_regression():
+    base = _doc({("s1", "b1"): 1.0, ("s1", "auto"): 0.25,
+                 ("s2", "b1"): 2.0, ("s2", "auto"): 1.0})
+    fresh = copy.deepcopy(base)
+    # machine 2x slower overall: normalized times unchanged -> no regression
+    for r in fresh["rows"]:
+        r["time_s"] *= 2.0
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+    # auto leg genuinely 2x slower relative to its b1 -> regression
+    for r in fresh["rows"]:
+        if (r["shape"], r["engine"]) == ("s1", "auto"):
+            r["time_s"] *= 2.0
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert len(regressions) == 1 and "s1:auto" in regressions[0]
+
+
+def test_compare_min_time_floor_skips_noise_rows():
+    base = _doc({("tiny", "b1"): 0.010, ("tiny", "auto"): 0.004})
+    fresh = _doc({("tiny", "b1"): 0.010, ("tiny", "auto"): 0.012})
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25,
+                                         min_time=0.05)
+    assert regressions == []          # 3x slower but sub-floor: report-only
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25,
+                                         min_time=0.001)
+    assert len(regressions) == 1
+
+
+def test_compare_flags_rows_lost_from_fresh_run():
+    """A gated row that disappears from the fresh run is lost coverage, not
+    a pass."""
+    base = _doc({("s1", "b1"): 1.0, ("s1", "auto"): 0.25})
+    fresh = _doc({("s1", "b1"): 1.0})
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert len(regressions) == 1 and "missing" in regressions[0]
+
+
+def test_compare_gmm_global_reference():
+    spec = compare.SPECS["BENCH_gmm.json"]
+    base = {"rows": [{"path": "gmm-b1", "time_s": 1.0},
+                     {"path": "gmm-batched", "time_s": 0.2}],
+            "speedups": {}}
+    fresh = {"rows": [{"path": "gmm-b1", "time_s": 0.5},
+                      {"path": "gmm-batched", "time_s": 0.2}],
+             "speedups": {}}
+    # batched leg stayed 0.2s while b1 halved -> normalized 0.2 -> 0.4
+    _, regressions = compare.compare_doc(base, fresh, spec, 0.25)
+    assert len(regressions) == 1 and "gmm-batched" in regressions[0]
+
+
+def test_render_summary_markdown(tmp_path):
+    base = _doc({("s1", "b1"): 1.0, ("s1", "auto"): 0.25},
+                quality={("s1", "auto"): 1.05})
+    fresh = _doc({("s1", "b1"): 1.1, ("s1", "auto"): 0.30},
+                 quality={("s1", "auto"): 1.04})
+    records, regs = compare.compare_doc(base, fresh, SPEC, 0.25)
+    md = compare.render_summary({"BENCH_adaptive.json": (records, regs)},
+                                {"BENCH_adaptive.json": (base, fresh)})
+    assert "# Bench trend report" in md
+    assert "s1:auto" in md and "| 1.040 |" in md
+    assert "REGRESSIONS" not in md
+
+
+def test_compare_main_against_committed_baselines(tmp_path, capsys):
+    """End-to-end: the committed baselines compared against themselves pass
+    the gate and render a summary — exactly what the CI job runs."""
+    import shutil
+    for name in ("BENCH_gmm.json", "BENCH_adaptive.json"):
+        shutil.copy(f"{compare.BASELINE_DIR}/{name}", tmp_path / name)
+    rc = compare.main(["--fresh", str(tmp_path),
+                       "--summary", str(tmp_path / "sum.md")])
+    assert rc == 0
+    assert "Bench trend report" in (tmp_path / "sum.md").read_text()

@@ -15,6 +15,10 @@ from repro.distributed import (FailureInjector, TrainingSupervisor,
 from repro.models.common import ShardingRules
 from repro.train import AdamW, make_train_step
 
+# model-zoo / scaffolding suite: excluded from the CI fast lane
+# (tier-1 locally still runs it; see pytest.ini)
+pytestmark = pytest.mark.slow
+
 RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
                       vocab=None, experts=None, fsdp=None, head_dim=None,
                       state=None)

@@ -14,6 +14,8 @@ from repro.core.metrics import get_metric
 seeds = st.integers(0, 2 ** 31)
 
 
+@pytest.mark.slow   # ~3 min of hypothesis examples x brute force; CI fast
+                    # lane keeps the rest of this file (see pytest.ini)
 @given(seeds, st.sampled_from(MEASURES))
 @settings(max_examples=18, deadline=None)
 def test_end_to_end_within_alpha_plus_eps(seed, measure):
@@ -44,6 +46,7 @@ def test_full_coreset_equals_direct_solver(seed, measure):
     assert got >= direct - 1e-4  # core-set can only reorder, never lose pts
 
 
+@pytest.mark.slow
 @given(seeds)
 @settings(max_examples=15, deadline=None)
 def test_coreset_value_dominates_fraction_of_opt(seed):

@@ -9,6 +9,12 @@ import textwrap
 
 from conftest import SUBPROC_ENV as _SUBPROC_ENV
 
+import pytest
+
+# model-zoo / scaffolding suite: excluded from the CI fast lane
+# (tier-1 locally still runs it; see pytest.ini)
+pytestmark = pytest.mark.slow
+
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -9,6 +9,10 @@ import repro.models as M
 from repro.configs import ARCH_IDS, get_config
 from repro.models.common import ShardingRules
 
+# model-zoo / scaffolding suite: excluded from the CI fast lane
+# (tier-1 locally still runs it; see pytest.ini)
+pytestmark = pytest.mark.slow
+
 RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
                       vocab=None, experts=None, fsdp=None, head_dim=None,
                       state=None)

@@ -40,6 +40,7 @@ def test_chunked_batched_gmm_matches_unchunked_topb():
     assert float(r_unchunked) <= 1.10 * float(exact.radius)
 
 
+@pytest.mark.slow   # model-zoo scaffolding, not the selection engine
 def test_pad_heads_equivalence_all_affected_archs():
     """pad_heads must be numerically identical to the head_dim baseline
     (padding is activation-level; softmax over repeated KV is unchanged)."""
@@ -103,6 +104,7 @@ _EF_SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow   # subprocess 8-device mesh
 def test_compressed_psum_on_mesh():
     out = subprocess.run([sys.executable, "-c", _EF_SUBPROC],
                          capture_output=True, text=True, timeout=600,

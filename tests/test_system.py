@@ -12,6 +12,10 @@ from repro.data import (embed_examples, lm_batch, select_diverse,
 from repro.models.common import ShardingRules
 from repro.serving import Request, ServingEngine, diverse_rerank
 
+# model-zoo / scaffolding suite: excluded from the CI fast lane
+# (tier-1 locally still runs it; see pytest.ini)
+pytestmark = pytest.mark.slow
+
 RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
                       vocab=None, experts=None, fsdp=None, head_dim=None,
                       state=None)

@@ -11,6 +11,10 @@ from repro.models.common import ShardingRules
 from repro.train import (Adafactor, AdamW, cosine_schedule, make_train_step)
 from repro.data import lm_batch
 
+# model-zoo / scaffolding suite: excluded from the CI fast lane
+# (tier-1 locally still runs it; see pytest.ini)
+pytestmark = pytest.mark.slow
+
 RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
                       vocab=None, experts=None, fsdp=None, head_dim=None,
                       state=None)
