@@ -1,12 +1,16 @@
 """Constrained (fair / partition-matroid) diversity benchmarks.
 
-Two axes, mirroring the unconstrained suites:
+Three axes, mirroring the unconstrained suites:
 
 * approximation ratio of the per-group core-set pipeline vs the full-input
   constrained solver, swept over (m groups × k) — the constrained analogue of
   the Fig 1/2 quality sweeps;
 * end-to-end throughput (points/second) of the single-machine, streaming and
-  simulated-MR paths — the constrained analogue of Fig 3/5.
+  simulated-MR paths — the constrained analogue of Fig 3/5;
+* a long-tail scenario (``run_longtail``): Zipf-distributed group labels —
+  the skewed real-data regime the ROADMAP fairness item asks for — timed
+  across the same three paths and emitted as ``BENCH_constrained.json``
+  (gated by ``benchmarks/compare.py`` against the committed baseline).
 """
 from __future__ import annotations
 
@@ -116,6 +120,97 @@ def run_grouped_engine(quick: bool = True, *, n: int = 2 ** 16, m: int = 16,
                                       / max(rows[1]["time_s"], 1e-9), 2)
     print(f"[grouped-engine] speedup: {rows[-1]['speedup_vs_b1']}x")
     return rows
+
+
+def zipf_labels(n: int, m: int, alpha: float = 1.6, seed: int = 0
+                ) -> np.ndarray:
+    """Long-tail group labels: group r drawn with p ∝ (r+1)^-alpha (Zipf).
+    Every group is guaranteed at least one member so the m-way label space
+    is fully inhabited (the tail groups stay tiny — that is the point)."""
+    rng = np.random.default_rng(seed)
+    p = (np.arange(1, m + 1, dtype=np.float64)) ** -alpha
+    p /= p.sum()
+    labels = rng.choice(m, size=n, p=p)
+    labels[:m] = np.arange(m)
+    return labels
+
+
+def run_longtail(quick: bool = True, *, m: int = 12, alpha: float = 1.6
+                 ) -> List[Dict]:
+    """Zipf-skewed group labels through every constrained path.
+
+    Quotas come from ``balanced_quotas`` — on a long-tail distribution that
+    clamps tail-group quotas to the (tiny) group sizes, which is exactly the
+    regime the uniform-mix benches never exercised: head groups carry the
+    diversity load while the solver must still satisfy every tail quota.
+    Rows carry wall-clock (``time_s``, reference = single-machine) and the
+    diversity-value ratio vs the single-machine leg
+    (``value_ratio_vs_single``).
+    """
+    from repro.data.selection import balanced_quotas
+
+    n = 20_000 if quick else 200_000
+    k = 16
+    pts = clustered_dataset(n, clusters=4 * m, dim=4, seed=23)
+    labels = zipf_labels(n, m, alpha=alpha, seed=23)
+    quotas = balanced_quotas(labels, k, m)
+    counts = np.bincount(labels, minlength=m)
+    kprime = max(2 * k, 32)
+
+    def single():
+        return fair_diversity_maximize(pts, labels, quotas, "remote-edge",
+                                       kprime=kprime)[1]
+
+    def streaming():
+        sol, _ = fair_streaming_diversity(pts, labels, quotas,
+                                          kprime=kprime, chunk=4096)
+        return _value(sol, "remote-edge")
+
+    def mapreduce():
+        return simulate_fair_mr(pts, labels, quotas, num_reducers=8,
+                                kprime=kprime)[2]
+
+    rows = []
+    ref_value = None
+    for name, fn in (("single-machine", single), ("streaming", streaming),
+                     ("mapreduce-8", mapreduce)):
+        fn()  # warm up jit caches
+        t0 = time.perf_counter()
+        value = fn()
+        dt = time.perf_counter() - t0
+        if ref_value is None:
+            ref_value = value
+        rows.append({
+            "path": name, "m": m, "k": k, "k'": kprime, "alpha": alpha,
+            "n": n, "head_share": round(float(counts.max()) / n, 3),
+            "tail_min": int(counts.min()),
+            "time_s": round(dt, 4),
+            "throughput_pts_s": int(n / dt),
+            "value_ratio_vs_single": round(value / max(ref_value, 1e-12), 4),
+        })
+        print(f"[constrained-longtail] {name}: {dt:.3f}s "
+              f"value_ratio={rows[-1]['value_ratio_vs_single']}")
+    return rows
+
+
+def emit_json(rows: List[Dict], path: str = "BENCH_constrained.json") -> None:
+    """Write the long-tail scenario artifact consumed by
+    ``benchmarks/compare.py`` (same shape as BENCH_gmm/BENCH_adaptive)."""
+    import json
+    import platform
+
+    import jax
+
+    doc = {
+        "benchmark": "constrained-longtail",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"[constrained-longtail] wrote {path} ({len(rows)} rows)")
 
 
 def run_throughput(quick: bool = True) -> List[Dict]:

@@ -45,6 +45,12 @@ SPECS = {
         "scope": "shape",
         "quality": "radius_ratio_vs_b1",
     },
+    "BENCH_constrained.json": {
+        "key": ("path",),
+        "is_ref": lambda r: r["path"] == "single-machine",
+        "scope": "global",
+        "quality": "value_ratio_vs_single",
+    },
 }
 
 

@@ -75,6 +75,15 @@ def main(argv=None) -> None:
                 "Constrained throughput"))
 
     print("\n" + "=" * 72)
+    print("Constrained diversity — long-tail (Zipf) labels "
+          "(BENCH_constrained.json)")
+    print("=" * 72)
+    rows = bench_constrained.run_longtail(quick=quick)
+    bench_constrained.emit_json(rows, path="BENCH_constrained.json")
+    print(table(rows, ["path", "m", "alpha", "head_share", "time_s",
+                       "value_ratio_vs_single"], "Constrained long-tail"))
+
+    print("\n" + "=" * 72)
     print("Selection engine — b=1 vs batched vs group-blocked (BENCH_gmm.json)")
     print("=" * 72)
     # bench_constrained.run_grouped_engine measures the same two grouped legs

@@ -1,0 +1,19 @@
+"""Diversity maximization in bounded doubling dimension — JAX reproduction.
+
+The one front door is ``repro.diversify(ProblemSpec, ExecutionSpec)`` (see
+``repro.api``); the subpackages (``repro.core``, ``repro.constrained``,
+``repro.data``, ``repro.serving``) hold the engine layers it plans over.
+"""
+
+_API = ("diversify", "plan", "ProblemSpec", "ExecutionSpec", "Plan",
+        "DiversityResult")
+
+__all__ = list(_API)
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays light; the facade (and jax) load on first use
+    if name in _API:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

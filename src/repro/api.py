@@ -1,0 +1,812 @@
+"""One front door: ``repro.diversify(ProblemSpec, ExecutionSpec)``.
+
+The paper tells one algorithmic story — build a core-set, solve on it,
+certify the approximation — specialized to three execution models
+(sequential batch, streaming, MapReduce) plus the matroid-constrained
+variant of each.  This module is the declarative surface over all of them:
+
+* ``ProblemSpec`` says WHAT to solve (points source, ``k``, measure,
+  metric, optional matroid/quota constraint);
+* ``ExecutionSpec`` says HOW (``mode="auto"`` lets the planner pick from
+  the input type, mesh and memory budget; every engine knob —
+  ``kprime``/``b``/``eps``/``chunk``/``schedule``/``use_pallas``/``tau``/
+  ``cliff`` — defaults to ``"auto"``/None and resolves per path);
+* ``plan()`` compiles the two into an inspectable ``Plan`` whose
+  ``explain()`` prints the chosen mode, the composition-aware k' schedule,
+  the reducer layout and the predicted core-set footprint;
+* ``Plan.execute()`` / ``diversify()`` runs it and returns a single
+  ``DiversityResult`` — ``solution``, ``value``, ``indices``, the
+  ``RadiusCertificate`` and per-phase telemetry — regardless of path.
+
+The legacy entry points (``diversity_maximize``, ``simulate_mr``,
+``fair_diversity_maximize``, ``select_diverse``, ``diverse_rerank``, ...)
+are thin bit-identical wrappers that emit one ``DeprecationWarning`` and
+route here; the facade itself never warns.  The spec deliberately leaves
+room for a future ``mode="dynamic"`` (fully dynamic / incremental updates
+in doubling metrics, Pellizzoni et al.): a ``DiversityResult`` plus the
+engine state it certifies is exactly the checkpoint such a path would
+resume from.
+
+>>> import numpy as np
+>>> import repro
+>>> rng = np.random.default_rng(0)
+>>> pts = rng.normal(size=(500, 4)).astype(np.float32)
+>>> res = repro.diversify(pts, k=4, execution=repro.ExecutionSpec(
+...     mode="batch", kprime=16, b=1))
+>>> res.solution.shape
+(4, 4)
+>>> bool(res.value > 0)
+True
+>>> len(res.indices)
+4
+>>> p = repro.plan(repro.ProblemSpec(points=pts, k=4))
+>>> p.mode
+'batch'
+>>> print(p.explain())        # doctest: +ELLIPSIS
+DiversityPlan
+  mode: batch ...
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+_MODES = ("auto", "batch", "streaming", "mapreduce")
+
+
+def _warn_legacy(name: str) -> None:
+    """The one DeprecationWarning every legacy wrapper emits (and the facade
+    path never does)."""
+    warnings.warn(
+        f"{name} is a legacy entry point; prefer "
+        "repro.diversify(ProblemSpec, ExecutionSpec) — one front door to "
+        "the same engine (see docs/architecture.md).",
+        DeprecationWarning, stacklevel=3)
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProblemSpec:
+    """WHAT to solve.
+
+    ``points`` is either an in-memory ``(n, d)`` array or an iterable of
+    chunks (a generator / iterator / list of ``(c, d)`` arrays — the
+    streaming source; for constrained streams, ``(chunk, labels)`` pairs).
+    ``labels``/``matroid``/``quotas`` select the matroid-constrained
+    variant (``quotas=`` is sugar for an exact-quota partition matroid;
+    labels alone balance ``k`` across the groups).  ``weights`` are
+    optional integer multiplicities for a pre-weighted (generalized) batch
+    input.  ``dim`` pins the point dimensionality when the source is a
+    stream (otherwise it is read from the first chunk).
+    """
+    points: Any
+    k: int
+    measure: str = "remote-edge"
+    metric: str = "euclidean"
+    weights: Any = None
+    labels: Any = None
+    matroid: Any = None
+    quotas: Any = None
+    dim: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionSpec:
+    """HOW to solve it.  Everything defaults to "planner decides".
+
+    ``mode="auto"`` picks batch / streaming / mapreduce from the input type
+    (array -> batch, chunk iterator -> streaming, array + mesh or sharded
+    array -> mapreduce), ``num_reducers`` and the ``memory_budget_bytes``
+    bound (an array larger than the budget streams).  The engine knobs keep
+    their legacy meanings: ``kprime="auto"`` grows k' until the measured
+    radius certificate meets ``eps`` and ``b="auto"`` runs the
+    radius-certified adaptive controller (``core.adaptive``); pass numbers
+    to pin them (``kprime=None`` = the paper default ``max(2k, 32)``).
+    ``tau``/``cliff`` override the controller's greedy-consistency bars.
+    ``smm_mode`` overrides the streaming state layout (``plain``/``ext``/
+    ``gen``; None derives it from the measure).
+    """
+    mode: str = "auto"
+    mesh: Any = None
+    data_axes: Tuple[str, ...] = ("data",)
+    num_reducers: Optional[int] = None
+    memory_budget_bytes: Optional[int] = None
+    kprime: Any = "auto"
+    b: Any = "auto"
+    eps: Optional[float] = None
+    chunk: Any = "auto"
+    schedule: Any = None
+    use_pallas: Any = "auto"
+    generalized: bool = False
+    three_round: bool = False
+    recursive: bool = False
+    partition: str = "contiguous"
+    seed: int = 0
+    swap_rounds: int = 10
+    smm_mode: Optional[str] = None
+    tau: Optional[float] = None
+    cliff: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DiversityResult:
+    """Uniform outcome of every path.
+
+    ``solution`` is the ``(k, d)`` selected points and ``value`` the
+    diversity objective on them.  ``indices`` are distinct input-row ids
+    when the input was an in-memory array and the path guarantees solution
+    rows come from it (None for streams and generalized instantiation);
+    ``labels`` the per-pick group ids for constrained runs.  ``cert`` is
+    the ``RadiusCertificate`` measured by the engine (None when every knob
+    was pinned to the certificate-free legacy path), ``coreset`` the
+    core-set container the solver ran on (when the path materializes one),
+    and ``telemetry`` the per-phase wall-clock log.
+    """
+    solution: np.ndarray
+    value: float
+    _indices: Any               # ndarray | thunk | None (see ``indices``)
+    labels: Optional[np.ndarray]
+    cert: Any
+    coreset: Any
+    telemetry: dict
+    plan: "Plan"
+
+    @property
+    def indices(self) -> Optional[np.ndarray]:
+        """Distinct input-row ids of the solution, or None.
+
+        Row recovery costs a k-pass scan of the input array, so paths that
+        derive indices by matching compute them on first access (cached) —
+        legacy wrappers that discard indices never pay for them.
+        """
+        ind = self._indices
+        if callable(ind):
+            ind = ind()
+            object.__setattr__(self, "_indices", ind)
+        return ind
+
+
+# --------------------------------------------------------------------------
+# planning
+# --------------------------------------------------------------------------
+
+def _is_array(points) -> bool:
+    return hasattr(points, "shape") and hasattr(points, "dtype")
+
+
+def _mesh_from_sharded(points):
+    """A jax array already laid out over >1 device is a MapReduce input; pull
+    the mesh back out of its NamedSharding when possible."""
+    sh = getattr(points, "sharding", None)
+    if sh is None:
+        return None, False
+    try:
+        multi = len(sh.device_set) > 1
+    except Exception:                                # pragma: no cover
+        return None, False
+    return (getattr(sh, "mesh", None), multi) if multi else (None, False)
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{int(n)} B" if unit == "B" else f"{n:.1f} {unit}"
+        n /= 1024.0
+    return f"{n:.1f} GiB"                            # pragma: no cover
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Plan:
+    """A compiled (ProblemSpec, ExecutionSpec) pair: resolved mode, knobs and
+    layout, inspectable via ``explain()``, runnable via ``execute()``."""
+    problem: ProblemSpec
+    execution: ExecutionSpec
+    mode: str                    # resolved: batch | streaming | mapreduce
+    reason: str                  # why the planner picked it
+    constrained: bool
+    matroid: Any                 # resolved oracle (constrained runs)
+    variant: str                 # plain | ext | gen
+    mesh: Any                    # resolved mesh (mapreduce mesh path)
+    num_reducers: Optional[int]
+    knobs: dict                  # resolved engine knobs
+    layout: str
+    kprime_plan: str
+    coreset_rows: Optional[int]
+    coreset_bytes: Optional[int]
+    n: Optional[int]
+    d: Optional[int]
+
+    def explain(self) -> str:
+        """Stable human-readable rendering (golden-tested)."""
+        k = self.knobs
+        from repro.core.sequential import SEQ_ALPHA
+
+        shape = (f"({self.n}, {self.d})" if self.n is not None
+                 else f"stream (d={self.d if self.d is not None else '?'})")
+        cons = (f"yes ({self.matroid.__class__.__name__}, m={self.matroid.m})"
+                if self.constrained else "no")
+        rows = ("?" if self.coreset_rows is None else
+                f"{'<=' if k['kprime'] == 'auto' else ''}{self.coreset_rows}")
+        bts = ("?" if self.coreset_bytes is None else
+               f"{'<=' if k['kprime'] == 'auto' else ''}"
+               f"{_fmt_bytes(self.coreset_bytes)}")
+        lines = [
+            "DiversityPlan",
+            f"  mode: {self.mode} ({self.reason})",
+            f"  problem: k={self.problem.k}, measure={self.problem.measure},"
+            f" metric={self.problem.metric}, input={shape}, constrained={cons}",
+            f"  coreset: {self.variant} construction, {self.kprime_plan}",
+            f"  engine: b={k['b']}, chunk={k['chunk']},"
+            f" schedule={'none' if k['schedule'] is None else k['schedule']},"
+            f" use_pallas={k['use_pallas']},"
+            f" tau={k['tau']}, cliff={k['cliff']}",
+            f"  layout: {self.layout}",
+            f"  predicted coreset: {rows} rows, {bts}",
+            f"  solver: sequential alpha={SEQ_ALPHA[self.problem.measure]}"
+            f" ({self.problem.measure})"
+            + (f", feasible greedy + {self.execution.swap_rounds}"
+               " swap rounds" if self.constrained else ""),
+        ]
+        return "\n".join(lines)
+
+    def execute(self) -> DiversityResult:
+        return _execute(self)
+
+
+def _resolve_constraint(problem: ProblemSpec, streamed: bool):
+    """Resolve (constrained, matroid).  Mirrors ``select_diverse``: quotas
+    and matroid are mutually exclusive, labels alone balance k across
+    groups, and a streamed constrained source must spell the matroid out."""
+    labels, matroid, quotas = problem.labels, problem.matroid, problem.quotas
+    if matroid is None and quotas is None and labels is None:
+        return False, None
+    if matroid is not None and quotas is not None:
+        raise ValueError("pass either matroid= or quotas=, not both")
+    if labels is None and not streamed:
+        raise ValueError("quotas=/matroid= require group_labels= "
+                         "(ProblemSpec.labels=) for array input")
+    if matroid is not None:
+        mat = matroid
+    elif quotas is not None:
+        from repro.constrained import PartitionMatroid
+        quotas = np.asarray(quotas, np.int64)
+        if int(quotas.sum()) != problem.k:
+            raise ValueError(
+                f"sum(quotas)={int(quotas.sum())} != k={problem.k}")
+        mat = PartitionMatroid(quotas)
+    else:
+        if streamed:
+            raise ValueError("a constrained stream needs matroid= or "
+                             "quotas= (labels arrive with the chunks)")
+        from repro.data.selection import balanced_quotas
+        from repro.constrained import PartitionMatroid
+        mat = PartitionMatroid(balanced_quotas(np.asarray(labels), problem.k))
+    if mat.k != problem.k:
+        raise ValueError(f"matroid.k={mat.k} != k={problem.k}")
+    return True, mat
+
+
+def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
+         ) -> Plan:
+    """Compile (ProblemSpec, ExecutionSpec) into an inspectable ``Plan``.
+
+    Pure resolution — nothing executes and stream sources are not touched.
+    """
+    from repro.core.measures import MEASURES, NEEDS_INJECTIVE
+    from repro.core.metrics import get_metric
+    from repro.core.adaptive import auto_milestones, resolve_bars
+
+    ex = execution or ExecutionSpec()
+    if problem.measure not in MEASURES:
+        raise ValueError(f"unknown measure {problem.measure!r}; "
+                         f"one of {sorted(MEASURES)}")
+    get_metric(problem.metric)
+    if problem.k < 1:
+        raise ValueError(f"k must be >= 1, got {problem.k}")
+    if ex.mode not in _MODES:
+        raise ValueError(f"mode must be one of {_MODES}, got {ex.mode!r}")
+
+    arr = _is_array(problem.points)
+    n = int(problem.points.shape[0]) if arr else None
+    d = (int(problem.points.shape[1]) if arr and problem.points.ndim > 1
+         else problem.dim)
+    itemsize = int(getattr(problem.points, "dtype", np.dtype(np.float32)
+                           ).itemsize) if arr else 4
+
+    constrained, mat = _resolve_constraint(problem, streamed=not arr)
+
+    # ---- mode ------------------------------------------------------------
+    mesh = ex.mesh
+    num_red = ex.num_reducers
+    if ex.mode != "auto":
+        mode, reason = ex.mode, "requested"
+        if mode == "mapreduce" and mesh is None and not (num_red or 0) > 1:
+            sharded_mesh, multi = _mesh_from_sharded(problem.points)
+            if multi and sharded_mesh is not None:
+                mesh = sharded_mesh
+            else:
+                raise ValueError("mode='mapreduce' needs mesh= or "
+                                 "num_reducers > 1")
+    elif not arr:
+        mode, reason = "streaming", "auto: chunk-iterator input"
+    else:
+        sharded_mesh, multi = _mesh_from_sharded(problem.points)
+        if mesh is not None:
+            mode, reason = "mapreduce", "auto: mesh provided"
+        elif multi and sharded_mesh is not None:
+            # a mesh-less multi-device sharding (e.g. PositionalSharding)
+            # cannot drive shard_map — fall through to batch instead of a
+            # degenerate 1-reducer simulated run
+            mode, reason = "mapreduce", "auto: input array is device-sharded"
+            mesh = sharded_mesh
+        elif (num_red or 0) > 1:
+            mode, reason = "mapreduce", f"auto: num_reducers={num_red}"
+        elif (ex.memory_budget_bytes is not None
+              and n * (d or 1) * itemsize > ex.memory_budget_bytes):
+            mode, reason = "streaming", (
+                f"auto: input {n * (d or 1) * itemsize} B exceeds "
+                f"memory budget {ex.memory_budget_bytes} B")
+        else:
+            mode, reason = "batch", "auto: in-memory array"
+    if not arr and mode != "streaming":
+        raise ValueError(f"a chunk-iterator source only supports "
+                         f"mode='streaming', got {mode!r}")
+    if mode == "mapreduce" and mesh is None:
+        num_red = num_red or 1
+    if constrained and (ex.generalized or ex.three_round):
+        raise ValueError("generalized/three-round has no constrained path")
+    if ex.three_round and (mode != "mapreduce" or mesh is None):
+        # the simulated path's generalized scheme is the three-round
+        # equivalent — spell it generalized=True there
+        raise ValueError("three_round=True needs the mapreduce mesh path "
+                         "(use generalized=True for the simulated path)")
+    if ex.recursive and (mode != "mapreduce" or mesh is None or constrained):
+        raise ValueError("recursive=True needs the unconstrained mapreduce "
+                         "mesh path")
+    if problem.weights is not None and (mode != "batch" or constrained):
+        raise ValueError("weights= is batch-only (generalized input)")
+    if problem.weights is not None and n is not None \
+            and len(np.atleast_1d(np.asarray(problem.weights))) != n:
+        raise ValueError(
+            f"weights= must have one entry per point: got "
+            f"{len(np.atleast_1d(np.asarray(problem.weights)))} for n={n}")
+    if ex.smm_mode is not None and ex.smm_mode not in ("plain", "ext",
+                                                       "gen"):
+        raise ValueError(f"smm_mode must be one of 'plain'/'ext'/'gen', "
+                         f"got {ex.smm_mode!r}")
+
+    # ---- variant ---------------------------------------------------------
+    generalized = ex.generalized or (ex.smm_mode == "gen")
+    if mode == "streaming" and ex.smm_mode is not None:
+        variant = ex.smm_mode
+    elif generalized:
+        variant = "gen"
+    else:
+        variant = "ext" if problem.measure in NEEDS_INJECTIVE else "plain"
+
+    # ---- knobs -----------------------------------------------------------
+    k = problem.k
+    kprime = ex.kprime
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    if kprime == "auto" and mode == "streaming":
+        kprime = max(2 * k, 32)       # SMM state is fixed-size
+    if (isinstance(kprime, (int, np.integer)) and n is not None
+            and mode == "batch"):
+        # batch drivers clamp k' to n; streaming/MR resolve per shard
+        kprime = min(int(kprime), n)
+    chunk = ex.chunk
+    if chunk == "auto":
+        chunk = 4096 if mode == "streaming" else 0
+    use_pallas = False if ex.use_pallas == "auto" else bool(ex.use_pallas)
+    b = ex.b
+    eps = ex.eps
+    eps_eff = 0.1 if eps is None else eps
+    tau, cliff = resolve_bars(ex.tau, ex.cliff)
+    knobs = {"kprime": kprime, "b": b, "chunk": chunk, "eps": eps,
+             "schedule": ex.schedule, "use_pallas": use_pallas,
+             "tau": tau, "cliff": cliff}
+
+    # ---- composition-aware k' plan + layout + footprint -------------------
+    m_groups = mat.m if constrained else 1
+    if mode == "mapreduce":
+        if mesh is not None:
+            axes = tuple(ex.data_axes) if not ex.recursive else ("pod", "data")
+            ell = int(np.prod([mesh.shape[a] for a in axes]))
+            layout = (f"mesh shard_map over axes {axes}, {ell} reducers"
+                      + (", 2-level recursive" if ex.recursive else ""))
+        else:
+            ell = int(num_red)
+            layout = (f"simulated mapreduce, {ell} reducers "
+                      f"(vmap, partition={ex.partition})")
+    elif mode == "streaming":
+        ell = 1
+        layout = (f"one pass, chunk={chunk}, "
+                  f"state cap {m_groups}x({kprime}+1) centers")
+    else:
+        ell = 1
+        layout = "single machine, one partition"
+    if constrained:
+        layout += f", {m_groups} matroid groups"
+
+    rows_per = None
+    if isinstance(kprime, (int, np.integer)):
+        kp_num = int(kprime)
+        kprime_plan = f"kprime={kp_num} (fixed)"
+    else:
+        kmax, miles = auto_milestones(k, n if n is not None else 10 ** 9)
+        kp_num = kmax
+        arrow = " -> ".join(str(c) for c in miles + [kmax])
+        kprime_plan = (f"kprime=auto (milestones {arrow}, eps={eps_eff}, "
+                       "x2 first step, secant-refined)")
+    per = kp_num * (k if variant == "ext" else 1)
+    rows_per = ell * m_groups * per
+    if mode == "mapreduce":
+        kprime_plan += f", composed over {ell} reducers"
+    if constrained:
+        kprime_plan += f" x {m_groups} groups"
+    bytes_ = None if d is None else rows_per * d * 4 + (
+        rows_per * 4 if variant == "gen" else 0)
+
+    return Plan(problem=problem, execution=ex, mode=mode, reason=reason,
+                constrained=constrained, matroid=mat, variant=variant,
+                mesh=mesh, num_reducers=(None if mode != "mapreduce"
+                                         else (None if mesh is not None
+                                               else int(num_red))),
+                knobs=knobs, layout=layout, kprime_plan=kprime_plan,
+                coreset_rows=rows_per, coreset_bytes=bytes_, n=n, d=d)
+
+
+# --------------------------------------------------------------------------
+# execution
+# --------------------------------------------------------------------------
+
+class _Phases:
+    """Per-phase wall-clock telemetry collector."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        self.rows.append({"name": name, "seconds": t1 - t0})
+        return t1
+
+    def telemetry(self, **extra) -> dict:
+        out = {"phases": self.rows}
+        out.update(extra)
+        return out
+
+
+def _chunks_of(problem: ProblemSpec, chunk: int, constrained: bool):
+    """Normalize the points source to an iterator of chunks (or
+    (chunk, labels) pairs for constrained runs).  In-memory arrays are cast
+    per chunk — never as a whole — so the memory-budget streaming path
+    allocates one chunk at a time, not a full-array copy."""
+    if _is_array(problem.points):
+        pts = problem.points
+        lab = None if problem.labels is None else np.asarray(problem.labels)
+        step = chunk if chunk and chunk > 0 else 4096
+        for i in range(0, int(pts.shape[0]), step):
+            part = np.asarray(pts[i:i + step], np.float32)
+            if constrained:
+                yield part, lab[i:i + step]
+            else:
+                yield part
+    else:
+        for item in problem.points:
+            yield item
+
+
+def _value_of(sol, measure: str, metric: str) -> float:
+    import jax.numpy as jnp
+    from repro.core.measures import diversity
+    from repro.core.metrics import get_metric
+
+    p = jnp.asarray(np.asarray(sol))
+    return diversity(measure, np.asarray(get_metric(metric).pairwise(p, p)))
+
+
+def _indices_of(plan_: Plan, sol, sol_labels=None):
+    """Thunk recovering distinct input-row indices for the solution (run
+    lazily on first ``DiversityResult.indices`` access), or None when the
+    path cannot recover rows."""
+    if plan_.n is None or plan_.variant == "gen":
+        return None
+    sol = np.asarray(sol)
+    sol_labels = None if sol_labels is None else np.asarray(sol_labels)
+
+    def match():
+        from repro.data.selection import _match_rows
+
+        pts = np.asarray(plan_.problem.points, np.float32)
+        lab = (None if plan_.problem.labels is None
+               else np.asarray(plan_.problem.labels))
+        if sol_labels is not None and lab is not None:
+            return _match_rows(pts, sol, plan_.problem.k,
+                               row_labels=lab, sol_labels=sol_labels)
+        return _match_rows(pts, sol, plan_.problem.k)
+
+    return match
+
+
+def _run_batch(plan_: Plan, ph: _Phases) -> DiversityResult:
+    import jax.numpy as jnp
+    from repro.core.coreset import GeneralizedCoreset, build_coreset
+    from repro.core.sequential import solve, solve_on_coreset
+
+    p, kb = plan_.problem, plan_.knobs
+    pts = np.asarray(p.points)
+    t = time.perf_counter()
+    if p.weights is not None:
+        # pre-weighted (generalized) input: solve multiplicity-aware on the
+        # points as given — no core-set build.
+        cs = GeneralizedCoreset(
+            points=jnp.asarray(pts),
+            multiplicity=jnp.asarray(np.asarray(p.weights), jnp.int32),
+            radius=jnp.asarray(0.0, jnp.float32))
+        t = ph.add("coreset", t)
+        cpts, mult = cs.compact()
+        idx = solve(p.measure, cpts, p.k, weights=mult, metric=p.metric)
+        sol = cpts[idx]
+        t = ph.add("solve", t)
+        value = _value_of(sol, p.measure, p.metric)
+        ph.add("value", t)
+        return DiversityResult(solution=sol, value=value, _indices=None,
+                               labels=None, cert=cs.cert, coreset=cs,
+                               telemetry=ph.telemetry(mode="batch"),
+                               plan=plan_)
+    cs = build_coreset(pts, p.k, kb["kprime"], p.measure, metric=p.metric,
+                       use_pallas=kb["use_pallas"],
+                       generalized=plan_.variant == "gen", b=kb["b"],
+                       chunk=kb["chunk"], eps=(0.1 if kb["eps"] is None
+                                               else kb["eps"]),
+                       schedule=kb["schedule"], tau=plan_.execution.tau,
+                       cliff=plan_.execution.cliff)
+    t = ph.add("coreset", t)
+    sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
+    t = ph.add("solve", t)
+    value = _value_of(sol, p.measure, p.metric)
+    ph.add("value", t)
+    return DiversityResult(
+        solution=sol, value=value, _indices=_indices_of(plan_, sol),
+        labels=None, cert=cs.cert, coreset=cs,
+        telemetry=ph.telemetry(mode="batch", coreset_size=getattr(
+            cs, "size", None)), plan=plan_)
+
+
+def _run_batch_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+    from repro.constrained import grouped_coreset
+    from repro.constrained.solver import solve_and_value
+
+    p, kb, mat = plan_.problem, plan_.knobs, plan_.matroid
+    pts = np.asarray(p.points)
+    labels_np = np.asarray(p.labels)
+    kprime = kb["kprime"]
+    t = time.perf_counter()
+    cs = grouped_coreset(pts, labels_np, mat.m, mat.k, kprime,
+                         measure=p.measure, metric=p.metric,
+                         use_pallas=kb["use_pallas"], b=kb["b"],
+                         chunk=kb["chunk"], schedule=kb["schedule"],
+                         eps=kb["eps"], tau=plan_.execution.tau,
+                         cliff=plan_.execution.cliff)
+    t = ph.add("coreset", t)
+    cand_idx, cand_labels = cs.flatten()
+    sel, value = solve_and_value(pts[cand_idx], cand_labels,
+                                 measure=p.measure, matroid=mat,
+                                 metric=p.metric,
+                                 swap_rounds=plan_.execution.swap_rounds)
+    ph.add("solve", t)
+    indices = np.asarray(cand_idx[sel])
+    return DiversityResult(
+        solution=pts[indices], value=value, _indices=indices,
+        labels=labels_np[indices], cert=cs.cert, coreset=cs,
+        telemetry=ph.telemetry(mode="batch", coreset_size=cs.size),
+        plan=plan_)
+
+
+def _run_streaming(plan_: Plan, ph: _Phases) -> DiversityResult:
+    from repro.core.smm import StreamingCoreset
+    from repro.core.sequential import solve_on_coreset
+
+    p, kb = plan_.problem, plan_.knobs
+    smm: Optional[StreamingCoreset] = None
+    dim = plan_.d
+    t = time.perf_counter()
+    n_seen = 0
+    for chunk in _chunks_of(p, kb["chunk"], constrained=False):
+        chunk = np.atleast_2d(np.asarray(chunk, np.float32))
+        if smm is None:
+            dim = chunk.shape[1] if dim is None else dim
+            smm = StreamingCoreset(p.k, int(kb["kprime"]), dim,
+                                   metric=p.metric, mode=plan_.variant,
+                                   eps=kb["eps"])
+        smm.update(chunk)
+        n_seen += chunk.shape[0]
+    if smm is None:
+        raise ValueError("empty stream")
+    t = ph.add("stream", t)
+    cs = smm.finalize()
+    t = ph.add("finalize", t)
+    sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
+    t = ph.add("solve", t)
+    value = _value_of(sol, p.measure, p.metric)
+    ph.add("value", t)
+    return DiversityResult(
+        solution=np.asarray(sol), value=value,
+        _indices=_indices_of(plan_, sol), labels=None,
+        cert=cs.cert, coreset=cs,
+        telemetry=ph.telemetry(mode="streaming", n_seen=n_seen,
+                               merges=len(smm.phase_log)), plan=plan_)
+
+
+def _run_streaming_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+    from repro.constrained import FairStreamingCoreset
+    from repro.constrained.solver import solve_and_value
+
+    p, kb, mat = plan_.problem, plan_.knobs, plan_.matroid
+    dim = plan_.d
+    smm: Optional[FairStreamingCoreset] = None
+    t = time.perf_counter()
+    n_seen = 0
+    for chunk, labels in _chunks_of(p, kb["chunk"], constrained=True):
+        chunk = np.atleast_2d(np.asarray(chunk, np.float32))
+        if smm is None:
+            dim = chunk.shape[1] if dim is None else dim
+            smm = FairStreamingCoreset(matroid=mat, kprime=int(kb["kprime"]),
+                                       dim=dim, metric=p.metric,
+                                       mode=plan_.variant, eps=kb["eps"])
+        smm.update(chunk, labels)
+        n_seen += chunk.shape[0]
+    if smm is None:
+        raise ValueError("empty stream")
+    t = ph.add("stream", t)
+    cand_pts, cand_labels = smm.finalize()
+    cert = smm.certificate()
+    t = ph.add("finalize", t)
+    sel, value = solve_and_value(cand_pts, cand_labels, measure=p.measure,
+                                 matroid=mat, metric=p.metric,
+                                 swap_rounds=plan_.execution.swap_rounds)
+    ph.add("solve", t)
+    sol, sol_lab = cand_pts[sel], cand_labels[sel]
+    return DiversityResult(
+        solution=np.asarray(sol), value=value,
+        _indices=_indices_of(plan_, sol, sol_labels=sol_lab),
+        labels=np.asarray(sol_lab), cert=cert, coreset=None,
+        telemetry=ph.telemetry(mode="streaming", n_seen=n_seen), plan=plan_)
+
+
+def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
+    p, kb, ex = plan_.problem, plan_.knobs, plan_.execution
+    eps = 0.1 if kb["eps"] is None else kb["eps"]
+    t = time.perf_counter()
+    if plan_.mesh is not None:
+        if ex.recursive:
+            from repro.core.distributed import mr_coreset_recursive
+            from repro.core.sequential import solve_on_coreset
+
+            cs = mr_coreset_recursive(p.points, p.k, kb["kprime"], p.measure,
+                                      plan_.mesh, metric=p.metric,
+                                      use_pallas=kb["use_pallas"], b=kb["b"],
+                                      chunk=kb["chunk"], eps=eps, tau=ex.tau,
+                                      cliff=ex.cliff)
+            t = ph.add("rounds", t)
+            sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
+            t = ph.add("solve", t)
+            value = _value_of(sol, p.measure, p.metric)
+            ph.add("value", t)
+        else:
+            from repro.core.distributed import _mr_diversity_impl
+
+            sol, value, cs = _mr_diversity_impl(
+                p.points, p.k, p.measure, plan_.mesh, kprime=kb["kprime"],
+                data_axes=ex.data_axes, metric=p.metric,
+                use_pallas=kb["use_pallas"],
+                three_round=ex.three_round or plan_.variant == "gen",
+                b=kb["b"], chunk=kb["chunk"], eps=eps, tau=ex.tau,
+                cliff=ex.cliff)
+            t = ph.add("rounds", t)
+    else:
+        from repro.core.distributed import _simulate_mr_impl
+
+        sol, value, cs = _simulate_mr_impl(
+            np.asarray(p.points), p.k, p.measure,
+            num_reducers=plan_.num_reducers, kprime=kb["kprime"],
+            metric=p.metric, generalized=plan_.variant == "gen",
+            partition=ex.partition, seed=ex.seed, b=kb["b"],
+            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
+        t = ph.add("rounds", t)
+    # three-round / generalized instantiation may fall back to kernel-point
+    # replicas that are not input rows — no index recovery there
+    indices = (None if plan_.variant == "gen" or ex.three_round
+               else _indices_of(plan_, sol))
+    return DiversityResult(
+        solution=np.asarray(sol), value=value, _indices=indices, labels=None,
+        cert=getattr(cs, "cert", None), coreset=cs,
+        telemetry=ph.telemetry(mode="mapreduce"), plan=plan_)
+
+
+def _run_mapreduce_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+    p, kb, ex, mat = plan_.problem, plan_.knobs, plan_.execution, plan_.matroid
+    eps = 0.1 if kb["eps"] is None else kb["eps"]
+    t = time.perf_counter()
+    if plan_.mesh is not None:
+        from repro.constrained.mapreduce import _mr_fair_diversity_impl
+
+        sol, sol_lab, value, cert = _mr_fair_diversity_impl(
+            p.points, p.labels, matroid=mat, measure=p.measure,
+            mesh=plan_.mesh, kprime=kb["kprime"], data_axes=ex.data_axes,
+            metric=p.metric, use_pallas=kb["use_pallas"],
+            swap_rounds=ex.swap_rounds, b=kb["b"], chunk=kb["chunk"],
+            eps=eps, tau=ex.tau, cliff=ex.cliff)
+    else:
+        from repro.constrained.mapreduce import _simulate_fair_mr_impl
+
+        sol, sol_lab, value, cert = _simulate_fair_mr_impl(
+            np.asarray(p.points), np.asarray(p.labels), matroid=mat,
+            num_reducers=plan_.num_reducers, measure=p.measure,
+            kprime=kb["kprime"], metric=p.metric, partition=ex.partition,
+            seed=ex.seed, swap_rounds=ex.swap_rounds, b=kb["b"],
+            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
+    ph.add("rounds", t)
+    return DiversityResult(
+        solution=np.asarray(sol), value=value,
+        _indices=_indices_of(plan_, sol, sol_labels=sol_lab),
+        labels=np.asarray(sol_lab), cert=cert, coreset=None,
+        telemetry=ph.telemetry(mode="mapreduce"), plan=plan_)
+
+
+def _execute(plan_: Plan) -> DiversityResult:
+    ph = _Phases()
+    if plan_.mode == "batch":
+        run = _run_batch_constrained if plan_.constrained else _run_batch
+    elif plan_.mode == "streaming":
+        run = (_run_streaming_constrained if plan_.constrained
+               else _run_streaming)
+    else:
+        run = (_run_mapreduce_constrained if plan_.constrained
+               else _run_mapreduce)
+    return run(plan_, ph)
+
+
+def diversify(problem, execution: Optional[ExecutionSpec] = None, *,
+              k: Optional[int] = None, measure: str = "remote-edge",
+              metric: str = "euclidean", labels=None, matroid=None,
+              quotas=None, weights=None, dim: Optional[int] = None
+              ) -> DiversityResult:
+    """The front door: plan + execute in one call.
+
+    ``problem`` is a ``ProblemSpec``, or a raw points source with ``k=``
+    (and the other problem fields) passed as keywords.
+
+    >>> import numpy as np
+    >>> import repro
+    >>> rng = np.random.default_rng(0)
+    >>> emb = rng.normal(size=(300, 8)).astype(np.float32)
+    >>> lab = rng.integers(0, 3, size=300)
+    >>> res = repro.diversify(emb, k=6, labels=lab, quotas=[2, 2, 2])
+    >>> np.bincount(lab[res.indices], minlength=3).tolist()
+    [2, 2, 2]
+    >>> res.plan.mode
+    'batch'
+    """
+    kw_used = (k is not None or labels is not None or matroid is not None
+               or quotas is not None or weights is not None or dim is not None
+               or measure != "remote-edge" or metric != "euclidean")
+    if not isinstance(problem, ProblemSpec):
+        if k is None:
+            raise ValueError("diversify(points, ...) needs k=")
+        problem = ProblemSpec(points=problem, k=k, measure=measure,
+                              metric=metric, labels=labels, matroid=matroid,
+                              quotas=quotas, weights=weights, dim=dim)
+    elif kw_used:
+        raise ValueError("pass problem fields inside ProblemSpec, or raw "
+                         "points with keywords — not both")
+    return plan(problem, execution).execute()

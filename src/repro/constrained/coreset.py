@@ -232,7 +232,9 @@ def grouped_adaptive(points, labels, m: int, k: int, kprime, *,
                      measure: str = "remote-edge", metric="euclidean",
                      use_pallas: bool = False, b="auto", chunk: int = 0,
                      eps: Optional[float] = None,
-                     kprime_max: Optional[int] = None) -> GroupedCoreset:
+                     kprime_max: Optional[int] = None,
+                     tau: Optional[float] = None,
+                     cliff: Optional[float] = None) -> GroupedCoreset:
     """Radius-certified grouped builder: all m per-group GMM runs advance in
     lock-step under the adaptive-b controller (``core.adaptive``), shrinking
     the lookahead block when ANY inhabited group's greedy-consistency margin
@@ -259,13 +261,15 @@ def grouped_adaptive(points, labels, m: int, k: int, kprime, *,
     if kprime == "auto":
         kmax, miles = auto_milestones(k, n, kprime_max)
         run = adaptive_select(points, labels_np, starts, m, kmax, b0=b0,
-                              chunk=chunk, metric=metric,
+                              tau=tau, cliff=cliff, chunk=chunk,
+                              metric=metric,
                               use_pallas=use_pallas, milestones=miles,
                               eps=eps_t, scale_count=k,
                               group_counts=counts_np)
     else:
         run = adaptive_select(points, labels_np, starts, m, int(kprime),
-                              b0=b0, chunk=chunk, metric=metric,
+                              b0=b0, tau=tau, cliff=cliff, chunk=chunk,
+                              metric=metric,
                               use_pallas=use_pallas, scale_count=k,
                               group_counts=counts_np)
     kp = run.ksel
@@ -305,7 +309,9 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
                     matroid=None, measure: str = "remote-edge",
                     metric="euclidean", use_pallas: bool = False, b=1,
                     chunk: int = 0, schedule=None,
-                    eps: Optional[float] = None) -> GroupedCoreset:
+                    eps: Optional[float] = None,
+                    tau: Optional[float] = None,
+                    cliff: Optional[float] = None) -> GroupedCoreset:
     """Build the union-of-per-group core-sets for a label-count matroid.
 
     ``labels`` is an ``(n,)`` int array in ``[0, m)``.  Each group contributes
@@ -342,7 +348,7 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
     if b == "auto" or kprime == "auto":
         return grouped_adaptive(points, labels, m, k, kprime, measure=measure,
                                 metric=metric, use_pallas=use_pallas, b=b,
-                                chunk=chunk, eps=eps)
+                                chunk=chunk, eps=eps, tau=tau, cliff=cliff)
     if not 1 <= kprime <= n:
         raise ValueError(f"kprime={kprime} out of range for n={n}")
     metric_name = get_metric(metric).name
@@ -366,12 +372,16 @@ def fair_diversity_maximize(points, labels, quotas=None,
                             kprime=None, metric="euclidean",
                             use_pallas: bool = False, swap_rounds: int = 10,
                             b=1, chunk: int = 0,
-                            eps: Optional[float] = None):
+                            eps: Optional[float] = None,
+                            tau: Optional[float] = None,
+                            cliff: Optional[float] = None):
     """End-to-end single-machine constrained pipeline: per-group core-set →
     feasible-greedy + oracle-checked local-search solve on the union.
 
-    ``quotas=`` is sugar for an exact-quota ``PartitionMatroid``; pass
-    ``matroid=`` for quota ranges, transversal or laminar constraints (any
+    Legacy spelling of ``repro.diversify`` with a constrained
+    ``ProblemSpec`` — prefer the facade for new code.  ``quotas=`` is sugar
+    for an exact-quota ``PartitionMatroid``; pass ``matroid=`` for quota
+    ranges, transversal or laminar constraints (any
     ``repro.constrained.matroid`` oracle).
 
     Returns (indices (k,) into ``points`` forming a feasible matroid basis,
@@ -380,22 +390,16 @@ def fair_diversity_maximize(points, labels, quotas=None,
     radius-certified adaptive engine (``eps`` sets the auto-k' accuracy
     target; the returned core-set then carries a ``RadiusCertificate``).
     """
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
     from .matroid import as_matroid
-    from .solver import solve_and_value
 
+    _warn_legacy("repro.constrained.fair_diversity_maximize")
     mat = as_matroid(matroid, quotas)
-    pts = np.asarray(points)
-    labels_np = np.asarray(labels)
-    m, k = mat.m, mat.k
-    if kprime is None:
-        kprime = max(2 * k, 32)
-    if kprime != "auto":
-        kprime = min(kprime, pts.shape[0])
-    cs = grouped_coreset(pts, labels_np, m, k, kprime, measure=measure,
-                         metric=metric, use_pallas=use_pallas, b=b,
-                         chunk=chunk, eps=eps)
-    cand_idx, cand_labels = cs.flatten()
-    sel, value = solve_and_value(pts[cand_idx], cand_labels, measure=measure,
-                                 matroid=mat, metric=metric,
-                                 swap_rounds=swap_rounds)
-    return cand_idx[sel], value, cs
+    res = diversify(
+        ProblemSpec(points=points, k=mat.k, measure=measure, metric=metric,
+                    labels=labels, matroid=mat),
+        ExecutionSpec(mode="batch", kprime=kprime, b=b, chunk=chunk,
+                      eps=eps, use_pallas=use_pallas,
+                      swap_rounds=swap_rounds, tau=tau, cliff=cliff))
+    return res.indices, res.value, res.coreset

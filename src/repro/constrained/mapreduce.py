@@ -50,6 +50,7 @@ class FairCoreset(NamedTuple):
     labels: jnp.ndarray      # (cap,) int32 group ids
     valid: jnp.ndarray       # (cap,) bool
     radius: jnp.ndarray      # () max per-group, per-reducer proxy radius
+    cert: Optional[object] = None  # probe RadiusCertificate (auto paths)
 
     def compact(self) -> Tuple[np.ndarray, np.ndarray]:
         v = np.asarray(self.valid)
@@ -92,7 +93,8 @@ def mr_grouped_coreset(points, labels, m: Optional[int] = None,
                        data_axes: Sequence[str] = ("data",),
                        metric="euclidean", use_pallas: bool = False,
                        b=1, chunk: int = 0,
-                       eps: float = 0.1) -> FairCoreset:
+                       eps: float = 0.1, tau=None,
+                       cliff=None) -> FairCoreset:
     """2-round MR fair core-set on a mesh: ``points (n, d)`` and ``labels
     (n,)`` are sharded over ``data_axes``; returns the replicated union.
     ``matroid=`` derives ``m``/``k`` from an oracle (the construction itself
@@ -115,9 +117,9 @@ def mr_grouped_coreset(points, labels, m: Optional[int] = None,
     n, _ = points.shape
     if n % nshards:
         raise ValueError(f"n={n} not divisible by {nshards} reducers")
-    kprime, schedule, b = _resolve_reducer_plan(
+    kprime, schedule, b, cert = _resolve_reducer_plan(
         points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
-        per_shard=n // nshards, labels=labels, m=m)
+        per_shard=n // nshards, labels=labels, m=m, tau=tau, cliff=cliff)
     metric_name = get_metric(metric).name
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
@@ -136,20 +138,21 @@ def mr_grouped_coreset(points, labels, m: Optional[int] = None,
     g_pts, g_lab, g_valid, g_rad = jax.jit(fn)(jnp.asarray(points),
                                                jnp.asarray(labels, jnp.int32))
     return FairCoreset(points=g_pts, labels=g_lab, valid=g_valid,
-                       radius=g_rad)
+                       radius=g_rad, cert=cert)
 
 
-def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
-                      mesh: Optional[Mesh] = None, *, matroid=None,
-                      kprime: Optional[int] = None,
-                      data_axes: Sequence[str] = ("data",), metric="euclidean",
-                      use_pallas: bool = False, swap_rounds: int = 10,
-                      b: int = 1, chunk: int = 0):
-    """Full constrained pipeline on a mesh (``quotas=`` is sugar for an
-    exact-quota ``PartitionMatroid``; any label-count matroid works — the MR
-    rounds only see group labels, the oracle enters at the replicated solve).
-
-    Returns (solution_points (k, d), solution_labels (k,), value)."""
+def _mr_fair_diversity_impl(points, labels, quotas=None,
+                            measure: str = "remote-edge",
+                            mesh: Optional[Mesh] = None, *, matroid=None,
+                            kprime: Optional[int] = None,
+                            data_axes: Sequence[str] = ("data",),
+                            metric="euclidean",
+                            use_pallas: bool = False, swap_rounds: int = 10,
+                            b=1, chunk: int = 0, eps: float = 0.1,
+                            tau=None, cliff=None):
+    """Execution body of the constrained mesh MR pipeline (no deprecation
+    warning — the ``repro.diversify`` facade routes here).  Returns
+    (sol, sol_labels, value, cert)."""
     from .matroid import as_matroid
 
     if mesh is None:
@@ -160,12 +163,47 @@ def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
         kprime = max(2 * k, 32)
     cs = mr_grouped_coreset(points, labels, m, k, kprime, measure, mesh,
                             data_axes=data_axes, metric=metric,
-                            use_pallas=use_pallas, b=b, chunk=chunk)
+                            use_pallas=use_pallas, b=b, chunk=chunk,
+                            eps=eps, tau=tau, cliff=cliff)
     cand_pts, cand_lab = cs.compact()
     sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
                                  matroid=mat, metric=metric,
                                  swap_rounds=swap_rounds)
-    return cand_pts[sel], cand_lab[sel], value
+    return cand_pts[sel], cand_lab[sel], value, cs.cert
+
+
+def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
+                      mesh: Optional[Mesh] = None, *, matroid=None,
+                      kprime: Optional[int] = None,
+                      data_axes: Sequence[str] = ("data",), metric="euclidean",
+                      use_pallas: bool = False, swap_rounds: int = 10,
+                      b=1, chunk: int = 0, eps: float = 0.1,
+                      tau=None, cliff=None):
+    """Full constrained pipeline on a mesh (``quotas=`` is sugar for an
+    exact-quota ``PartitionMatroid``; any label-count matroid works — the MR
+    rounds only see group labels, the oracle enters at the replicated solve).
+
+    Legacy spelling of ``repro.diversify`` with a constrained
+    ``ProblemSpec`` and ``ExecutionSpec(mode="mapreduce", mesh=...)`` —
+    prefer the facade for new code.
+
+    Returns (solution_points (k, d), solution_labels (k,), value)."""
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
+    from .matroid import as_matroid
+
+    _warn_legacy("repro.constrained.mr_fair_diversity")
+    if mesh is None:
+        raise ValueError("mr_fair_diversity requires a mesh")
+    mat = as_matroid(matroid, quotas)
+    res = diversify(
+        ProblemSpec(points=points, k=mat.k, measure=measure, metric=metric,
+                    labels=labels, matroid=mat),
+        ExecutionSpec(mode="mapreduce", mesh=mesh,
+                      data_axes=tuple(data_axes), kprime=kprime, b=b,
+                      chunk=chunk, eps=eps, use_pallas=use_pallas,
+                      swap_rounds=swap_rounds, tau=tau, cliff=cliff))
+    return res.solution, res.labels, res.value
 
 
 # --------------------------------------------------------------------------
@@ -184,18 +222,16 @@ def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
     return jax.vmap(one)(shards, slabels)
 
 
-def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
-                     num_reducers: int,
-                     measure: str = "remote-edge",
-                     kprime=None, metric="euclidean",
-                     partition: str = "contiguous", seed: int = 0,
-                     swap_rounds: int = 10, b=1, chunk: int = 0,
-                     eps: float = 0.1):
-    """Simulate the ℓ-reducer 2-round constrained MR run on one device.
-
-    Returns (solution_points, solution_labels, value).  ``partition`` follows
-    ``simulate_mr``: 'contiguous' | 'random' | 'adversarial'; ``quotas=`` is
-    sugar for an exact-quota ``PartitionMatroid``."""
+def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
+                           num_reducers: int,
+                           measure: str = "remote-edge",
+                           kprime=None, metric="euclidean",
+                           partition: str = "contiguous", seed: int = 0,
+                           swap_rounds: int = 10, b=1, chunk: int = 0,
+                           eps: float = 0.1, tau=None, cliff=None):
+    """Execution body of the simulated ℓ-reducer constrained MR run (no
+    deprecation warning — the ``repro.diversify`` facade routes here).
+    Returns (sol, sol_labels, value, cert)."""
     from repro.core.distributed import partition_shards
 
     from .matroid import as_matroid
@@ -211,10 +247,10 @@ def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
     from repro.core.distributed import _resolve_reducer_plan
     if kprime != "auto":
         kprime = min(kprime, shards.shape[1])
-    kprime, schedule, b = _resolve_reducer_plan(
+    kprime, schedule, b, cert = _resolve_reducer_plan(
         pts, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
         per_shard=shards.shape[1], labels=np.asarray(slabels).reshape(-1),
-        m=m)
+        m=m, tau=tau, cliff=cliff)
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
     g_pts, g_lab, g_valid, g_rad = _sim_round1(shards, slabels, m, k, kprime,
@@ -228,4 +264,36 @@ def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
     sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
                                  matroid=mat, metric=metric,
                                  swap_rounds=swap_rounds)
-    return cand_pts[sel], cand_lab[sel], value
+    return cand_pts[sel], cand_lab[sel], value, cert
+
+
+def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,
+                     num_reducers: int,
+                     measure: str = "remote-edge",
+                     kprime=None, metric="euclidean",
+                     partition: str = "contiguous", seed: int = 0,
+                     swap_rounds: int = 10, b=1, chunk: int = 0,
+                     eps: float = 0.1, tau=None, cliff=None):
+    """Simulate the ℓ-reducer 2-round constrained MR run on one device.
+
+    Legacy spelling of ``repro.diversify`` with a constrained
+    ``ProblemSpec`` and ``ExecutionSpec(mode="mapreduce",
+    num_reducers=...)`` — prefer the facade for new code.
+
+    Returns (solution_points, solution_labels, value).  ``partition`` follows
+    ``simulate_mr``: 'contiguous' | 'random' | 'adversarial'; ``quotas=`` is
+    sugar for an exact-quota ``PartitionMatroid``."""
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
+    from .matroid import as_matroid
+
+    _warn_legacy("repro.constrained.simulate_fair_mr")
+    mat = as_matroid(matroid, quotas)
+    res = diversify(
+        ProblemSpec(points=points, k=mat.k, measure=measure, metric=metric,
+                    labels=labels, matroid=mat),
+        ExecutionSpec(mode="mapreduce", num_reducers=num_reducers,
+                      kprime=kprime, b=b, chunk=chunk, eps=eps,
+                      partition=partition, seed=seed,
+                      swap_rounds=swap_rounds, tau=tau, cliff=cliff))
+    return res.solution, res.labels, res.value

@@ -23,8 +23,6 @@ import numpy as np
 
 from repro.core.smm import StreamingCoreset
 
-from .solver import constrained_solve
-
 
 class FairStreamingCoreset:
     """Per-group streaming core-sets for a label-count matroid over m groups.
@@ -43,7 +41,8 @@ class FairStreamingCoreset:
 
     def __init__(self, m: Optional[int] = None, k: Optional[int] = None,
                  kprime: int = 64, dim: int = 0, *, matroid=None,
-                 metric="euclidean", mode: str = "plain"):
+                 metric="euclidean", mode: str = "plain",
+                 eps: Optional[float] = None):
         from .matroid import derive_mk
 
         m, k = derive_mk(matroid, m, k, "FairStreamingCoreset")
@@ -53,12 +52,13 @@ class FairStreamingCoreset:
             raise ValueError(f"need m >= 1 groups, got {m}")
         self.m, self.k, self.kprime, self.dim = m, k, kprime, dim
         self.metric, self.mode = metric, mode
+        self.eps = eps           # accuracy target recorded per-group cert
         # per-group SMM: k' slots sized for the TOTAL k — any feasible
         # solution takes at most k points from one group, so the per-group
         # core-set must stay a valid unconstrained (k, k') core-set.
         self._per_group = [
             StreamingCoreset(k=k, kprime=kprime, dim=dim, metric=metric,
-                             mode=mode)
+                             mode=mode, eps=eps)
             for _ in range(m)
         ]
         self.n_seen = 0
@@ -120,7 +120,8 @@ class FairStreamingCoreset:
         per = self.certificates()
         if not per:
             return RadiusCertificate(kprime=self.kprime, radius=0.0,
-                                     scale=0.0, ratio=0.0, kind="streaming")
+                                     scale=0.0, ratio=0.0,
+                                     eps_target=self.eps, kind="streaming")
         worst = max(per.values(), key=lambda c: c.ratio)
         return dataclasses_replace(
             worst, group_ratios=tuple(per[g].ratio if g in per else 0.0
@@ -134,29 +135,23 @@ def fair_streaming_diversity(points, labels, quotas=None, *, matroid=None,
                              swap_rounds: int = 10):
     """End-to-end single-pass streaming driver.
 
-    Streams ``points``/``labels`` in chunks through per-group SMM states and
+    Legacy spelling of ``repro.diversify`` with ``ExecutionSpec(
+    mode="streaming")`` — prefer the facade for new code.  Streams
+    ``points``/``labels`` in chunks through per-group SMM states and
     solves on the union with the matroid oracle (``quotas=`` is sugar for an
     exact-quota ``PartitionMatroid``).  Returns (solution_points (k, d),
     solution_labels).
     """
-    from repro.core.measures import NEEDS_INJECTIVE
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
 
     from .matroid import as_matroid
 
+    _warn_legacy("repro.constrained.fair_streaming_diversity")
     mat = as_matroid(matroid, quotas)
-    pts = np.asarray(points, np.float32)
-    labels = np.asarray(labels)
-    m, k = mat.m, mat.k
-    if kprime is None:
-        kprime = max(2 * k, 32)
-    if mode is None:
-        mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
-    smm = FairStreamingCoreset(m=m, k=k, kprime=kprime, dim=pts.shape[1],
-                               metric=metric, mode=mode)
-    for i in range(0, pts.shape[0], chunk):
-        smm.update(pts[i:i + chunk], labels[i:i + chunk])
-    cand_pts, cand_labels = smm.finalize()
-    sel = constrained_solve(cand_pts, cand_labels, measure=measure,
-                            matroid=mat, metric=metric,
-                            swap_rounds=swap_rounds)
-    return cand_pts[sel], cand_labels[sel]
+    res = diversify(
+        ProblemSpec(points=points, k=mat.k, measure=measure, metric=metric,
+                    labels=labels, matroid=mat),
+        ExecutionSpec(mode="streaming", kprime=kprime, chunk=chunk,
+                      smm_mode=mode, swap_rounds=swap_rounds))
+    return res.solution, res.labels

@@ -52,6 +52,21 @@ from .gmm import (_grouped_inblock, _make_grouped_sweep, pad_for_engine,
 from .metrics import get_metric
 
 
+# Greedy-consistency bars of the adaptive-b controller (see
+# ``adaptive_select``).  Tuned on the bench's synthetic families; every
+# driver accepts per-call ``tau=`` / ``cliff=`` overrides that default to
+# these (None anywhere in the stack means "use the module default").
+DEFAULT_TAU = 0.15
+DEFAULT_CLIFF = 0.35
+
+
+def resolve_bars(tau: Optional[float],
+                 cliff: Optional[float]) -> Tuple[float, float]:
+    """Fill in the module-default tau/cliff bars for None overrides."""
+    return (DEFAULT_TAU if tau is None else float(tau),
+            DEFAULT_CLIFF if cliff is None else float(cliff))
+
+
 # --------------------------------------------------------------------------
 # certificate container
 # --------------------------------------------------------------------------
@@ -101,6 +116,37 @@ def auto_milestones(k: int, n: int, kprime_max=None):
         miles.append(c)
         c *= 2
     return kmax, miles
+
+
+def _secant_next(hist, eps: Optional[float], cur: int, cap: int) -> int:
+    """Next auto-k' milestone: a secant step on the measured (k', ratio)
+    curve in log-log space once two milestone measurements exist (on bounded
+    doubling metrics the anticover radius decays like k'^(-1/dim), so the
+    curve is near-linear there), clamped to the geometric x2 step as both
+    the first move and the overshoot cap.
+
+    >>> _secant_next([(32, 0.8), (64, 0.4)], 0.3, 64, 1024)
+    86
+    >>> _secant_next([(32, 0.8), (64, 0.4)], 0.1, 64, 1024)   # capped at x2
+    128
+    >>> _secant_next([(32, 0.4)], 0.1, 32, 1024)              # x2 first step
+    64
+    >>> _secant_next([(32, 0.4), (64, 0.4)], 0.1, 64, 1024)   # flat -> x2
+    128
+    """
+    fallback = min(2 * cur, cap)
+    if eps is None or eps <= 0 or len(hist) < 2:
+        return fallback
+    (k1, r1), (k2, r2) = hist[-2], hist[-1]
+    if not (k2 > k1 > 0 and 0.0 < r2 < r1 and np.isfinite(r1)):
+        return fallback
+    slope = (np.log(r2) - np.log(r1)) / (np.log(k2) - np.log(k1))
+    if not np.isfinite(slope) or slope >= 0:
+        return fallback
+    est = k2 * (eps / r2) ** (1.0 / slope)
+    if not np.isfinite(est):
+        return fallback
+    return int(np.clip(np.ceil(est), cur + 1, fallback))
 
 
 def _ratio(radius: float, scale: float) -> float:
@@ -224,8 +270,9 @@ def _compress_schedule(takes: Sequence[int]) -> Tuple[Tuple[int, int], ...]:
 
 
 def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
-                    b0: int = 8, gamma: float = 0.0, tau: float = 0.15,
-                    cliff: float = 0.35,
+                    b0: int = 8, gamma: float = 0.0,
+                    tau: Optional[float] = None,
+                    cliff: Optional[float] = None,
                     chunk: int = 0, metric: str = "euclidean",
                     use_pallas: bool = False,
                     milestones: Sequence[int] = (), eps: Optional[float] = None,
@@ -276,7 +323,12 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
     (2·radius/scale, scale sampled at ``scale_count``) meets ``eps`` in
     every inhabited group — this is the ``auto_kprime`` growth loop, and it
     never repeats work because the engine state is just a paused GMM run.
+    An unmet milestone re-plans the next one with a secant step on the
+    measured ratio curve (``_secant_next``; x2 first step, fallback and
+    overshoot cap), so only the initial ``milestones`` need to be the
+    geometric plan.
     """
+    tau, cliff = resolve_bars(tau, cliff)
     points = jnp.asarray(points)
     labels = jnp.asarray(labels, jnp.int32)
     n = points.shape[0]
@@ -298,29 +350,49 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
     prev_margin = prev_active = None
     ones_streak = 0
     miles = sorted(c for c in set(int(x) for x in milestones) if c < k_cap)
+    mile_hist: list = []     # (k', worst certified ratio) per unmet milestone
     scale = None
     stopped = False
     last_rnow = None
 
-    def milestone_met(rnow):
+    def milestone_eval(rnow):
+        """(met, worst ratio) across inhabited, unfinished groups."""
         if eps is None or scale is None:
-            return False
+            return False, float("inf")
         alive = counts_np > 0
         done = counts_np <= pos
         ratios = np.array([_ratio(float(r), float(s))
                            for r, s in zip(rnow, scale)])
-        return bool(np.all(~alive | done | (ratios <= eps)))
+        live = alive & ~done
+        if not live.any():
+            return True, 0.0
+        worst = float(ratios[live].max())
+        return bool(worst <= eps), worst
 
     def observe(rnow):
-        nonlocal scale, stopped
+        nonlocal scale, stopped, miles
         traj_counts.append(pos)
         traj_vals.append(rnow)
         if scale is None and scale_count is not None and pos >= scale_count:
             scale = rnow.copy()
+        crossed = False
         while miles and pos >= miles[0]:
             miles.pop(0)
-            if milestone_met(rnow):
-                stopped = True
+            crossed = True
+        if not crossed:
+            return
+        met, worst = milestone_eval(rnow)
+        if met:
+            stopped = True
+        elif eps is not None:
+            # unmet milestone: re-plan the next one with a secant step on
+            # the measured ratio curve (x2 is the first step and the
+            # overshoot cap; see _secant_next) instead of walking the
+            # pre-seeded geometric plan.
+            if np.isfinite(worst) and worst > 0.0:
+                mile_hist.append((pos, worst))
+            nxt = _secant_next(mile_hist, eps, pos, k_cap)
+            miles = [nxt] if nxt < k_cap else []
 
     p_mult = 16
     while pos < k_cap and not stopped:
@@ -457,20 +529,22 @@ class AdaptiveGMMResult(NamedTuple):
 def gmm_adaptive(points, k: int, *, b0: int = 8, metric="euclidean",
                  mask=None, start=0, chunk: int = 0,
                  use_pallas: bool = False, gamma: float = 0.0,
-                 tau: float = 0.15,
+                 tau: Optional[float] = None, cliff: Optional[float] = None,
                  scale_count: Optional[int] = None,
                  eps: Optional[float] = None) -> AdaptiveGMMResult:
     """Adaptive-b GMM: lookahead-b speed where the radius curve is steep, a
     bit-exact b=1 fallback once it flattens (``b="auto"`` everywhere in the
     public API routes here).  Unlike ``gmm_batched``, any k works — the
-    schedule is discovered, not prescribed."""
+    schedule is discovered, not prescribed.  ``tau``/``cliff`` override the
+    controller's greedy-consistency bars (None = ``DEFAULT_TAU`` /
+    ``DEFAULT_CLIFF``)."""
     points = jnp.asarray(points)
     n = points.shape[0]
     if mask is None:
         mask = jnp.ones((n,), bool)
     labels = mask_to_labels(jnp.asarray(mask))
     run = adaptive_select(points, labels, [start], 1, k, b0=b0, gamma=gamma,
-                          tau=tau, chunk=chunk, metric=metric,
+                          tau=tau, cliff=cliff, chunk=chunk, metric=metric,
                           use_pallas=use_pallas,
                           scale_count=scale_count or min(k, n), eps=eps)
     cert = certificate_from_trajectory(
@@ -487,10 +561,15 @@ def auto_kprime(points, k: int, eps: float = 0.1,
                 measure: str = "remote-edge", *, metric="euclidean",
                 b="auto", chunk: int = 0, use_pallas: bool = False,
                 kprime_max: Optional[int] = None, mask=None,
-                start=0) -> AdaptiveGMMResult:
-    """ε-targeted core-set sizing: grow k' geometrically until the measured
-    radius certificate meets the target (ratio = 2·r_T(k')/scale_k <= eps),
-    resuming the same engine run at every milestone.
+                start=0, tau: Optional[float] = None,
+                cliff: Optional[float] = None) -> AdaptiveGMMResult:
+    """ε-targeted core-set sizing: grow k' until the measured radius
+    certificate meets the target (ratio = 2·r_T(k')/scale_k <= eps),
+    resuming the same engine run at every milestone.  The first growth step
+    is geometric (x2); once two milestone measurements exist the next
+    milestone comes from a secant step on the measured ratio curve
+    (``_secant_next``), which overshoots less at large k' while keeping x2
+    as the fallback and the per-step cap.
 
     ``measure`` is recorded for context; the certificate is the remote-edge
     bound, which the delegate/multiplicity constructions for the clique-type
@@ -519,8 +598,9 @@ def auto_kprime(points, k: int, eps: float = 0.1,
         raise ValueError(f"k={k} out of range for n={n}")
     kmax, miles = auto_milestones(k, n, kprime_max)
     b0 = 8 if b == "auto" else max(1, int(b))
-    run = adaptive_select(points, labels, [start], 1, kmax, b0=b0,
-                          chunk=chunk, metric=metric, use_pallas=use_pallas,
+    run = adaptive_select(points, labels, [start], 1, kmax, b0=b0, tau=tau,
+                          cliff=cliff, chunk=chunk, metric=metric,
+                          use_pallas=use_pallas,
                           milestones=miles, eps=eps, scale_count=k)
     cert = certificate_from_trajectory(run.counts, run.traj[:, 0], k,
                                        eps=eps, b_schedule=run.schedule)
@@ -565,7 +645,8 @@ def plan_from_schedule(executed, kprime: int,
 def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
                         metric="euclidean", labels=None, m: int = 1,
                         chunk: int = 0, use_pallas: bool = False,
-                        sample: int = 8192):
+                        sample: int = 8192, tau: Optional[float] = None,
+                        cliff: Optional[float] = None):
     """Resolve ``b="auto"`` / ``kprime="auto"`` into static engine inputs for
     paths that run inside ``shard_map``/``vmap`` (the MapReduce reducers): a
     cheap strided-subsample probe runs the adaptive controller once on the
@@ -594,6 +675,7 @@ def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
         kmax, miles = auto_milestones(k_probe, sn)
         run = adaptive_select(sub, lab, starts, mm, kmax,
                               b0=8 if b == "auto" else max(1, int(b)),
+                              tau=tau, cliff=cliff,
                               chunk=chunk, metric=metric,
                               use_pallas=use_pallas, milestones=miles,
                               eps=eps, scale_count=k_probe,
@@ -603,6 +685,7 @@ def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
     else:
         kp = int(kprime)
         run = adaptive_select(sub, lab, starts, mm, min(kp, sn), b0=8,
+                              tau=tau, cliff=cliff,
                               chunk=chunk, metric=metric,
                               use_pallas=use_pallas, scale_count=k_probe,
                               group_counts=counts if labels is not None

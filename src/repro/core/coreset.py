@@ -61,7 +61,7 @@ def coreset_from_points(points, weights=None) -> Coreset:
 def build_coreset(points, k: int, kprime, measure: str, *,
                   metric="euclidean", use_pallas: bool = False,
                   generalized: bool = False, b=1, chunk: int = 0,
-                  eps: float = 0.1, schedule=None):
+                  eps: float = 0.1, schedule=None, tau=None, cliff=None):
     """Sequential (single-partition) core-set per the paper's recipe:
 
     * remote-edge / remote-cycle  -> GMM(S, k')            (Thm 4)
@@ -74,6 +74,8 @@ def build_coreset(points, k: int, kprime, measure: str, *,
     controller and ``kprime="auto"`` grows k' until the measured radius
     certificate meets the ``eps`` accuracy target (``core.adaptive``); both
     attach the resulting ``RadiusCertificate`` as ``cs.cert``.
+    ``tau``/``cliff`` override the adaptive controller's greedy-consistency
+    bars (None = ``core.adaptive.DEFAULT_TAU`` / ``DEFAULT_CLIFF``).
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -98,13 +100,15 @@ def build_coreset(points, k: int, kprime, measure: str, *,
     if kprime == "auto":
         from .adaptive import auto_kprime
         res = auto_kprime(points, k, eps, measure, metric=metric, b=b,
-                          chunk=chunk, use_pallas=use_pallas)
+                          chunk=chunk, use_pallas=use_pallas, tau=tau,
+                          cliff=cliff)
         kprime, cert = int(res.idx.shape[0]), res.cert
         kernel = res
     elif b == "auto":
         from .adaptive import gmm_adaptive
         kernel = gmm_adaptive(points, kprime, metric=metric, chunk=chunk,
-                              use_pallas=use_pallas, scale_count=min(k, kprime))
+                              use_pallas=use_pallas, tau=tau, cliff=cliff,
+                              scale_count=min(k, kprime))
         cert = kernel.cert
     if generalized:
         if auto:
@@ -155,13 +159,16 @@ def build_coreset(points, k: int, kprime, measure: str, *,
 
 def diversity_maximize(points, k: int, measure: str, *, kprime=None,
                        metric="euclidean", use_pallas: bool = False,
-                       b=1, chunk: int = 0, eps: float = 0.1):
+                       b=1, chunk: int = 0, eps: float = 0.1,
+                       tau=None, cliff=None):
     """End-to-end: core-set + sequential α-approx solver.
 
-    Returns (solution_points (k,d) ndarray, value, coreset).  ``b="auto"``
-    and ``kprime="auto"`` enable the radius-certified adaptive engine
-    (``eps`` sets the auto-k' target; see ``build_coreset``), and the
-    returned core-set then carries ``cs.cert``.
+    Legacy spelling of ``repro.diversify`` — prefer the facade for new code
+    (this wrapper emits a ``DeprecationWarning`` and routes through it,
+    bit-identically).  Returns (solution_points (k,d) ndarray, value,
+    coreset).  ``b="auto"`` and ``kprime="auto"`` enable the
+    radius-certified adaptive engine (``eps`` sets the auto-k' target; see
+    ``build_coreset``), and the returned core-set then carries ``cs.cert``.
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -172,17 +179,12 @@ def diversity_maximize(points, k: int, measure: str, *, kprime=None,
     >>> bool(value > 0.0)
     True
     """
-    from .measures import diversity
-    from .metrics import get_metric
-    from .sequential import solve_on_coreset
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
 
-    if kprime is None:
-        kprime = max(2 * k, 32)
-    if kprime != "auto":
-        kprime = min(kprime, int(np.asarray(points).shape[0]))
-    cs = build_coreset(points, k, kprime, measure, metric=metric,
-                       use_pallas=use_pallas, b=b, chunk=chunk, eps=eps)
-    sol = solve_on_coreset(cs, k, measure, metric=metric)
-    m = get_metric(metric)
-    dm = np.asarray(m.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
-    return sol, diversity(measure, dm), cs
+    _warn_legacy("repro.core.diversity_maximize")
+    res = diversify(
+        ProblemSpec(points=points, k=k, measure=measure, metric=metric),
+        ExecutionSpec(mode="batch", kprime=kprime, b=b, chunk=chunk,
+                      eps=eps, use_pallas=use_pallas, tau=tau, cliff=cliff))
+    return res.solution, res.value, res.coreset

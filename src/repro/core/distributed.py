@@ -73,22 +73,23 @@ def _local_coreset_gen(shard, k, kprime, metric, use_pallas, b=1, chunk=0,
 
 def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
                           metric, chunk: int, per_shard: int,
-                          labels=None, m: int = 1):
+                          labels=None, m: int = 1, tau=None, cliff=None):
     """Freeze ``b="auto"``/``kprime="auto"`` into static reducer inputs.
 
     A shard_map body cannot run the host-paced controller, so a cheap probe
     (``core.adaptive.resolve_engine_plan``) runs once on a subsample of the
     global input and its decisions are compiled into every reducer as a
     static (block, rounds) schedule.  k' is clamped to the shard size.
-    Returns (kprime:int, schedule|None, b:int).
+    Returns (kprime:int, schedule|None, b:int, probe RadiusCertificate|None).
     """
     if b != "auto" and kprime != "auto":
-        return kprime, None, b
+        return kprime, None, b, None
     from repro.core.adaptive import plan_from_schedule, resolve_engine_plan
 
-    kp, schedule, _ = resolve_engine_plan(np.asarray(points), k, kprime, b,
-                                          eps=eps, metric=metric,
-                                          labels=labels, m=m, chunk=chunk)
+    kp, schedule, cert = resolve_engine_plan(np.asarray(points), k, kprime, b,
+                                             eps=eps, metric=metric,
+                                             labels=labels, m=m, chunk=chunk,
+                                             tau=tau, cliff=cliff)
     kp = min(int(kp), per_shard)
     if schedule is not None:
         planned = sum(b_ * r for b_, r in schedule)
@@ -96,7 +97,7 @@ def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
             schedule = plan_from_schedule(schedule, kp, planned)
     # kprime="auto" with an explicit numeric b keeps that b (no schedule);
     # only b="auto" replaces the knob with the frozen plan
-    return kp, schedule, (1 if b == "auto" else b)
+    return kp, schedule, (1 if b == "auto" else b), cert
 
 
 # --------------------------------------------------------------------------
@@ -106,7 +107,7 @@ def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
 def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
                *, data_axes: Sequence[str] = ("data",), metric="euclidean",
                use_pallas: bool = False, generalized: bool = False,
-               b=1, chunk: int = 0, eps: float = 0.1):
+               b=1, chunk: int = 0, eps: float = 0.1, tau=None, cliff=None):
     """2-round MR core-set on a mesh.  ``points`` is globally (n, d) and gets
     sharded over ``data_axes``; returns a replicated Coreset/GeneralizedCoreset
     for the union T = ∪ T_i.  ``b``/``chunk`` tune the per-reducer selection
@@ -121,9 +122,9 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
     n, d = points.shape
     if n % nshards:
         raise ValueError(f"n={n} not divisible by {nshards} reducers")
-    kprime, schedule, b = _resolve_reducer_plan(
+    kprime, schedule, b, cert = _resolve_reducer_plan(
         points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
-        per_shard=n // nshards)
+        per_shard=n // nshards, tau=tau, cliff=cliff)
 
     if generalized:
         def body(shard):
@@ -139,7 +140,7 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
                        out_specs=(P(), P(), P()), check_vma=False)
         g_pts, g_mult, g_rad = jax.jit(fn)(points)
         return GeneralizedCoreset(points=g_pts, multiplicity=g_mult,
-                                  radius=g_rad)
+                                  radius=g_rad, cert=cert)
 
     if measure in NEEDS_INJECTIVE:
         def body(shard):
@@ -155,7 +156,8 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
                        out_specs=(P(), P(), P()), check_vma=False)
         g_pts, g_valid, g_rad = jax.jit(fn)(points)
         return Coreset(points=g_pts, valid=g_valid,
-                       weights=g_valid.astype(jnp.int32), radius=g_rad)
+                       weights=g_valid.astype(jnp.int32), radius=g_rad,
+                       cert=cert)
 
     def body(shard):
         pts, radius = _local_coreset_plain(shard, kprime, metric, use_pallas,
@@ -169,44 +171,70 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
     g_pts, g_rad = jax.jit(fn)(points)
     m = g_pts.shape[0]
     return Coreset(points=g_pts, valid=jnp.ones((m,), bool),
-                   weights=jnp.ones((m,), jnp.int32), radius=g_rad)
+                   weights=jnp.ones((m,), jnp.int32), radius=g_rad,
+                   cert=cert)
+
+
+def _mr_diversity_impl(points, k: int, measure: str, mesh: Mesh, *,
+                       kprime=None,
+                       data_axes: Sequence[str] = ("data",),
+                       metric="euclidean",
+                       use_pallas: bool = False, three_round: bool = False,
+                       b=1, chunk: int = 0, eps: float = 0.1,
+                       tau=None, cliff=None):
+    """Execution body of the mesh MR pipeline (no deprecation warning — the
+    ``repro.diversify`` facade routes here).  Returns (sol, value, cs)."""
+    if kprime is None:
+        kprime = max(2 * k, 32)
+    if not three_round:
+        cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
+                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk,
+                        eps=eps, tau=tau, cliff=cliff)
+        sol = solve_on_coreset(cs, k, measure, metric=metric)
+    else:
+        cs = mr_coreset(points, k, kprime, measure, mesh,
+                        data_axes=data_axes, metric=metric,
+                        use_pallas=use_pallas, generalized=True,
+                        b=b, chunk=chunk, eps=eps, tau=tau, cliff=cliff)
+        pts, mult = cs.compact()
+        idx = solve(measure, pts, k, weights=mult, metric=metric)
+        uniq, counts = np.unique(idx, return_counts=True)
+        # round 3: instantiate the chosen multiset against the full input
+        sol = instantiate(pts[uniq], counts, np.asarray(points),
+                          float(cs.radius), metric=metric)
+    met = get_metric(metric)
+    dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
+    return sol, diversity(measure, dm), cs
 
 
 def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
                  kprime=None,
                  data_axes: Sequence[str] = ("data",), metric="euclidean",
                  use_pallas: bool = False, three_round: bool = False,
-                 b=1, chunk: int = 0, eps: float = 0.1):
+                 b=1, chunk: int = 0, eps: float = 0.1, tau=None, cliff=None):
     """Full pipeline: 2-round (Thm 6) or 3-round generalized (Thm 10).
 
+    Legacy spelling of ``repro.diversify`` with ``ExecutionSpec(
+    mode="mapreduce", mesh=...)`` — prefer the facade for new code.
     ``b="auto"`` / ``kprime="auto"`` probe once and freeze a static reducer
     plan (see ``mr_coreset``).  Returns (solution_points (k,d), value)."""
-    if kprime is None:
-        kprime = max(2 * k, 32)
-    if not three_round:
-        cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
-                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk,
-                        eps=eps)
-        sol = solve_on_coreset(cs, k, measure, metric=metric)
-    else:
-        gen = mr_coreset(points, k, kprime, measure, mesh,
-                         data_axes=data_axes, metric=metric,
-                         use_pallas=use_pallas, generalized=True,
-                         b=b, chunk=chunk, eps=eps)
-        pts, mult = gen.compact()
-        idx = solve(measure, pts, k, weights=mult, metric=metric)
-        uniq, counts = np.unique(idx, return_counts=True)
-        # round 3: instantiate the chosen multiset against the full input
-        sol = instantiate(pts[uniq], counts, np.asarray(points),
-                          float(gen.radius), metric=metric)
-    met = get_metric(metric)
-    dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
-    return sol, diversity(measure, dm)
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
+
+    _warn_legacy("repro.core.distributed.mr_diversity")
+    res = diversify(
+        ProblemSpec(points=points, k=k, measure=measure, metric=metric),
+        ExecutionSpec(mode="mapreduce", mesh=mesh,
+                      data_axes=tuple(data_axes), kprime=kprime, b=b,
+                      chunk=chunk, eps=eps, use_pallas=use_pallas,
+                      three_round=three_round, tau=tau, cliff=cliff))
+    return res.solution, res.value
 
 
 def mr_coreset_recursive(points, k: int, kprime, measure: str, mesh: Mesh,
                          *, metric="euclidean", use_pallas: bool = False,
-                         b=1, chunk: int = 0, eps: float = 0.1):
+                         b=1, chunk: int = 0, eps: float = 0.1,
+                         tau=None, cliff=None):
     """Thm 8: two-level reduction — per-device core-sets over ``data``,
     re-contracted over ``pod`` (requires a ('pod','data',...) mesh)."""
     from repro.compat import shard_map
@@ -215,9 +243,9 @@ def mr_coreset_recursive(points, k: int, kprime, measure: str, mesh: Mesh,
         raise ValueError("recursive scheme expects a 'pod' axis")
     ext = measure in NEEDS_INJECTIVE
     nshards = int(np.prod([mesh.shape[a] for a in ("pod", "data")]))
-    kprime, schedule, b = _resolve_reducer_plan(
+    kprime, schedule, b, cert = _resolve_reducer_plan(
         points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
-        per_shard=points.shape[0] // nshards)
+        per_shard=points.shape[0] // nshards, tau=tau, cliff=cliff)
 
     def body(shard):
         if ext:
@@ -246,7 +274,8 @@ def mr_coreset_recursive(points, k: int, kprime, measure: str, mesh: Mesh,
     g_pts, g_rad = jax.jit(fn)(points)
     m = g_pts.shape[0]
     return Coreset(points=g_pts, valid=jnp.ones((m,), bool),
-                   weights=jnp.ones((m,), jnp.int32), radius=g_rad)
+                   weights=jnp.ones((m,), jnp.int32), radius=g_rad,
+                   cert=cert)
 
 
 # --------------------------------------------------------------------------
@@ -313,24 +342,23 @@ def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str,
     return jax.vmap(one)(shards)
 
 
-def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
-                kprime=None, metric="euclidean",
-                generalized: bool = False, partition: str = "contiguous",
-                seed: int = 0, b=1, chunk: int = 0, eps: float = 0.1):
-    """Simulate the ℓ-reducer 2-round MR run on one device (vmap over shards).
-
-    ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
-    adversarial = sort by first coordinate so each reducer sees a small-volume
-    region).  ``b="auto"`` / ``kprime="auto"`` probe once and freeze a static
-    reducer schedule, exactly like ``mr_coreset``."""
+def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
+                      kprime=None, metric="euclidean",
+                      generalized: bool = False,
+                      partition: str = "contiguous",
+                      seed: int = 0, b=1, chunk: int = 0, eps: float = 0.1,
+                      tau=None, cliff=None):
+    """Execution body of the simulated ℓ-reducer MR run (no deprecation
+    warning — the ``repro.diversify`` facade routes here).  Returns
+    (sol, value, cs)."""
     if kprime is None:
         kprime = max(2 * k, 32)
     pts, shards, _ = partition_shards(points, num_reducers,
                                       partition=partition, seed=seed)
     d = pts.shape[1]
-    kprime, schedule, b = _resolve_reducer_plan(
+    kprime, schedule, b, cert = _resolve_reducer_plan(
         pts, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
-        per_shard=shards.shape[1])
+        per_shard=shards.shape[1], tau=tau, cliff=cliff)
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")
@@ -347,19 +375,46 @@ def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
                          schedule=schedule)
             return g.points, g.multiplicity, g.radius
         gp, gm, gr = jax.jit(jax.vmap(one))(shards)
-        gen = GeneralizedCoreset(points=gp.reshape(-1, d),
-                                 multiplicity=gm.reshape(-1),
-                                 radius=jnp.max(gr))
-        p, m = gen.compact()
+        cs = GeneralizedCoreset(points=gp.reshape(-1, d),
+                                multiplicity=gm.reshape(-1),
+                                radius=jnp.max(gr), cert=cert)
+        p, m = cs.compact()
         idx = solve(measure, p, k, weights=m, metric=metric)
         uniq, counts = np.unique(idx, return_counts=True)
-        sol = instantiate(p[uniq], counts, pts, float(gen.radius),
+        sol = instantiate(p[uniq], counts, pts, float(cs.radius),
                           metric=metric)
     else:
         cs = Coreset(points=flat_pts, valid=flat_valid,
-                     weights=flat_valid.astype(jnp.int32), radius=radius)
+                     weights=flat_valid.astype(jnp.int32), radius=radius,
+                     cert=cert)
         sol = solve_on_coreset(cs, k, measure, metric=metric)
 
     met = get_metric(metric)
     dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
-    return sol, diversity(measure, dm)
+    return sol, diversity(measure, dm), cs
+
+
+def simulate_mr(points, k: int, measure: str, *, num_reducers: int,
+                kprime=None, metric="euclidean",
+                generalized: bool = False, partition: str = "contiguous",
+                seed: int = 0, b=1, chunk: int = 0, eps: float = 0.1,
+                tau=None, cliff=None):
+    """Simulate the ℓ-reducer 2-round MR run on one device (vmap over shards).
+
+    Legacy spelling of ``repro.diversify`` with ``ExecutionSpec(
+    mode="mapreduce", num_reducers=...)`` — prefer the facade for new code.
+    ``partition``: 'contiguous' | 'random' | 'adversarial' (paper §7.2 —
+    adversarial = sort by first coordinate so each reducer sees a small-volume
+    region).  ``b="auto"`` / ``kprime="auto"`` probe once and freeze a static
+    reducer schedule, exactly like ``mr_coreset``."""
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
+
+    _warn_legacy("repro.core.distributed.simulate_mr")
+    res = diversify(
+        ProblemSpec(points=points, k=k, measure=measure, metric=metric),
+        ExecutionSpec(mode="mapreduce", num_reducers=num_reducers,
+                      kprime=kprime, b=b, chunk=chunk, eps=eps,
+                      generalized=generalized, partition=partition,
+                      seed=seed, tau=tau, cliff=cliff))
+    return res.solution, res.value

@@ -11,13 +11,8 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core import diversity_maximize
-from repro.core.distributed import simulate_mr
-
 
 def embed_examples(token_batches: np.ndarray, embedding: Optional[jnp.ndarray]
                    = None, dim: int = 64, seed: int = 0) -> np.ndarray:
@@ -70,8 +65,11 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
                    kprime=None, num_reducers: int = 1,
                    metric="euclidean", group_labels=None, quotas=None,
                    matroid=None, b=1, chunk: int = 0,
-                   eps: float = 0.1) -> np.ndarray:
+                   eps: float = 0.1, tau=None, cliff=None) -> np.ndarray:
     """Returns indices of the k selected examples.
+
+    Legacy spelling of ``repro.diversify`` (whose ``DiversityResult`` also
+    carries the row ``indices``) — prefer the facade for new code.
 
     With ``group_labels`` (an ``(n,)`` int array of category ids) the
     selection is matroid-constrained via the ``repro.constrained``
@@ -100,52 +98,19 @@ def select_diverse(embeddings: np.ndarray, k: int, *, measure="remote-edge",
     >>> np.bincount(lab[idx], minlength=4).tolist()
     [3, 1, 1, 1]
     """
-    pts = np.asarray(embeddings, np.float32)
-    if group_labels is not None:
-        from repro.constrained import PartitionMatroid
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
 
-        labels = np.asarray(group_labels)
-        if matroid is None:
-            if quotas is None:
-                quotas = balanced_quotas(labels, k)
-            quotas = np.asarray(quotas, np.int64)
-            if int(quotas.sum()) != k:
-                raise ValueError(f"sum(quotas)={int(quotas.sum())} != k={k}")
-            matroid = PartitionMatroid(quotas)
-        elif quotas is not None:
-            raise ValueError("pass either matroid= or quotas=, not both")
-        if matroid.k != k:
-            raise ValueError(f"matroid.k={matroid.k} != k={k}")
-        if num_reducers > 1:
-            from repro.constrained import simulate_fair_mr
-            sol, sol_lab, _ = simulate_fair_mr(pts, labels, matroid=matroid,
-                                               num_reducers=num_reducers,
-                                               measure=measure, kprime=kprime,
-                                               metric=metric, b=b, chunk=chunk,
-                                               eps=eps)
-            # match within the solution point's group so duplicate embeddings
-            # across groups can't silently break the quota guarantee
-            return _match_rows(pts, sol, k, row_labels=labels,
-                               sol_labels=sol_lab)
-        from repro.constrained import fair_diversity_maximize
-        idx, _, _ = fair_diversity_maximize(pts, labels, measure=measure,
-                                            matroid=matroid, kprime=kprime,
-                                            metric=metric, b=b, chunk=chunk,
-                                            eps=eps)
-        return np.asarray(idx)
-    if quotas is not None:
-        raise ValueError("quotas= requires group_labels=")
-    if matroid is not None:
-        raise ValueError("matroid= requires group_labels=")
-    if num_reducers > 1:
-        sol, _ = simulate_mr(pts, k, measure, num_reducers=num_reducers,
-                             kprime=kprime, metric=metric, b=b, chunk=chunk,
-                             eps=eps)
-    else:
-        sol, _, _ = diversity_maximize(pts, k, measure, kprime=kprime,
-                                       metric=metric, b=b, chunk=chunk,
-                                       eps=eps)
-    return _match_rows(pts, sol, k)
+    _warn_legacy("repro.data.select_diverse")
+    pts = np.asarray(embeddings, np.float32)
+    res = diversify(
+        ProblemSpec(points=pts, k=k, measure=measure, metric=metric,
+                    labels=group_labels, matroid=matroid, quotas=quotas),
+        ExecutionSpec(mode="mapreduce" if num_reducers > 1 else "batch",
+                      num_reducers=num_reducers if num_reducers > 1 else None,
+                      kprime=kprime, b=b, chunk=chunk, eps=eps, tau=tau,
+                      cliff=cliff))
+    return res.indices
 
 
 def _match_rows(pts: np.ndarray, sol: np.ndarray, k: int, *,
@@ -153,17 +118,18 @@ def _match_rows(pts: np.ndarray, sol: np.ndarray, k: int, *,
     """Map solution points back to distinct row indices (exact match by row).
 
     With ``row_labels``/``sol_labels``, candidates are restricted to rows of
-    the solution point's own group (preserves quota feasibility)."""
+    the solution point's own group (preserves quota feasibility).  Each pick
+    is a masked argmin — O(n) per solution point, no argsort."""
     idx = []
-    seen = set()
+    taken = np.zeros(pts.shape[0], bool)
+    labels_np = None if row_labels is None else np.asarray(row_labels)
     for t, s in enumerate(sol):
         d = np.linalg.norm(pts - s[None, :], axis=1)
-        if row_labels is not None:
-            d = np.where(np.asarray(row_labels) == sol_labels[t], d, np.inf)
-        order = np.argsort(d)
-        for j in order:
-            if j not in seen and np.isfinite(d[j]):
-                idx.append(int(j))
-                seen.add(int(j))
-                break
+        if labels_np is not None:
+            d = np.where(labels_np == sol_labels[t], d, np.inf)
+        d[taken] = np.inf
+        j = int(np.argmin(d))
+        if np.isfinite(d[j]):
+            idx.append(j)
+            taken[j] = True
     return np.asarray(idx[:k])

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.models as M
-from repro.core import diversity_maximize
 from repro.models.common import ModelConfig, ShardingRules
 
 
@@ -78,8 +77,11 @@ def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
                    measure: str = "remote-edge", *, group_labels=None,
                    quotas=None, matroid=None, b=1,
                    chunk: int = 0, kprime=None,
-                   eps: float = 0.1) -> np.ndarray:
+                   eps: float = 0.1, tau=None, cliff=None) -> np.ndarray:
     """Pick the k most diverse candidates; returns their indices.
+
+    Legacy spelling of ``repro.diversify`` (whose ``DiversityResult`` also
+    carries the candidate ``indices``) — prefer the facade for new code.
 
     ``quotas`` (with per-candidate ``group_labels``) constrains the result to
     an exact-quota partition matroid — exactly ``quotas[g]`` picks from
@@ -103,8 +105,14 @@ def diverse_rerank(candidate_embeddings: np.ndarray, k: int,
     >>> np.bincount(lab[idx], minlength=3).tolist()
     [2, 2, 2]
     """
-    from repro.data.selection import select_diverse
-    return select_diverse(candidate_embeddings, k, measure=measure,
-                          group_labels=group_labels, quotas=quotas,
-                          matroid=matroid, b=b, chunk=chunk, kprime=kprime,
-                          eps=eps)
+    from repro.api import (ExecutionSpec, ProblemSpec, _warn_legacy,
+                           diversify)
+
+    _warn_legacy("repro.serving.diverse_rerank")
+    pts = np.asarray(candidate_embeddings, np.float32)
+    res = diversify(
+        ProblemSpec(points=pts, k=k, measure=measure,
+                    labels=group_labels, matroid=matroid, quotas=quotas),
+        ExecutionSpec(mode="batch", kprime=kprime, b=b, chunk=chunk,
+                      eps=eps, tau=tau, cliff=cliff))
+    return res.indices

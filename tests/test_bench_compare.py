@@ -106,7 +106,8 @@ def test_compare_main_against_committed_baselines(tmp_path, capsys):
     """End-to-end: the committed baselines compared against themselves pass
     the gate and render a summary — exactly what the CI job runs."""
     import shutil
-    for name in ("BENCH_gmm.json", "BENCH_adaptive.json"):
+    for name in ("BENCH_gmm.json", "BENCH_adaptive.json",
+                 "BENCH_constrained.json"):
         shutil.copy(f"{compare.BASELINE_DIR}/{name}", tmp_path / name)
     rc = compare.main(["--fresh", str(tmp_path),
                        "--summary", str(tmp_path / "sum.md")])

@@ -12,6 +12,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 
 # Public-API modules whose docstrings carry runnable examples.
 DOCTEST_MODULES = [
+    "repro.api",                 # diversify / plan / ProblemSpec
     "repro.core.coreset",        # build_coreset, diversity_maximize
     "repro.core.adaptive",       # auto_kprime / RadiusCertificate
     "repro.core.smm",            # StreamingCoreset
