@@ -31,6 +31,8 @@ from repro.core.adaptive import gmm_adaptive
 from repro.core.gmm import gmm_batched
 from repro.data import clustered_dataset
 
+from benchmarks.common import counters_of
+
 
 def _time_all(fns, repeats: int = 3):
     """Wall clock for several engines, ROUND-ROBIN interleaved so background
@@ -106,11 +108,13 @@ def run(quick: bool = True, *,
                        spread=sh.get("spread", 0.05))
         kp, b, chunk = sh["kprime"], sh["b"], sh["chunk"]
 
-        (t_b1, t_bf, t_auto), cycles = _time_all([
+        engines = [
             lambda: gmm(pts, kp).min_dist,
             lambda: gmm_batched(pts, kp, b=b, chunk=chunk)[2],
             lambda: gmm_adaptive(pts, kp, b0=b, chunk=chunk).min_dist,
-        ])
+        ]
+        (t_b1, t_bf, t_auto), cycles = _time_all(engines)
+        counters = [counters_of(fn) for fn in engines]
         r_b1 = float(gmm(pts, kp).radius)
         r_bf = float(gmm_batched(pts, kp, b=b, chunk=chunk)[1])
         res = gmm_adaptive(pts, kp, b0=b, chunk=chunk)
@@ -120,9 +124,9 @@ def run(quick: bool = True, *,
         # _time_all) — best-of times still reported for trend reading
         speedups = np.median(cycles[:, :1] / np.maximum(cycles, 1e-9),
                              axis=0)
-        for (engine, t, r), sp in zip(
+        for (engine, t, r), sp, cnt in zip(
                 (("b1", t_b1, r_b1), (f"b{b}", t_bf, r_bf),
-                 ("auto", t_auto, r_auto)), speedups):
+                 ("auto", t_auto, r_auto)), speedups, counters):
             rows.append({
                 "shape": sh["name"], "engine": engine, "n": sh["n"],
                 "d": sh["d"], "clusters": sh["clusters"] or 0, "kprime": kp,
@@ -131,6 +135,7 @@ def run(quick: bool = True, *,
                 "radius": round(r, 6),
                 "radius_ratio_vs_b1": round(r / max(r_b1, 1e-12), 4),
                 "speedup_vs_b1": round(float(sp), 2),
+                "counters": cnt,
             })
         rows[-1]["b_schedule"] = [list(ph) for ph in res.schedule]
         print(f"[adaptive] {sh['name']:<14} b1={t_b1:6.3f}s "

@@ -20,8 +20,8 @@ from typing import Dict, List
 import numpy as np
 
 import jax.numpy as jnp
-from repro.constrained import (constrained_solve, fair_diversity_maximize,
-                               fair_streaming_diversity, simulate_fair_mr)
+import repro
+from repro.constrained import constrained_solve
 from repro.core.measures import diversity
 from repro.core.metrics import get_metric
 from repro.data import clustered_dataset
@@ -41,6 +41,23 @@ def _value(pts, measure, metric="euclidean"):
     return diversity(measure, np.asarray(met.pairwise(p, p)))
 
 
+def _fair(pts, labels, quotas, measure="remote-edge", *, mode="batch",
+          **exec_kw):
+    """Constrained run through the facade (repro.diversify)."""
+    return repro.diversify(
+        repro.ProblemSpec(points=pts, k=int(np.sum(quotas)), measure=measure,
+                          labels=labels, quotas=np.asarray(quotas)),
+        repro.ExecutionSpec(mode=mode, **exec_kw))
+
+
+def _fair_counters(pts, labels, quotas, **kw):
+    """Work counters of one traced facade run (separate from the untraced
+    timing pass; see benchmarks/common.COUNTER_KEYS)."""
+    from benchmarks.common import COUNTER_KEYS
+    tr = _fair(pts, labels, quotas, trace=True, **kw).telemetry
+    return {k: int(tr.counters[k]) for k in COUNTER_KEYS}
+
+
 def run_quality(quick: bool = True) -> List[Dict]:
     """Approximation ratio (full-input solve / core-set pipeline) vs m × k."""
     rows = []
@@ -53,8 +70,7 @@ def run_quality(quick: bool = True) -> List[Dict]:
             pts, labels = _labelled_dataset(n, m, seed=m)
             quotas = np.full(m, k_per_group, np.int64)
             t0 = time.perf_counter()
-            idx, got, _ = fair_diversity_maximize(pts, labels, quotas,
-                                                  measure, kprime=kprime)
+            got = _fair(pts, labels, quotas, measure, kprime=kprime).value
             dt = time.perf_counter() - t0
             if n <= 20_000:
                 # exact-candidate reference: solver on ALL points ((n, n)
@@ -65,8 +81,8 @@ def run_quality(quick: bool = True) -> List[Dict]:
             else:
                 # --full scale: a 4x-larger core-set run is the reference
                 # (the (n, n) matrix would be ~40 GB at n=100k)
-                _, ref, _ = fair_diversity_maximize(pts, labels, quotas,
-                                                    measure, kprime=4 * kprime)
+                ref = _fair(pts, labels, quotas, measure,
+                            kprime=4 * kprime).value
             rows.append({
                 "m": m, "k": k, "k'": kprime,
                 "approx_ratio": round(ref / max(got, 1e-12), 4),
@@ -158,18 +174,27 @@ def run_longtail(quick: bool = True, *, m: int = 12, alpha: float = 1.6
     kprime = max(2 * k, 32)
 
     def single():
-        return fair_diversity_maximize(pts, labels, quotas, "remote-edge",
-                                       kprime=kprime)[1]
+        return _fair(pts, labels, quotas, kprime=kprime).value
 
     def streaming():
-        sol, _ = fair_streaming_diversity(pts, labels, quotas,
-                                          kprime=kprime, chunk=4096)
-        return _value(sol, "remote-edge")
+        res = _fair(pts, labels, quotas, mode="streaming", kprime=kprime,
+                    chunk=4096)
+        return _value(res.solution, "remote-edge")
 
     def mapreduce():
-        return simulate_fair_mr(pts, labels, quotas, num_reducers=8,
-                                kprime=kprime)[2]
+        return _fair(pts, labels, quotas, mode="mapreduce", num_reducers=8,
+                     kprime=kprime).value
 
+    traced = {
+        "single-machine": lambda: _fair_counters(pts, labels, quotas,
+                                                 kprime=kprime),
+        "streaming": lambda: _fair_counters(pts, labels, quotas,
+                                            mode="streaming", kprime=kprime,
+                                            chunk=4096),
+        "mapreduce-8": lambda: _fair_counters(pts, labels, quotas,
+                                              mode="mapreduce",
+                                              num_reducers=8, kprime=kprime),
+    }
     rows = []
     ref_value = None
     for name, fn in (("single-machine", single), ("streaming", streaming),
@@ -187,6 +212,7 @@ def run_longtail(quick: bool = True, *, m: int = 12, alpha: float = 1.6
             "time_s": round(dt, 4),
             "throughput_pts_s": int(n / dt),
             "value_ratio_vs_single": round(value / max(ref_value, 1e-12), 4),
+            "counters": traced[name](),
         })
         print(f"[constrained-longtail] {name}: {dt:.3f}s "
               f"value_ratio={rows[-1]['value_ratio_vs_single']}")
@@ -224,16 +250,15 @@ def run_throughput(quick: bool = True) -> List[Dict]:
     pts, labels = _labelled_dataset(n, m, seed=17)
 
     def single():
-        return fair_diversity_maximize(pts, labels, quotas, "remote-edge",
-                                       kprime=kprime)
+        return _fair(pts, labels, quotas, kprime=kprime)
 
     def streaming():
-        return fair_streaming_diversity(pts, labels, quotas, kprime=kprime,
-                                        chunk=4096)
+        return _fair(pts, labels, quotas, mode="streaming", kprime=kprime,
+                     chunk=4096)
 
     def mapreduce():
-        return simulate_fair_mr(pts, labels, quotas, num_reducers=8,
-                                kprime=kprime)
+        return _fair(pts, labels, quotas, mode="mapreduce", num_reducers=8,
+                     kprime=kprime)
 
     for name, fn in (("single-machine", single), ("streaming", streaming),
                      ("mapreduce-8", mapreduce)):

@@ -24,8 +24,10 @@ import jax
 import jax.numpy as jnp
 from repro.constrained.coreset import (_grouped_gmm_impl, _grouped_select_impl,
                                        pad_for_engine)
-from repro.core.gmm import gmm, gmm_batched
+from repro.core.gmm import gmm, gmm_batched, schedule_fold_sizes
 from repro.data import clustered_dataset
+
+from benchmarks.common import counters_of
 
 
 def _time(fn, repeats: int = 2) -> float:
@@ -57,8 +59,15 @@ def run(quick: bool = True, *, n: Optional[int] = None, d: int = 8,
 
     rows: List[Dict] = []
 
-    def add(path, t, sweeps, groups, kk, bb):
+    def add(path, t, sweeps, groups, kk, bb, fn):
         bs = _bytes_swept(n, d, sweeps, groups)
+        counters = counters_of(fn)
+        if counters["distance_evals"] == 0:
+            # jitted-impl leg (no host driver): charge the sweep model
+            folded = (kk if bb == 1
+                      else sum(schedule_fold_sizes(((bb, kk // bb),))))
+            counters.update(distance_evals=n * folded * groups,
+                            bytes_swept=bs, device_dispatches=1)
         rows.append({
             "path": path, "n": n, "d": d, "k": kk, "b": bb, "m": groups,
             "time_s": round(t, 4),
@@ -66,26 +75,27 @@ def run(quick: bool = True, *, n: Optional[int] = None, d: int = 8,
             "sweeps": sweeps,
             "bytes_swept_gb": round(bs / 1e9, 4),
             "effective_gbps": round(bs / 1e9 / max(t, 1e-9), 2),
+            "counters": counters,
         })
         print(f"[gmm-engine] {path:<22} {t:8.3f}s  sweeps={sweeps:<4}"
               f" ~{rows[-1]['effective_gbps']}GB/s")
 
     # -- unconstrained: sequential vs batched vs batched+chunked ----------
-    t = _time(lambda: gmm(pts, k).min_dist)
-    add("gmm-b1", t, k, 1, k, 1)
-    t = _time(lambda: gmm_batched(pts, k, b=b)[2])
-    add("gmm-batched", t, k // b + 1, 1, k, b)
-    t = _time(lambda: gmm_batched(pts, k, b=b, chunk=chunk)[2])
-    add("gmm-batched-chunked", t, k // b + 1, 1, k, b)
+    fn = lambda: gmm(pts, k).min_dist
+    add("gmm-b1", _time(fn), k, 1, k, 1, fn)
+    fn = lambda: gmm_batched(pts, k, b=b)[2]
+    add("gmm-batched", _time(fn), k // b + 1, 1, k, b, fn)
+    fn = lambda: gmm_batched(pts, k, b=b, chunk=chunk)[2]
+    add("gmm-batched-chunked", _time(fn), k // b + 1, 1, k, b, fn)
 
     # -- grouped (constrained): vmapped b=1 vs group-blocked engine -------
-    t = _time(lambda: _grouped_gmm_impl(pts, lab_j, m, kprime,
-                                        "euclidean", False)[0])
-    add("grouped-vmap-b1", t, kprime, m, kprime, 1)
+    fn = lambda: _grouped_gmm_impl(pts, lab_j, m, kprime,
+                                   "euclidean", False)[0]
+    add("grouped-vmap-b1", _time(fn), kprime, m, kprime, 1, fn)
     pp, ll, ch = pad_for_engine(pts, lab_j, chunk)
-    t = _time(lambda: _grouped_select_impl(pp, ll, m, kprime, b, ch,
-                                           "euclidean", False)[0])
-    add("grouped-blocked", t, kprime // b + 1, m, kprime, b)
+    fn = lambda: _grouped_select_impl(pp, ll, m, kprime, b, ch,
+                                      "euclidean", False)[0]
+    add("grouped-blocked", _time(fn), kprime // b + 1, m, kprime, b, fn)
 
     return rows
 

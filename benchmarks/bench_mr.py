@@ -7,9 +7,17 @@ from typing import Dict, List
 
 import numpy as np
 
+import repro
 from repro.core.afz import afz_mr_clique
-from repro.core.distributed import simulate_mr
 from repro.data import sphere_dataset
+
+
+def _simulate_mr(pts, k, measure, **exec_kw):
+    """Simulated-reducer MR run through the facade (repro.diversify)."""
+    res = repro.diversify(pts, k=k, measure=measure,
+                          execution=repro.ExecutionSpec(mode="mapreduce",
+                                                        **exec_kw))
+    return res.solution, res.value
 
 
 def run_mr_approx(quick: bool = True) -> List[Dict]:
@@ -20,15 +28,15 @@ def run_mr_approx(quick: bool = True) -> List[Dict]:
     # reference: best over generous runs (paper's convention)
     ref = 0.0
     for r in (8, 16):
-        _, v = simulate_mr(pts, k, "remote-edge", num_reducers=r,
-                           kprime=512, partition="random")
+        _, v = _simulate_mr(pts, k, "remote-edge", num_reducers=r,
+                            kprime=512, partition="random")
         ref = max(ref, v)
     for parallelism in (2, 4, 8, 16):
         for kp in (k, 2 * k, 4 * k, 8 * k):
             for part in ("random", "adversarial"):
-                _, v = simulate_mr(pts, k, "remote-edge",
-                                   num_reducers=parallelism, kprime=kp,
-                                   partition=part)
+                _, v = _simulate_mr(pts, k, "remote-edge",
+                                    num_reducers=parallelism, kprime=kp,
+                                    partition=part)
                 rows.append({"reducers": parallelism, "k'": kp,
                              "partition": part,
                              "approx_ratio": round(ref / max(v, 1e-12), 4)})
@@ -49,8 +57,8 @@ def run_afz(quick: bool = True) -> List[Dict]:
     pts = sphere_dataset(n, k=16, dim=2, seed=6)
     for k in (4, 6, 8):
         t0 = time.perf_counter()
-        _, v_cppu = simulate_mr(pts, k, "remote-clique",
-                                num_reducers=reducers, kprime=128)
+        _, v_cppu = _simulate_mr(pts, k, "remote-clique",
+                                 num_reducers=reducers, kprime=128)
         t_cppu = time.perf_counter() - t0
         t0 = time.perf_counter()
         _, v_afz = afz_mr_clique(pts, k, kprime=128, num_reducers=reducers)
@@ -86,8 +94,8 @@ def run_scalability(quick: bool = True) -> List[Dict]:
                 cs = smm.finalize()
                 _ = solve("remote-edge", cs.compact(), 128)
             else:
-                simulate_mr(pts, 128, "remote-edge", num_reducers=p,
-                            kprime=kp)
+                _simulate_mr(pts, 128, "remote-edge", num_reducers=p,
+                             kprime=kp)
             dt = time.perf_counter() - t0
             rows.append({"n": n, "processors": p,
                          "mode": "streaming" if p == 1 else "mapreduce",

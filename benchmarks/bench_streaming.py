@@ -14,8 +14,8 @@ from typing import Dict, List
 
 import numpy as np
 
+import repro
 from repro.core import StreamingCoreset, diversity_of_subset, solve
-from repro.core.distributed import simulate_mr
 from repro.core.metrics import get_metric
 from repro.core.measures import diversity
 from repro.data import sphere_dataset
@@ -35,10 +35,13 @@ def best_known(points, k, measure, metric, kprime=2048):
     """The paper's reference: best of several large-k' MR runs."""
     best = 0.0
     for reducers in (4, 8):
-        _, v = simulate_mr(points, k, measure, num_reducers=reducers,
-                           kprime=min(kprime, points.shape[0] // reducers),
-                           metric=metric)
-        best = max(best, v)
+        res = repro.diversify(
+            repro.ProblemSpec(points=points, k=k, measure=measure,
+                              metric=metric),
+            repro.ExecutionSpec(mode="mapreduce", num_reducers=reducers,
+                                kprime=min(kprime,
+                                           points.shape[0] // reducers)))
+        best = max(best, res.value)
     return best
 
 

@@ -33,3 +33,26 @@ def fmt(x, nd=4):
     if isinstance(x, float):
         return f"{x:.{nd}f}"
     return str(x)
+
+
+#: counters the bench artifacts carry per row (benchmarks/compare.py gates
+#: host_syncs / bytes_swept at +10%); see repro.obs COUNTER_NAMES.
+COUNTER_KEYS = ("distance_evals", "bytes_swept", "host_syncs",
+                "device_dispatches")
+
+
+def counters_of(fn: Callable, keys=COUNTER_KEYS) -> Dict[str, int]:
+    """Run ``fn`` once under an enabled ``RunTrace`` and return its work
+    counters — the untraced timing passes stay untraced, so the counters
+    ride in the artifact without perturbing the wall-clock rows."""
+    import jax
+    from repro.obs.trace import RunTrace, activate
+
+    tr = RunTrace(enabled=True)
+    with activate(tr):
+        out = fn()
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+    return {k: int(tr.counters[k]) for k in keys}

@@ -78,12 +78,23 @@ def normalized_times(doc: dict, spec: dict) -> Dict[str, float]:
     return {_key(r, spec["key"]): r["time_s"] / ref_t for r in rows}
 
 
+#: work counters gated per row (repro.obs); unlike wall-clock these are
+#: deterministic, so the threshold is tight and there is no min-time waiver.
+GATED_COUNTERS = ("host_syncs", "bytes_swept")
+COUNTER_THRESHOLD = 0.10
+
+
 def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
                 min_time: float = 0.05) -> Tuple[List[dict], List[str]]:
     """Returns (per-row records, regression messages).  Rows whose absolute
     wall-clock is below ``min_time`` in both runs are report-only: a 10 ms
     row swings far past any threshold on timer/load noise alone, and the
     engine-shape coverage the gate protects lives in the heavyweight rows.
+
+    Rows carrying a ``counters`` dict are additionally gated on
+    ``GATED_COUNTERS``: a >10% increase in host round-trips or modeled bytes
+    swept fails even when the wall-clock hid it (counters are exact, so
+    noise waivers do not apply).
     """
     bn, fn = normalized_times(base, spec), normalized_times(fresh, spec)
     braw = {_key(r, spec["key"]): r for r in base["rows"]}
@@ -110,6 +121,17 @@ def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
                     f"{key}: normalized time {bn[key]:.3f} -> {fn[key]:.3f} "
                     f"(+{100 * rec['delta']:.0f}% > "
                     f"{100 * threshold:.0f}% threshold)")
+        bc = (braw.get(key) or {}).get("counters") or {}
+        fc = fraw[key].get("counters") or {}
+        for cname in GATED_COUNTERS:
+            if cname in bc and cname in fc and bc[cname] > 0:
+                cdelta = fc[cname] / bc[cname] - 1.0
+                rec[f"{cname}_delta"] = cdelta
+                if cdelta > COUNTER_THRESHOLD:
+                    regressions.append(
+                        f"{key}: {cname} {bc[cname]:,} -> {fc[cname]:,} "
+                        f"(+{100 * cdelta:.0f}% > "
+                        f"{100 * COUNTER_THRESHOLD:.0f}% counter threshold)")
         records.append(rec)
     # a row the baseline gates that vanished from the fresh run is itself a
     # regression (lost coverage must not read as green)

@@ -3,8 +3,8 @@ constraints (the constrained-diversity subsystem end to end).
 
 A synthetic pool mixes examples from several "domains" (code, chat, web, …)
 in skewed proportions.  Plain diversity selection follows the embedding
-geometry and can starve small domains; ``select_diverse(...,
-group_labels=...)`` constrains the pick so every domain lands its quota —
+geometry and can starve small domains; ``repro.diversify(...)`` with
+``labels=``/``quotas=`` constrains the pick so every domain lands its quota —
 maximally diverse *within* that fairness constraint (per-group core-sets +
 feasible-greedy/local-search, see ``repro.constrained``).  Beyond exact
 quotas, the matroid oracle layer expresses SLO bands (``PartitionMatroid``
@@ -17,8 +17,21 @@ import argparse
 
 import numpy as np
 
+import repro
 from repro.constrained import PartitionMatroid, TransversalMatroid
-from repro.data import balanced_quotas, embed_examples, select_diverse
+from repro.data import balanced_quotas, embed_examples
+
+
+def _select(emb, keep, *, num_reducers=1, **problem_kw):
+    """Diverse-pick row indices through the facade."""
+    res = repro.diversify(
+        repro.ProblemSpec(points=emb, k=keep, measure="remote-edge",
+                          **problem_kw),
+        repro.ExecutionSpec(
+            mode="mapreduce" if num_reducers > 1 else "batch",
+            num_reducers=num_reducers if num_reducers > 1 else None,
+            kprime=64))
+    return res.indices
 
 DOMAINS = ["code", "chat", "web", "papers"]
 MIX = [0.55, 0.25, 0.15, 0.05]          # skewed pool: papers is tiny
@@ -49,14 +62,13 @@ def main():
         print(f"  {name:8s} {c:5d}  ({c / args.pool:5.1%})")
 
     # unconstrained pick: whatever the geometry favors
-    plain = select_diverse(emb, args.keep, measure="remote-edge", kprime=64)
+    plain = _select(emb, args.keep)
     plain_counts = np.bincount(labels[plain], minlength=len(DOMAINS))
 
     # fair pick: balanced quotas across domains (capped by domain size)
     quotas = balanced_quotas(labels, args.keep)
-    fair = select_diverse(emb, args.keep, measure="remote-edge", kprime=64,
-                          group_labels=labels, quotas=quotas,
-                          num_reducers=args.reducers)
+    fair = _select(emb, args.keep, labels=labels, quotas=quotas,
+                   num_reducers=args.reducers)
     fair_counts = np.bincount(labels[fair], minlength=len(DOMAINS))
 
     print(f"\nselected {args.keep} examples:")
@@ -72,8 +84,7 @@ def main():
     band = PartitionMatroid(
         q_min=[0, 0, 0, min(2, int(counts[3]))],
         q_max=[args.keep // 2] * len(DOMAINS), k=args.keep)
-    banded = select_diverse(emb, args.keep, measure="remote-edge", kprime=64,
-                            group_labels=labels, matroid=band)
+    banded = _select(emb, args.keep, labels=labels, matroid=band)
     banded_counts = np.bincount(labels[banded], minlength=len(DOMAINS))
     assert band.basis_feasible(banded_counts)
 
@@ -82,8 +93,7 @@ def main():
     elig = np.ones((len(DOMAINS), args.keep), bool)
     elig[2:, : args.keep // 4] = False       # web/papers barred from 1st 1/4
     trans = TransversalMatroid(elig)
-    slotted = select_diverse(emb, args.keep, measure="remote-edge",
-                             kprime=64, group_labels=labels, matroid=trans)
+    slotted = _select(emb, args.keep, labels=labels, matroid=trans)
     assert trans.independence_oracle(labels[slotted])
 
     print(f"\nselected {args.keep} examples (banded = q_min/q_max SLO, "

@@ -5,7 +5,7 @@ parallelism sweep and the adversarial-partitioning experiment of §7.2.
 """
 import time
 
-from repro.core.distributed import simulate_mr
+import repro
 from repro.data import sphere_dataset
 
 
@@ -18,16 +18,20 @@ def main():
         for kprime in (64, 256):
             for part in ("random", "adversarial"):
                 t0 = time.perf_counter()
-                _, v = simulate_mr(pts, k, "remote-edge",
-                                   num_reducers=reducers, kprime=kprime,
-                                   partition=part)
+                v = repro.diversify(
+                    pts, k=k, measure="remote-edge",
+                    execution=repro.ExecutionSpec(
+                        mode="mapreduce", num_reducers=reducers,
+                        kprime=kprime, partition=part)).value
                 dt = time.perf_counter() - t0
                 print(f"{reducers:8d}  {kprime:4d}  {part:12s}  "
                       f"{v:11.4f}   {dt:5.2f}s")
     # 3-round generalized scheme for remote-clique (Thm 10)
     t0 = time.perf_counter()
-    _, v3 = simulate_mr(pts, k, "remote-clique", num_reducers=16, kprime=128,
-                        generalized=True)
+    v3 = repro.diversify(
+        pts, k=k, measure="remote-clique",
+        execution=repro.ExecutionSpec(mode="mapreduce", num_reducers=16,
+                                      kprime=128, generalized=True)).value
     print(f"\n3-round GMM-GEN remote-clique: {v3:.2f} "
           f"({time.perf_counter() - t0:.2f}s)")
 

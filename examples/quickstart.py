@@ -4,7 +4,8 @@
 """
 import numpy as np
 
-from repro.core import MEASURES, SEQ_ALPHA, diversity_maximize
+import repro
+from repro.core import MEASURES, SEQ_ALPHA
 from repro.data import sphere_dataset
 
 def main():
@@ -12,12 +13,14 @@ def main():
     pts = sphere_dataset(n=20_000, k=8, dim=3, seed=0)
     print(f"dataset: {pts.shape[0]} points in R^{pts.shape[1]}")
     for measure in MEASURES:
-        sol, value, cs = diversity_maximize(pts, k=8, measure=measure,
-                                            kprime=64)
-        print(f"{measure:20s} value={value:8.4f}  "
-              f"(coreset {cs.size} pts, sequential alpha={SEQ_ALPHA[measure]})")
+        res = repro.diversify(pts, k=8, measure=measure,
+                              execution=repro.ExecutionSpec(kprime=64))
+        print(f"{measure:20s} value={res.value:8.4f}  "
+              f"(coreset {res.coreset.size} pts, "
+              f"sequential alpha={SEQ_ALPHA[measure]})")
     # the planted points live on the unit sphere: check we found them
-    sol, value, _ = diversity_maximize(pts, 8, "remote-edge", kprime=64)
+    sol = repro.diversify(pts, k=8, measure="remote-edge",
+                          execution=repro.ExecutionSpec(kprime=64)).solution
     print("\nremote-edge solution radii (planted points have r=1):")
     print(np.round(np.linalg.norm(sol, axis=1), 3))
 

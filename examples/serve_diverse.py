@@ -14,7 +14,8 @@ import repro.models as M
 from repro.configs import get_config
 from repro.data import embed_examples
 from repro.models.common import ShardingRules
-from repro.serving import Request, ServingEngine, diverse_rerank
+import repro
+from repro.serving import Request, ServingEngine
 
 RULES = ShardingRules(batch=(), heads=None, kv_heads=None, d_ff=None,
                       vocab=None, experts=None, fsdp=None, head_dim=None,
@@ -43,7 +44,7 @@ def main():
 
     # embed candidates (token histogram sketch) and pick the k most diverse
     emb = embed_examples(outs, dim=16)
-    top = diverse_rerank(emb, args.k, measure="remote-edge")
+    top = repro.diversify(emb, k=args.k, measure="remote-edge").indices
     print(f"\n{args.k} most diverse results (indices {top.tolist()}):")
     for i in top:
         print(f"  candidate {i:2d}: {outs[i].tolist()}")

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import repro.models as M
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.data import embed_examples, lm_batch, select_diverse
+import repro
+from repro.data import embed_examples, lm_batch
 from repro.distributed import FailureInjector, TrainingSupervisor
 from repro.models.common import ShardingRules
 from repro.train import AdamW, cosine_schedule, make_train_step
@@ -47,8 +48,10 @@ def main():
     rng = np.random.default_rng(0)
     pool = rng.integers(0, cfg.vocab_size, size=(args.pool, args.seq + 1))
     emb = embed_examples(pool[:, :-1], dim=16)
-    keep_idx = select_diverse(emb, args.keep, measure="remote-edge",
-                              num_reducers=4, kprime=64)
+    keep_idx = repro.diversify(
+        emb, k=args.keep, measure="remote-edge",
+        execution=repro.ExecutionSpec(mode="mapreduce", num_reducers=4,
+                                      kprime=64)).indices
     curated = pool[keep_idx]
     print(f"curated {len(keep_idx)}/{args.pool} examples by remote-edge "
           f"diversity")

@@ -133,6 +133,11 @@ class ExecutionSpec:
     smm_mode: Optional[str] = None
     tau: Optional[float] = None
     cliff: Optional[float] = None
+    # observability: False = phase wall-clocks only (near-zero overhead),
+    # True = full RunTrace (counters + nested spans + profiler annotations),
+    # "reducers" = additionally time each simulated-MR reducer sequentially,
+    # "auto" = read the REPRO_TRACE env var.  See ``repro.obs``.
+    trace: Any = "auto"
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -147,7 +152,9 @@ class DiversityResult:
     the ``RadiusCertificate`` measured by the engine (None when every knob
     was pinned to the certificate-free legacy path), ``coreset`` the
     core-set container the solver ran on (when the path materializes one),
-    and ``telemetry`` the per-phase wall-clock log.
+    and ``telemetry`` the run's ``repro.obs.RunTrace`` — a Mapping whose
+    dict view keeps the legacy keys (``telemetry["phases"]`` etc.), with
+    spans and counters on top when tracing was enabled.
     """
     solution: np.ndarray
     value: float
@@ -155,7 +162,7 @@ class DiversityResult:
     labels: Optional[np.ndarray]
     cert: Any
     coreset: Any
-    telemetry: dict
+    telemetry: Any              # repro.obs.RunTrace (dict-compatible)
     plan: "Plan"
 
     @property
@@ -223,8 +230,20 @@ class Plan:
     n: Optional[int]
     d: Optional[int]
 
-    def explain(self) -> str:
-        """Stable human-readable rendering (golden-tested)."""
+    @property
+    def trace(self):
+        """The ``repro.obs.RunTrace`` of the last ``execute()`` of this plan
+        (None until the plan has run)."""
+        return getattr(self, "_trace", None)
+
+    def explain(self, actual: bool = False) -> str:
+        """Stable human-readable rendering (golden-tested).
+
+        ``actual=True`` appends the self-grading section: predicted vs.
+        measured core-set rows/bytes and phase times with error ratios,
+        read from the trace the last ``execute()`` attached — the empirical
+        feedback loop the roofline cost model calibrates against.
+        """
         k = self.knobs
         from repro.core.sequential import SEQ_ALPHA
 
@@ -254,7 +273,34 @@ class Plan:
             + (f", feasible greedy + {self.execution.swap_rounds}"
                " swap rounds" if self.constrained else ""),
         ]
+        if actual:
+            lines.extend(self._explain_actual())
         return "\n".join(lines)
+
+    def _explain_actual(self):
+        """The predicted-vs-measured rows of ``explain(actual=True)``."""
+        tr = self.trace
+        if tr is None:
+            return ["  measured: (no trace — run plan.execute() first)"]
+        ph = " ".join(f"{p['name']}={p['seconds']:.4f}s" for p in tr.phases)
+        lines = [f"  measured: {ph} (total {tr.total_seconds():.4f}s)"]
+        rows = tr.extras.get("coreset_size")
+        if rows is not None and self.coreset_rows:
+            err_r = rows / self.coreset_rows
+            line = (f"  measured coreset: {rows} rows"
+                    f" (predicted {self.coreset_rows}, x{err_r:.2f})")
+            if self.coreset_bytes and self.d is not None:
+                bts = rows * self.d * 4 + (rows * 4 if self.variant == "gen"
+                                           else 0)
+                line += (f", {_fmt_bytes(bts)} (predicted"
+                         f" {_fmt_bytes(self.coreset_bytes)},"
+                         f" x{bts / self.coreset_bytes:.2f})")
+            lines.append(line)
+        if tr.counters:
+            cs = " ".join(f"{k}={tr.counters[k]:,}"
+                          for k in sorted(tr.counters))
+            lines.append(f"  counters: {cs}")
+        return lines
 
     def execute(self) -> DiversityResult:
         return _execute(self)
@@ -468,21 +514,10 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
 # execution
 # --------------------------------------------------------------------------
 
-class _Phases:
-    """Per-phase wall-clock telemetry collector."""
-
-    def __init__(self):
-        self.rows = []
-
-    def add(self, name: str, t0: float) -> float:
-        t1 = time.perf_counter()
-        self.rows.append({"name": name, "seconds": t1 - t0})
-        return t1
-
-    def telemetry(self, **extra) -> dict:
-        out = {"phases": self.rows}
-        out.update(extra)
-        return out
+# Per-phase telemetry is a ``repro.obs.RunTrace`` (the ``_Phases`` collector
+# it replaced timed async dispatch; ``RunTrace.phase`` fences each boundary
+# with ``block_until_ready`` so the rows measure execution).  The dict view
+# keeps the legacy keys: {"phases": [{"name", "seconds"}, ...], "mode", ...}.
 
 
 def _chunks_of(problem: ProblemSpec, chunk: int, constrained: bool):
@@ -537,7 +572,7 @@ def _indices_of(plan_: Plan, sol, sol_labels=None):
     return match
 
 
-def _run_batch(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_batch(plan_: Plan, tr) -> DiversityResult:
     import jax.numpy as jnp
     from repro.core.coreset import GeneralizedCoreset, build_coreset
     from repro.core.sequential import solve, solve_on_coreset
@@ -552,16 +587,16 @@ def _run_batch(plan_: Plan, ph: _Phases) -> DiversityResult:
             points=jnp.asarray(pts),
             multiplicity=jnp.asarray(np.asarray(p.weights), jnp.int32),
             radius=jnp.asarray(0.0, jnp.float32))
-        t = ph.add("coreset", t)
+        t = tr.phase("coreset", t, sync=cs)
         cpts, mult = cs.compact()
         idx = solve(p.measure, cpts, p.k, weights=mult, metric=p.metric)
         sol = cpts[idx]
-        t = ph.add("solve", t)
+        t = tr.phase("solve", t, sync=sol)
         value = _value_of(sol, p.measure, p.metric)
-        ph.add("value", t)
+        tr.phase("value", t)
         return DiversityResult(solution=sol, value=value, _indices=None,
                                labels=None, cert=cs.cert, coreset=cs,
-                               telemetry=ph.telemetry(mode="batch"),
+                               telemetry=tr.annotate(mode="batch"),
                                plan=plan_)
     cs = build_coreset(pts, p.k, kb["kprime"], p.measure, metric=p.metric,
                        use_pallas=kb["use_pallas"],
@@ -570,19 +605,19 @@ def _run_batch(plan_: Plan, ph: _Phases) -> DiversityResult:
                                                else kb["eps"]),
                        schedule=kb["schedule"], tau=plan_.execution.tau,
                        cliff=plan_.execution.cliff)
-    t = ph.add("coreset", t)
+    t = tr.phase("coreset", t, sync=cs)
     sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
-    t = ph.add("solve", t)
+    t = tr.phase("solve", t, sync=sol)
     value = _value_of(sol, p.measure, p.metric)
-    ph.add("value", t)
+    tr.phase("value", t)
     return DiversityResult(
         solution=sol, value=value, _indices=_indices_of(plan_, sol),
         labels=None, cert=cs.cert, coreset=cs,
-        telemetry=ph.telemetry(mode="batch", coreset_size=getattr(
+        telemetry=tr.annotate(mode="batch", coreset_size=getattr(
             cs, "size", None)), plan=plan_)
 
 
-def _run_batch_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_batch_constrained(plan_: Plan, tr) -> DiversityResult:
     from repro.constrained import grouped_coreset
     from repro.constrained.solver import solve_and_value
 
@@ -597,22 +632,22 @@ def _run_batch_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
                          chunk=kb["chunk"], schedule=kb["schedule"],
                          eps=kb["eps"], tau=plan_.execution.tau,
                          cliff=plan_.execution.cliff)
-    t = ph.add("coreset", t)
+    t = tr.phase("coreset", t, sync=cs)
     cand_idx, cand_labels = cs.flatten()
     sel, value = solve_and_value(pts[cand_idx], cand_labels,
                                  measure=p.measure, matroid=mat,
                                  metric=p.metric,
                                  swap_rounds=plan_.execution.swap_rounds)
-    ph.add("solve", t)
+    tr.phase("solve", t, sync=sel)
     indices = np.asarray(cand_idx[sel])
     return DiversityResult(
         solution=pts[indices], value=value, _indices=indices,
         labels=labels_np[indices], cert=cs.cert, coreset=cs,
-        telemetry=ph.telemetry(mode="batch", coreset_size=cs.size),
+        telemetry=tr.annotate(mode="batch", coreset_size=cs.size),
         plan=plan_)
 
 
-def _run_streaming(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_streaming(plan_: Plan, tr) -> DiversityResult:
     from repro.core.smm import StreamingCoreset
     from repro.core.sequential import solve_on_coreset
 
@@ -632,22 +667,24 @@ def _run_streaming(plan_: Plan, ph: _Phases) -> DiversityResult:
         n_seen += chunk.shape[0]
     if smm is None:
         raise ValueError("empty stream")
-    t = ph.add("stream", t)
+    t = tr.phase("stream", t, sync=smm.state)
     cs = smm.finalize()
-    t = ph.add("finalize", t)
+    t = tr.phase("finalize", t, sync=cs)
     sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
-    t = ph.add("solve", t)
+    t = tr.phase("solve", t, sync=sol)
     value = _value_of(sol, p.measure, p.metric)
-    ph.add("value", t)
+    tr.phase("value", t)
     return DiversityResult(
         solution=np.asarray(sol), value=value,
         _indices=_indices_of(plan_, sol), labels=None,
         cert=cs.cert, coreset=cs,
-        telemetry=ph.telemetry(mode="streaming", n_seen=n_seen,
-                               merges=len(smm.phase_log)), plan=plan_)
+        telemetry=tr.annotate(mode="streaming", n_seen=n_seen,
+                              merges=len(smm.phase_log),
+                              coreset_size=getattr(cs, "size", None)),
+        plan=plan_)
 
 
-def _run_streaming_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_streaming_constrained(plan_: Plan, tr) -> DiversityResult:
     from repro.constrained import FairStreamingCoreset
     from repro.constrained.solver import solve_and_value
 
@@ -667,23 +704,24 @@ def _run_streaming_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
         n_seen += chunk.shape[0]
     if smm is None:
         raise ValueError("empty stream")
-    t = ph.add("stream", t)
+    t = tr.phase("stream", t, sync=getattr(smm, "state", None))
     cand_pts, cand_labels = smm.finalize()
     cert = smm.certificate()
-    t = ph.add("finalize", t)
+    t = tr.phase("finalize", t, sync=cand_pts)
     sel, value = solve_and_value(cand_pts, cand_labels, measure=p.measure,
                                  matroid=mat, metric=p.metric,
                                  swap_rounds=plan_.execution.swap_rounds)
-    ph.add("solve", t)
+    tr.phase("solve", t, sync=sel)
     sol, sol_lab = cand_pts[sel], cand_labels[sel]
     return DiversityResult(
         solution=np.asarray(sol), value=value,
         _indices=_indices_of(plan_, sol, sol_labels=sol_lab),
         labels=np.asarray(sol_lab), cert=cert, coreset=None,
-        telemetry=ph.telemetry(mode="streaming", n_seen=n_seen), plan=plan_)
+        telemetry=tr.annotate(mode="streaming", n_seen=n_seen,
+                              coreset_size=len(cand_pts)), plan=plan_)
 
 
-def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_mapreduce(plan_: Plan, tr) -> DiversityResult:
     p, kb, ex = plan_.problem, plan_.knobs, plan_.execution
     eps = 0.1 if kb["eps"] is None else kb["eps"]
     t = time.perf_counter()
@@ -697,11 +735,11 @@ def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
                                       use_pallas=kb["use_pallas"], b=kb["b"],
                                       chunk=kb["chunk"], eps=eps, tau=ex.tau,
                                       cliff=ex.cliff)
-            t = ph.add("rounds", t)
+            t = tr.phase("rounds", t, sync=cs)
             sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
-            t = ph.add("solve", t)
+            t = tr.phase("solve", t, sync=sol)
             value = _value_of(sol, p.measure, p.metric)
-            ph.add("value", t)
+            tr.phase("value", t)
         else:
             from repro.core.distributed import _mr_diversity_impl
 
@@ -712,7 +750,7 @@ def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
                 three_round=ex.three_round or plan_.variant == "gen",
                 b=kb["b"], chunk=kb["chunk"], eps=eps, tau=ex.tau,
                 cliff=ex.cliff)
-            t = ph.add("rounds", t)
+            t = tr.phase("rounds", t, sync=sol)
     else:
         from repro.core.distributed import _simulate_mr_impl
 
@@ -722,7 +760,7 @@ def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
             metric=p.metric, generalized=plan_.variant == "gen",
             partition=ex.partition, seed=ex.seed, b=kb["b"],
             chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
-        t = ph.add("rounds", t)
+        t = tr.phase("rounds", t, sync=sol)
     # three-round / generalized instantiation may fall back to kernel-point
     # replicas that are not input rows — no index recovery there
     indices = (None if plan_.variant == "gen" or ex.three_round
@@ -730,10 +768,12 @@ def _run_mapreduce(plan_: Plan, ph: _Phases) -> DiversityResult:
     return DiversityResult(
         solution=np.asarray(sol), value=value, _indices=indices, labels=None,
         cert=getattr(cs, "cert", None), coreset=cs,
-        telemetry=ph.telemetry(mode="mapreduce"), plan=plan_)
+        telemetry=tr.annotate(mode="mapreduce",
+                              coreset_size=getattr(cs, "size", None)),
+        plan=plan_)
 
 
-def _run_mapreduce_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
+def _run_mapreduce_constrained(plan_: Plan, tr) -> DiversityResult:
     p, kb, ex, mat = plan_.problem, plan_.knobs, plan_.execution, plan_.matroid
     eps = 0.1 if kb["eps"] is None else kb["eps"]
     t = time.perf_counter()
@@ -755,16 +795,18 @@ def _run_mapreduce_constrained(plan_: Plan, ph: _Phases) -> DiversityResult:
             kprime=kb["kprime"], metric=p.metric, partition=ex.partition,
             seed=ex.seed, swap_rounds=ex.swap_rounds, b=kb["b"],
             chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
-    ph.add("rounds", t)
+    tr.phase("rounds", t, sync=sol)
     return DiversityResult(
         solution=np.asarray(sol), value=value,
         _indices=_indices_of(plan_, sol, sol_labels=sol_lab),
         labels=np.asarray(sol_lab), cert=cert, coreset=None,
-        telemetry=ph.telemetry(mode="mapreduce"), plan=plan_)
+        telemetry=tr.annotate(mode="mapreduce"), plan=plan_)
 
 
 def _execute(plan_: Plan) -> DiversityResult:
-    ph = _Phases()
+    from repro import obs
+
+    tr = obs.trace_from_spec(plan_.execution.trace)
     if plan_.mode == "batch":
         run = _run_batch_constrained if plan_.constrained else _run_batch
     elif plan_.mode == "streaming":
@@ -773,7 +815,15 @@ def _execute(plan_: Plan) -> DiversityResult:
     else:
         run = (_run_mapreduce_constrained if plan_.constrained
                else _run_mapreduce)
-    return run(plan_, ph)
+    if tr.enabled:
+        with obs.activate(tr):
+            res = run(plan_, tr)
+    else:
+        res = run(plan_, tr)
+    # self-grading: explain(actual=True) reads the measured trace back off
+    # the plan (frozen dataclass -> attach outside __init__)
+    object.__setattr__(plan_, "_trace", tr)
+    return res
 
 
 def diversify(problem, execution: Optional[ExecutionSpec] = None, *,

@@ -53,6 +53,7 @@ from repro.core.gmm import (_gmm_impl, _schedule_select_impl,
                             pad_for_engine)
 from repro.core.measures import NEEDS_INJECTIVE
 from repro.core.metrics import get_metric
+from repro.obs.trace import counting as _counting
 
 
 class GroupedCoreset(NamedTuple):
@@ -354,6 +355,15 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
     metric_name = get_metric(metric).name
     if schedule is None:
         b = effective_block(kprime, b)
+    if _counting():
+        from repro.core.gmm import schedule_fold_sizes
+        from repro.obs.trace import count as _count, sweep_bytes
+        folds = schedule_fold_sizes(schedule if schedule is not None
+                                    else ((b, kprime // b),))
+        _count("device_dispatches")
+        _count("distance_evals", n * sum(folds))
+        _count("bytes_swept", sweep_bytes(n, int(points.shape[1]),
+                                          sweeps=len(folds), m=m))
     points, labels, chunk = pad_for_engine(points, labels, chunk)
     if measure in NEEDS_INJECTIVE:
         idx, valid, radius, counts = _grouped_ext_blocked_impl(

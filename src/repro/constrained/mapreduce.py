@@ -37,6 +37,9 @@ from repro.core.measures import NEEDS_INJECTIVE
 from repro.core.metrics import get_metric
 
 from repro.core.gmm import effective_block
+from repro.obs.trace import (active as _obs_active, count as _count,
+                             counting as _counting,
+                             reducer_detail as _reducer_detail, span as _span)
 
 from .coreset import (_grouped_ext_blocked_impl, _grouped_select_impl,
                       pad_for_engine)
@@ -135,8 +138,15 @@ def mr_grouped_coreset(points, labels, m: Optional[int] = None,
 
     fn = shard_map(body, mesh=mesh, in_specs=(P(axes), P(axes)),
                    out_specs=(P(), P(), P(), P()), check_vma=False)
-    g_pts, g_lab, g_valid, g_rad = jax.jit(fn)(jnp.asarray(points),
-                                               jnp.asarray(labels, jnp.int32))
+    with _span("mr.round1", reducers=nshards, kprime=kprime, groups=m):
+        g_pts, g_lab, g_valid, g_rad = jax.jit(fn)(
+            jnp.asarray(points), jnp.asarray(labels, jnp.int32))
+        _count("device_dispatches")
+        if _counting():
+            from repro.core.distributed import _count_round1
+            _count_round1(nshards, n // nshards, points.shape[1], kprime, b,
+                          schedule, mode)
+            jax.block_until_ready(g_rad)
     return FairCoreset(points=g_pts, labels=g_lab, valid=g_valid,
                        radius=g_rad, cert=cert)
 
@@ -222,6 +232,33 @@ def _sim_round1(shards, slabels, m: int, k: int, kprime: int,
     return jax.vmap(one)(shards, slabels)
 
 
+def _sim_round1_detail(shards, slabels, m: int, k: int, kprime: int,
+                       metric_name: str, mode: str, b: int = 1,
+                       chunk: int = 0, schedule=None):
+    """Per-reducer observability path — constrained analogue of
+    ``core.distributed._sim_round1_detail``: one dispatch per reducer so
+    each gets a real span; wall-clocks feed ``StragglerPolicy`` and flagged
+    reducers land in the trace extras as ``mr_stragglers``."""
+    from repro.distributed.fault_tolerance import StragglerPolicy
+
+    policy = StragglerPolicy(min_history=3)
+    outs, stragglers = [], []
+    for i in range(int(shards.shape[0])):
+        with _span(f"mr.reducer[{i}]", reducer=i) as sp:
+            out = jax.block_until_ready(_sim_round1(
+                shards[i:i + 1], slabels[i:i + 1], m, k, kprime, metric_name,
+                mode, b, chunk, schedule))
+        _count("device_dispatches")
+        outs.append(out)
+        if sp is not None and policy.observe(sp.seconds):
+            stragglers.append(i)
+    tr = _obs_active()
+    if tr is not None:
+        tr.annotate(mr_stragglers=tuple(stragglers))
+    return tuple(jnp.concatenate([o[j] for o in outs], axis=0)
+                 for j in range(4))
+
+
 def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
                            num_reducers: int,
                            measure: str = "remote-edge",
@@ -253,9 +290,23 @@ def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
         m=m, tau=tau, cliff=cliff)
     mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
 
-    g_pts, g_lab, g_valid, g_rad = _sim_round1(shards, slabels, m, k, kprime,
-                                               get_metric(metric).name, mode,
-                                               b, chunk, schedule)
+    if _counting():
+        from repro.core.distributed import _count_round1
+        _count_round1(num_reducers, int(shards.shape[1]), d, kprime, b,
+                      schedule, mode)
+    if _reducer_detail():
+        g_pts, g_lab, g_valid, g_rad = _sim_round1_detail(
+            shards, slabels, m, k, kprime, get_metric(metric).name, mode,
+            b, chunk, schedule)
+    else:
+        with _span("mr.round1", reducers=num_reducers, kprime=kprime,
+                   groups=m):
+            g_pts, g_lab, g_valid, g_rad = _sim_round1(
+                shards, slabels, m, k, kprime, get_metric(metric).name, mode,
+                b, chunk, schedule)
+            _count("device_dispatches")
+            if _counting():
+                jax.block_until_ready(g_rad)
     flat_pts = np.asarray(g_pts.reshape(-1, d))
     flat_lab = np.asarray(g_lab.reshape(-1))
     flat_valid = np.asarray(g_valid.reshape(-1))

@@ -47,6 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import (count as _count, counting as _counting,
+                             span as _span, sweep_bytes as _sweep_bytes)
+
 from .gmm import (_grouped_inblock, _make_grouped_sweep, pad_for_engine,
                   mask_to_labels, schedule_sweep_counts, validate_schedule)
 from .metrics import get_metric
@@ -394,15 +397,29 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
             nxt = _secant_next(mile_hist, eps, pos, k_cap)
             miles = [nxt] if nxt < k_cap else []
 
+    d = int(points.shape[1])
+
+    def _step_obs(folded: int, sweeps: int = 1, syncs: int = 1) -> None:
+        """One controller round-trip: ``sweeps`` dispatched sweeps folding
+        ``folded`` centers total, read back with ``syncs`` blocking
+        transfers (host_syncs is THE pacing metric of this engine)."""
+        _count("device_dispatches")
+        _count("host_syncs", syncs)
+        _count("distance_evals", n * folded)
+        _count("bytes_swept", _sweep_bytes(n, d, sweeps=sweeps, m=m))
+
     p_mult = 16
     while pos < k_cap and not stopped:
         if b_cur > 1:
             take = min(b_cur, k_cap - pos)
             p = min(p_mult * b_cur, pts_p.shape[0])
-            md, chosen, stats = _block_step_impl(
-                pts_p, lab_p, md, pending, m, take, p, ch, metric_name,
-                use_pallas)
-            stats_np = np.asarray(stats)    # the one blocking transfer
+            with _span("adaptive.block", pos=pos, b=b_cur, p=p):
+                md, chosen, stats = _block_step_impl(
+                    pts_p, lab_p, md, pending, m, take, p, ch, metric_name,
+                    use_pallas)
+                stats_np = np.asarray(stats)    # the one blocking transfer
+            if _counting():
+                _step_obs(folded=int(pending.shape[1]))
             rnow = stats_np[:, 0]
             pending_folded, last_rnow = True, rnow
             observe(rnow)
@@ -445,6 +462,8 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
             pos += take_eff
             # pool adaptation: heavy truncation -> widen; full blocks -> relax
             if take_eff <= take // 2:
+                if p_mult < 32:
+                    _count("pool_widenings")
                 p_mult = min(32, p_mult * 2)
             elif take_eff == take:
                 p_mult = max(16, p_mult // 2)
@@ -458,9 +477,12 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
         else:
             # bit-exact b=1 tail, one dispatch per milestone segment
             if not pending_folded:
-                md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
-                                       metric_name, use_pallas)
-                rnow = np.asarray(cd[:, 0])
+                with _span("adaptive.fold", pos=pos):
+                    md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1,
+                                           ch, metric_name, use_pallas)
+                    rnow = np.asarray(cd[:, 0])
+                if _counting():
+                    _step_obs(folded=int(pending.shape[1]))
                 pending_folded, last_rnow = True, rnow
                 observe(rnow)
                 if stopped:
@@ -470,12 +492,16 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
                 if c > pos:
                     end = min(end, c)
                     break
-            idx_dev = jnp.asarray(idx_host)
-            md, idx_dev, tcol = _resume_impl(
-                pts_p, lab_p, md, idx_dev, jnp.asarray(max(pos, 1)),
-                jnp.asarray(end), m, k_cap, ch, metric_name, use_pallas)
-            idx_host = np.asarray(idx_dev)
-            tc = np.asarray(tcol)
+            with _span("adaptive.resume", start=pos, end=end):
+                idx_dev = jnp.asarray(idx_host)
+                md, idx_dev, tcol = _resume_impl(
+                    pts_p, lab_p, md, idx_dev, jnp.asarray(max(pos, 1)),
+                    jnp.asarray(end), m, k_cap, ch, metric_name, use_pallas)
+                idx_host = np.asarray(idx_dev)
+                tc = np.asarray(tcol)
+            if _counting():
+                seg = max(end - pos, 1)
+                _step_obs(folded=seg, sweeps=seg)
             for r in range(pos, end):
                 traj_counts.append(r)
                 traj_vals.append(tc[r])
@@ -488,17 +514,23 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
             pending_folded = False
             pos = end
             if miles and pos >= miles[0]:
-                md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
-                                       metric_name, use_pallas)
-                rnow = np.asarray(cd[:, 0])
+                with _span("adaptive.fold", pos=pos):
+                    md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1,
+                                           ch, metric_name, use_pallas)
+                    rnow = np.asarray(cd[:, 0])
+                if _counting():
+                    _step_obs(folded=int(pending.shape[1]))
                 pending_folded, last_rnow = True, rnow
                 observe(rnow)
 
     # final fold: the measured anticover radius of everything selected
     if not pending_folded:
-        md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
-                               metric_name, use_pallas)
-        rfin = np.asarray(cd[:, 0])
+        with _span("adaptive.fold", pos=pos):
+            md, cd, _ = _fold_impl(pts_p, lab_p, md, pending, m, 1, ch,
+                                   metric_name, use_pallas)
+            rfin = np.asarray(cd[:, 0])
+        if _counting():
+            _step_obs(folded=int(pending.shape[1]))
         traj_counts.append(pos)
         traj_vals.append(rfin)
     else:

@@ -31,7 +31,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.gmm import (effective_block as _effective_block, gmm as _gmm,
                             gmm_batched, gmm_ext as _gmm_ext,
-                            gmm_gen as _gmm_gen)
+                            gmm_gen as _gmm_gen, schedule_fold_sizes)
+from repro.obs.trace import (active as _obs_active, count as _count,
+                             counting as _counting,
+                             reducer_detail as _reducer_detail,
+                             span as _span, sweep_bytes as _sweep_bytes)
 from .coreset import Coreset, GeneralizedCoreset
 from .measures import NEEDS_INJECTIVE, diversity
 from .metrics import get_metric
@@ -86,10 +90,12 @@ def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
         return kprime, None, b, None
     from repro.core.adaptive import plan_from_schedule, resolve_engine_plan
 
-    kp, schedule, cert = resolve_engine_plan(np.asarray(points), k, kprime, b,
-                                             eps=eps, metric=metric,
-                                             labels=labels, m=m, chunk=chunk,
-                                             tau=tau, cliff=cliff)
+    with _span("mr.probe", k=k, kprime=kprime, b=b):
+        kp, schedule, cert = resolve_engine_plan(np.asarray(points), k,
+                                                 kprime, b, eps=eps,
+                                                 metric=metric, labels=labels,
+                                                 m=m, chunk=chunk, tau=tau,
+                                                 cliff=cliff)
     kp = min(int(kp), per_shard)
     if schedule is not None:
         planned = sum(b_ * r for b_, r in schedule)
@@ -98,6 +104,29 @@ def _resolve_reducer_plan(points, k: int, kprime, b, *, eps: float,
     # kprime="auto" with an explicit numeric b keeps that b (no schedule);
     # only b="auto" replaces the knob with the frozen plan
     return kp, schedule, (1 if b == "auto" else b), cert
+
+
+def _count_round1(num_reducers: int, per_shard: int, d: int, kprime: int,
+                  b, schedule, mode: str) -> None:
+    """Model-based round-1 counters: the reducer bodies run inside jit
+    (vmap / shard_map), where the engines' own host-wrapper counters cannot
+    fire, so the driver charges the schedule's exact fold count per reducer
+    (the same accounting ``core.gmm`` uses on the host path)."""
+    if schedule is not None:
+        folds = schedule_fold_sizes(schedule)
+        sweeps, folded = len(folds), sum(folds)
+    elif b not in (None, "auto") and b > 1:
+        beff = _effective_block(kprime, b)
+        folds = schedule_fold_sizes(((beff, kprime // beff),))
+        sweeps, folded = len(folds), sum(folds)
+    else:
+        sweeps, folded = kprime, kprime
+    if mode in ("ext", "gen") and (schedule is not None
+                                   or (b not in (None, "auto") and b > 1)):
+        sweeps, folded = sweeps + 1, folded + kprime     # assignment pass
+    _count("distance_evals", num_reducers * per_shard * folded)
+    _count("bytes_swept",
+           num_reducers * _sweep_bytes(per_shard, d, sweeps=sweeps))
 
 
 # --------------------------------------------------------------------------
@@ -125,6 +154,11 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
     kprime, schedule, b, cert = _resolve_reducer_plan(
         points, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
         per_shard=n // nshards, tau=tau, cliff=cliff)
+    if _counting():
+        _count("device_dispatches")
+        _count_round1(nshards, n // nshards, d, kprime, b, schedule,
+                      "gen" if generalized else
+                      "ext" if measure in NEEDS_INJECTIVE else "plain")
 
     if generalized:
         def body(shard):
@@ -138,7 +172,10 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
 
         fn = shard_map(body, mesh=mesh, in_specs=P(axes),
                        out_specs=(P(), P(), P()), check_vma=False)
-        g_pts, g_mult, g_rad = jax.jit(fn)(points)
+        with _span("mr.round1", reducers=nshards, kprime=kprime):
+            g_pts, g_mult, g_rad = jax.jit(fn)(points)
+            if _counting():
+                jax.block_until_ready(g_rad)
         return GeneralizedCoreset(points=g_pts, multiplicity=g_mult,
                                   radius=g_rad, cert=cert)
 
@@ -154,7 +191,10 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
 
         fn = shard_map(body, mesh=mesh, in_specs=P(axes),
                        out_specs=(P(), P(), P()), check_vma=False)
-        g_pts, g_valid, g_rad = jax.jit(fn)(points)
+        with _span("mr.round1", reducers=nshards, kprime=kprime):
+            g_pts, g_valid, g_rad = jax.jit(fn)(points)
+            if _counting():
+                jax.block_until_ready(g_rad)
         return Coreset(points=g_pts, valid=g_valid,
                        weights=g_valid.astype(jnp.int32), radius=g_rad,
                        cert=cert)
@@ -168,7 +208,10 @@ def mr_coreset(points, k: int, kprime, measure: str, mesh: Mesh,
 
     fn = shard_map(body, mesh=mesh, in_specs=P(axes),
                    out_specs=(P(), P()), check_vma=False)
-    g_pts, g_rad = jax.jit(fn)(points)
+    with _span("mr.round1", reducers=nshards, kprime=kprime):
+        g_pts, g_rad = jax.jit(fn)(points)
+        if _counting():
+            jax.block_until_ready(g_rad)
     m = g_pts.shape[0]
     return Coreset(points=g_pts, valid=jnp.ones((m,), bool),
                    weights=jnp.ones((m,), jnp.int32), radius=g_rad,
@@ -342,6 +385,36 @@ def _sim_round1(shards, k: int, kprime: int, metric: str, mode: str,
     return jax.vmap(one)(shards)
 
 
+def _sim_round1_detail(shards, k: int, kprime: int, metric: str, mode: str,
+                       b: int = 1, chunk: int = 0, schedule=None):
+    """Per-reducer observability path (``ExecutionSpec(trace="reducers")``):
+    the same jitted body as ``_sim_round1``, dispatched once per reducer on
+    a leading axis of 1 instead of one vmapped launch, so every reducer gets
+    a real span with its own wall-clock.  The per-reducer times feed
+    ``distributed.fault_tolerance.StragglerPolicy`` (warmup-aware: reducer 0
+    carries the jit compile) and flagged reducers land in the trace extras
+    as ``mr_stragglers``.  Slower than the vmapped launch by construction —
+    this is an observability mode, not a production path."""
+    from repro.distributed.fault_tolerance import StragglerPolicy
+
+    policy = StragglerPolicy(min_history=3)
+    outs, stragglers = [], []
+    for i in range(int(shards.shape[0])):
+        with _span(f"mr.reducer[{i}]", reducer=i) as sp:
+            out = jax.block_until_ready(_sim_round1(
+                shards[i:i + 1], k, kprime, metric, mode, b, chunk,
+                schedule))
+        _count("device_dispatches")
+        outs.append(out)
+        if sp is not None and policy.observe(sp.seconds):
+            stragglers.append(i)
+    tr = _obs_active()
+    if tr is not None:
+        tr.annotate(mr_stragglers=tuple(stragglers))
+    return tuple(jnp.concatenate([o[j] for o in outs], axis=0)
+                 for j in range(3))
+
+
 def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
                       kprime=None, metric="euclidean",
                       generalized: bool = False,
@@ -362,8 +435,19 @@ def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")
-    g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric, mode,
-                                        b, chunk, schedule)
+    if _counting():
+        _count_round1(num_reducers, int(shards.shape[1]), d, kprime, b,
+                      schedule, mode)
+    if _reducer_detail():
+        g_pts, g_valid, g_rad = _sim_round1_detail(shards, k, kprime, metric,
+                                                   mode, b, chunk, schedule)
+    else:
+        with _span("mr.round1", reducers=num_reducers, kprime=kprime):
+            g_pts, g_valid, g_rad = _sim_round1(shards, k, kprime, metric,
+                                                mode, b, chunk, schedule)
+            _count("device_dispatches")
+            if _counting():
+                jax.block_until_ready(g_rad)
     flat_pts = g_pts.reshape(-1, d)
     flat_valid = g_valid.reshape(-1)
     radius = jnp.max(g_rad)
@@ -374,7 +458,11 @@ def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
             g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk,
                          schedule=schedule)
             return g.points, g.multiplicity, g.radius
-        gp, gm, gr = jax.jit(jax.vmap(one))(shards)
+        with _span("mr.round1.multiplicities", reducers=num_reducers):
+            gp, gm, gr = jax.jit(jax.vmap(one))(shards)
+            _count("device_dispatches")
+            if _counting():
+                jax.block_until_ready(gr)
         cs = GeneralizedCoreset(points=gp.reshape(-1, d),
                                 multiplicity=gm.reshape(-1),
                                 radius=jnp.max(gr), cert=cert)

@@ -35,8 +35,23 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import (count as _count, counting as _counting,
+                             sweep_bytes as _sweep_bytes)
+
 from .coreset import GeneralizedCoreset
 from .metrics import get_metric
+
+
+def _host_counting(x) -> bool:
+    """Counters fire only on real host-driver calls: a call made while
+    tracing another jit (x is a Tracer) runs once per compile, not per
+    execution, so counting there would be wrong."""
+    if not _counting():
+        return False
+    try:
+        return not isinstance(x, jax.core.Tracer)
+    except Exception:                                # pragma: no cover
+        return True
 
 
 class GMMResult(NamedTuple):
@@ -110,6 +125,10 @@ def gmm(points, k: int, *, metric="euclidean", mask=None, start=0,
         raise ValueError(f"k={k} out of range for n={n}")
     if mask is None:
         mask = jnp.ones((n,), bool)
+    if _host_counting(points):
+        _count("device_dispatches")
+        _count("distance_evals", n * k)
+        _count("bytes_swept", _sweep_bytes(n, points.shape[1], sweeps=k))
     return _gmm_impl(points, mask, jnp.asarray(start, jnp.int32), k,
                      get_metric(metric).name, use_pallas)
 
@@ -273,6 +292,22 @@ def schedule_sweep_counts(schedule):
         pos += r * b
     counts.append(pos)                            # final fold
     return tuple(counts)
+
+
+def schedule_fold_sizes(schedule):
+    """Centers folded into the field BY each sweep (companion to
+    ``schedule_sweep_counts``; same length).  ``n x sum(fold_sizes)`` is the
+    engine's exact distance-evaluation count for the schedule — the number
+    the ``distance_evals`` counter reports."""
+    folds = []
+    for pi, (b, r) in enumerate(schedule):
+        if pi == 0 and b > 1:
+            folds.append(1)                       # seed sweep
+        elif pi > 0:
+            folds.append(schedule[pi - 1][0])     # transition sweep
+        folds.extend([b] * (r - 1))
+    folds.append(schedule[-1][0])                 # final fold
+    return tuple(folds)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "k", "schedule", "chunk",
@@ -442,6 +477,12 @@ def gmm_schedule(points, k: int, schedule, *, metric="euclidean", mask=None,
         mask = jnp.ones((n,), bool)
     labels = mask_to_labels(mask)
     pts_p, lab_p, ch = pad_for_engine(points, labels, chunk)
+    if _host_counting(points):
+        folds = schedule_fold_sizes(schedule)
+        _count("device_dispatches")
+        _count("distance_evals", n * sum(folds))
+        _count("bytes_swept",
+               _sweep_bytes(n, points.shape[1], sweeps=len(folds)))
     idx, radius, min_dist, traj, bcd = _schedule_select_impl(
         pts_p, lab_p, jnp.asarray([start], jnp.int32), 1, k, schedule, ch,
         get_metric(metric).name, use_pallas)
@@ -563,6 +604,10 @@ def _assign_to_centers_impl(points, idx, chunk: int, metric_name: str):
 def _assign_to_centers(points, idx, chunk: int, metric_name: str):
     """Padding wrapper for ``_assign_to_centers_impl`` (any chunk size)."""
     n = points.shape[0]
+    if _host_counting(points):
+        _count("device_dispatches")
+        _count("distance_evals", n * int(idx.shape[0]))
+        _count("bytes_swept", _sweep_bytes(n, points.shape[1]))
     ch = _adjust_chunk(n, chunk or 4096)
     pad = _pad_to_chunk(n, ch)
     if pad:

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import count as _count, span as _span
+
 from .coreset import Coreset, GeneralizedCoreset
 from .metrics import get_metric
 
@@ -307,19 +309,30 @@ class StreamingCoreset:
             n_phases=jnp.asarray(0, jnp.int32),
         )
         # T is full after initialization -> Phase 1 begins with a merge
+        _count("device_dispatches")          # _init_threshold
+        _count("points_absorbed", cap)       # the boot prefix
         self._state = self._merge_until_room(state)
 
     def _merge_until_room(self, state: SMMState) -> SMMState:
-        state = _merge(state, self.metric, self.mode, self.k)
-        # if the MIS removed nothing (all pairwise > 2 d_i) the update step is
-        # empty: double the threshold and merge again (see module docstring).
-        while int(jnp.sum(state.t_valid)) >= self.cap:
-            state = state._replace(d_thr=state.d_thr * 2.0)
+        with _span("smm.merge", n_processed=self._n_processed):
             state = _merge(state, self.metric, self.mode, self.k)
-        # stamp with the exact number of stream points processed when the
-        # merge fired (NOT n_seen, which already counts the whole in-flight
-        # chunk) — this keeps the re-certification log chunk-invariant.
-        self._phase_log.append((self._n_processed, float(state.d_thr)))
+            _count("device_dispatches")
+            # if the MIS removed nothing (all pairwise > 2 d_i) the update
+            # step is empty: double the threshold and merge again (see
+            # module docstring).
+            while int(jnp.sum(state.t_valid)) >= self.cap:
+                _count("host_syncs")
+                state = state._replace(d_thr=state.d_thr * 2.0)
+                state = _merge(state, self.metric, self.mode, self.k)
+                _count("device_dispatches")
+            _count("host_syncs")                 # the loop-exit readback
+            _count("merges")
+            # stamp with the exact number of stream points processed when the
+            # merge fired (NOT n_seen, which already counts the whole
+            # in-flight chunk) — this keeps the re-certification log
+            # chunk-invariant.
+            self._phase_log.append((self._n_processed, float(state.d_thr)))
+            _count("host_syncs")                 # d_thr stamp readback
         return state
 
     # -- streaming ----------------------------------------------------------
@@ -357,6 +370,8 @@ class StreamingCoreset:
             state, first_far = _classify_absorb(state, tail, self.metric,
                                                 self.mode, self.k)
             first_far = int(first_far)          # the one host transfer
+            _count("device_dispatches")
+            _count("host_syncs")
             if first_far == tail.shape[0]:      # whole tail absorbed
                 pos = c
                 break
@@ -364,11 +379,14 @@ class StreamingCoreset:
             state, consumed, full = _seq_insert(state, tail, cvalid, first_far,
                                                 self.metric, self.mode, self.k)
             pos += int(consumed)
+            _count("device_dispatches")
+            _count("host_syncs")    # consumed+full: one dispatch, one barrier
             if bool(full):
                 state = state._replace(d_thr=state.d_thr * 2.0)
                 self._n_processed = base + pos
                 state = self._merge_until_room(state)
         self._state = state
+        _count("points_absorbed", c)
 
     # -- certification ------------------------------------------------------
     def certificate(self):

@@ -1,10 +1,12 @@
 from .compression import (dequantize_int8, init_error_feedback, psum_bf16,
                           psum_int8_ef, quantize_int8)
 from .fault_tolerance import (FailureInjector, InjectedFailure,
-                              SupervisorReport, TrainingSupervisor)
+                              StragglerPolicy, SupervisorReport,
+                              TrainingSupervisor)
 from .pipeline import pipeline_apply
 
 __all__ = ["dequantize_int8", "init_error_feedback", "psum_bf16",
            "psum_int8_ef", "quantize_int8", "FailureInjector",
-           "InjectedFailure", "SupervisorReport", "TrainingSupervisor",
+           "InjectedFailure", "StragglerPolicy", "SupervisorReport",
+           "TrainingSupervisor",
            "pipeline_apply"]

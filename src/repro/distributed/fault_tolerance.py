@@ -43,6 +43,42 @@ class FailureInjector:
 
 
 @dataclasses.dataclass
+class StragglerPolicy:
+    """Trailing-median step-deadline policy (shared by the supervisor and
+    the traced MapReduce reducer path).
+
+    A step is flagged when its wall time exceeds ``deadline_factor`` × the
+    median of the last ``window`` recorded steps (once ``min_history`` have
+    accumulated).  The first ``warmup_steps`` observations are excluded from
+    BOTH the median history and flagging: they carry jit compilation, so on
+    a fresh process the first step is routinely 10-100× the steady-state
+    time and would instantly poison the median / fire a spurious straggler.
+    """
+    deadline_factor: float = 3.0
+    min_history: int = 5
+    window: int = 20
+    warmup_steps: int = 1
+    _times: List[float] = dataclasses.field(default_factory=list)
+    _seen: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record one step's wall time; True iff it breached the deadline."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return False                 # compile-laden step: never counted
+        flagged = False
+        if len(self._times) >= self.min_history:
+            med = statistics.median(self._times[-self.window:])
+            flagged = dt > self.deadline_factor * med
+        self._times.append(dt)
+        return flagged
+
+    @property
+    def history(self) -> tuple:
+        return tuple(self._times)
+
+
+@dataclasses.dataclass
 class SupervisorReport:
     steps_run: int = 0
     resumes: int = 0
@@ -62,6 +98,8 @@ class TrainingSupervisor:
         self.max_stragglers = max_stragglers
         self.injector = injector
         self.report = SupervisorReport()
+        self.straggler_policy = StragglerPolicy(
+            deadline_factor=deadline_factor)
 
     def run(self, state, step_fn: Callable, num_steps: int,
             batch_fn: Callable, *, max_restarts: int = 8):
@@ -75,7 +113,6 @@ class TrainingSupervisor:
                             self.ckpt.restore(latest, state))
         restarts = 0
         step = start
-        times: List[float] = []
         while step < num_steps:
             try:
                 t0 = time.perf_counter()
@@ -84,7 +121,7 @@ class TrainingSupervisor:
                 batch = batch_fn(step)
                 state, metrics = step_fn(state, batch, step)
                 dt = time.perf_counter() - t0
-                self._track_straggler(dt, times)
+                self._track_straggler(dt)
                 self.report.steps_run += 1
                 self.report.losses.append(float(metrics["loss"]))
                 step += 1
@@ -106,12 +143,9 @@ class TrainingSupervisor:
         self.report.final_step = step
         return state
 
-    def _track_straggler(self, dt: float, times: List[float]):
-        if len(times) >= 5:
-            med = statistics.median(times[-20:])
-            if dt > self.deadline_factor * med:
-                self.report.stragglers += 1
-                if self.report.stragglers >= self.max_stragglers:
-                    self.report.reshard_requests += 1
-                    self.report.stragglers = 0
-        times.append(dt)
+    def _track_straggler(self, dt: float):
+        if self.straggler_policy.observe(dt):
+            self.report.stragglers += 1
+            if self.report.stragglers >= self.max_stragglers:
+                self.report.reshard_requests += 1
+                self.report.stragglers = 0

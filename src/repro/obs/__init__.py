@@ -1,0 +1,44 @@
+"""``repro.obs`` — structured tracing + counters for every execution path.
+
+One observability dialect from kernel sweeps to ``plan.explain()``: the
+facade (``repro.diversify``) creates a ``RunTrace`` per run, the engines
+(``core.gmm``, ``core.adaptive``, ``core.smm``, the MapReduce reducers)
+report spans and counters to whichever trace is *active*, and the exporters
+turn the result into JSON-lines, a Perfetto-loadable Chrome trace or a
+markdown table.  Tracing is off by default (``ExecutionSpec(trace=False)``;
+the phase wall-clocks are always recorded) and switched on per run with
+``ExecutionSpec(trace=True)`` or globally with ``REPRO_TRACE=1``.
+
+>>> import numpy as np
+>>> import repro
+>>> rng = np.random.default_rng(0)
+>>> pts = rng.normal(size=(600, 4)).astype(np.float32)
+>>> res = repro.diversify(pts, k=4, execution=repro.ExecutionSpec(
+...     mode="batch", kprime=16, b=1, trace=True))
+>>> trace = res.telemetry                  # a RunTrace (Mapping-compatible)
+>>> [p["name"] for p in trace["phases"]]   # legacy dict view still works
+['coreset', 'solve', 'value']
+>>> trace.counters["distance_evals"]       # n x k' for exact b=1 GMM
+9600
+>>> trace.counters["host_syncs"]           # fully device-paced path
+0
+>>> from repro.obs import to_chrome_trace
+>>> sorted(to_chrome_trace(trace))         # Perfetto-loadable document
+['displayTimeUnit', 'otherData', 'traceEvents']
+>>> print(res.plan.explain(actual=True))   # doctest: +ELLIPSIS
+DiversityPlan
+  mode: batch ...
+  measured: ...
+"""
+from .trace import (COUNTER_NAMES, ENV_VAR, RunTrace, Span, activate, active,
+                    count, counting, reducer_detail, span, sweep_bytes,
+                    trace_from_spec)
+from .export import (summary_markdown, to_chrome_trace, to_jsonl,
+                     write_chrome_trace)
+
+__all__ = [
+    "RunTrace", "Span", "COUNTER_NAMES", "ENV_VAR",
+    "activate", "active", "count", "counting", "span", "reducer_detail",
+    "sweep_bytes", "trace_from_spec",
+    "to_jsonl", "to_chrome_trace", "write_chrome_trace", "summary_markdown",
+]

@@ -12,12 +12,12 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
+import repro
 from repro.core import (StreamingCoreset, auto_kprime, build_coreset,
-                        diversity_maximize, gmm, gmm_adaptive, gmm_schedule)
+                        gmm, gmm_adaptive, gmm_schedule)
 from repro.core.adaptive import (RadiusCertificate,
                                  certificate_from_trajectory,
                                  plan_from_schedule, resolve_engine_plan)
-from repro.core.distributed import simulate_mr
 from repro.core.gmm import schedule_sweep_counts, validate_schedule
 from repro.data import clustered_dataset
 
@@ -167,10 +167,12 @@ def test_build_coreset_auto_attaches_certificate():
     cs_b = build_coreset(pts, k=5, kprime=32, measure="remote-edge",
                          b="auto")
     assert cs_b.cert is not None and cs_b.cert.kprime == 32
-    sol, value, cs2 = diversity_maximize(pts, 5, "remote-edge",
-                                         kprime="auto", eps=0.3)
-    assert sol.shape == (5, pts.shape[1]) and value > 0
-    assert cs2.cert.meets_target
+    res = repro.diversify(pts, k=5, measure="remote-edge",
+                          execution=repro.ExecutionSpec(mode="batch",
+                                                        kprime="auto",
+                                                        eps=0.3))
+    assert res.solution.shape == (5, pts.shape[1]) and res.value > 0
+    assert res.coreset.cert.meets_target
 
 
 def test_grouped_adaptive_purity_and_certificate():
@@ -193,16 +195,16 @@ def test_grouped_adaptive_purity_and_certificate():
 
 
 def test_fair_auto_end_to_end_quota_feasible():
-    from repro.constrained import fair_diversity_maximize
-
     rng = np.random.default_rng(9)
     pts = _uniform(1200, dim=4, seed=9)
     lab = rng.integers(0, 3, size=1200).astype(np.int32)
-    idx, value, cs = fair_diversity_maximize(pts, lab, quotas=[2, 2, 2],
-                                             kprime="auto", b="auto",
-                                             eps=0.4)
-    assert np.bincount(lab[np.asarray(idx)], minlength=3).tolist() == [2, 2, 2]
-    assert value > 0 and cs.cert is not None
+    res = repro.diversify(pts, k=6, labels=lab, quotas=[2, 2, 2],
+                          execution=repro.ExecutionSpec(mode="batch",
+                                                        kprime="auto",
+                                                        b="auto", eps=0.4))
+    counts = np.bincount(lab[np.asarray(res.indices)], minlength=3)
+    assert counts.tolist() == [2, 2, 2]
+    assert res.value > 0 and res.coreset.cert is not None
 
 
 # --------------------------------------------------------------------------
@@ -229,11 +231,17 @@ def test_plan_from_schedule_shapes():
 
 def test_simulate_mr_auto_matches_quality():
     pts = _uniform(4096, seed=11)
-    sol_auto, div_auto = simulate_mr(pts, 6, "remote-edge", num_reducers=4,
-                                     b="auto", kprime="auto", eps=0.3)
-    sol_b1, div_b1 = simulate_mr(pts, 6, "remote-edge", num_reducers=4)
-    assert sol_auto.shape == sol_b1.shape
-    assert div_auto >= 0.85 * div_b1
+
+    def mr(**exec_kw):
+        return repro.diversify(pts, k=6, measure="remote-edge",
+                               execution=repro.ExecutionSpec(
+                                   mode="mapreduce", num_reducers=4,
+                                   **exec_kw))
+
+    auto = mr(b="auto", kprime="auto", eps=0.3)
+    b1 = mr(b=1, kprime=None)
+    assert auto.solution.shape == b1.solution.shape
+    assert auto.value >= 0.85 * b1.value
 
 
 # --------------------------------------------------------------------------

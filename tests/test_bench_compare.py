@@ -76,6 +76,30 @@ def test_compare_flags_rows_lost_from_fresh_run():
     assert len(regressions) == 1 and "missing" in regressions[0]
 
 
+def test_compare_counter_gate():
+    """Rows carrying work counters are gated at +10% on host_syncs /
+    bytes_swept — deterministic counts, so no min-time noise waiver."""
+    base = _doc({("s1", "b1"): 1.0, ("s1", "auto"): 0.02})
+    for r in base["rows"]:
+        r["counters"] = {"host_syncs": 10, "bytes_swept": 1000}
+    fresh = copy.deepcopy(base)
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+    # +20% host round-trips on a sub-floor (fast) row still fails
+    for r in fresh["rows"]:
+        if r["engine"] == "auto":
+            r["counters"]["host_syncs"] = 12
+    records, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert len(regressions) == 1 and "host_syncs" in regressions[0]
+    rec = next(r for r in records if r["key"] == "s1:auto")
+    assert rec["host_syncs_delta"] == pytest.approx(0.2)
+    # a counter missing from either side is not gated (older baselines)
+    for r in fresh["rows"]:
+        r.pop("counters")
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+
+
 def test_compare_gmm_global_reference():
     spec = compare.SPECS["BENCH_gmm.json"]
     base = {"rows": [{"path": "gmm-b1", "time_s": 1.0},

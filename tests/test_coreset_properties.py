@@ -6,8 +6,16 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
+import repro
 from repro.core import (MEASURES, SEQ_ALPHA, brute_force_opt, build_coreset,
-                        diversity, diversity_maximize, instantiate, solve)
+                        diversity, instantiate, solve)
+
+
+def _maximize(pts, k, measure, kprime):
+    res = repro.diversify(pts, k=k, measure=measure,
+                          execution=repro.ExecutionSpec(kprime=kprime, b=1,
+                                                        mode="batch"))
+    return res.value, res.coreset
 from repro.core.gmm import gmm_gen
 from repro.core.metrics import get_metric
 
@@ -25,7 +33,7 @@ def test_end_to_end_within_alpha_plus_eps(seed, measure):
     pts = rng.normal(size=(40, 2)).astype(np.float32)
     k = 4
     opt = brute_force_opt(measure, pts, k, "euclidean")
-    _, got, _ = diversity_maximize(pts, k, measure, kprime=24)
+    got, _ = _maximize(pts, k, measure, kprime=24)
     alpha = SEQ_ALPHA[measure]
     assert got <= opt + 1e-4                       # subset upper bound
     assert opt <= (alpha + 1.0) * got + 1e-6
@@ -38,7 +46,7 @@ def test_full_coreset_equals_direct_solver(seed, measure):
     rng = np.random.default_rng(seed)
     pts = rng.normal(size=(30, 3)).astype(np.float32)
     k = 5
-    _, got, cs = diversity_maximize(pts, k, measure, kprime=30)
+    got, cs = _maximize(pts, k, measure, kprime=30)
     idx = solve(measure, pts, k, metric="euclidean")
     m = get_metric("euclidean")
     dm = np.asarray(m.pairwise(jnp.asarray(pts[idx]), jnp.asarray(pts[idx])))
@@ -92,7 +100,7 @@ def test_planted_sphere_recovered():
     (approximately) recovered — remote-edge value close to the planted one."""
     from repro.data import sphere_dataset
     pts = sphere_dataset(4000, k=8, dim=3, seed=1)
-    _, got, _ = diversity_maximize(pts, 8, "remote-edge", kprime=128)
+    got, _ = _maximize(pts, 8, "remote-edge", kprime=128)
     # planted optimum >= min pairwise among 8 random sphere points; got
     # should be within 1.2x of brute force on the coreset scale
     assert got > 0.5  # sphere points are spread; interior caps at ~1.6 radius

@@ -10,15 +10,21 @@ from conftest import SUBPROC_ENV as _SUBPROC_ENV
 import numpy as np
 import pytest
 
-from repro.core import diversity_maximize
-from repro.core.distributed import simulate_mr
+import repro
 from repro.data import sphere_dataset
+
+
+def _value(pts, k, measure, *, mode="batch", **exec_kw):
+    return repro.diversify(pts, k=k, measure=measure,
+                           execution=repro.ExecutionSpec(
+                               mode=mode, b=1, **exec_kw)).value
 
 
 def test_simulate_mr_close_to_sequential():
     pts = sphere_dataset(6000, k=8, dim=3, seed=2)
-    _, seq_val, _ = diversity_maximize(pts, 8, "remote-edge", kprime=64)
-    _, mr_val = simulate_mr(pts, 8, "remote-edge", num_reducers=8, kprime=64)
+    seq_val = _value(pts, 8, "remote-edge", kprime=64)
+    mr_val = _value(pts, 8, "remote-edge", mode="mapreduce", num_reducers=8,
+                    kprime=64)
     assert mr_val >= 0.5 * seq_val  # MR should be in the same ballpark
     # paper: MR with the 2-approx GMM core-set is usually BETTER; don't assert
 
@@ -27,16 +33,17 @@ def test_simulate_mr_partitions():
     pts = sphere_dataset(4000, k=6, dim=3, seed=3)
     vals = {}
     for part in ("contiguous", "random", "adversarial"):
-        _, vals[part] = simulate_mr(pts, 6, "remote-edge", num_reducers=8,
-                                    kprime=32, partition=part)
+        vals[part] = _value(pts, 6, "remote-edge", mode="mapreduce",
+                            num_reducers=8, kprime=32, partition=part)
     assert all(v > 0 for v in vals.values())
 
 
 def test_generalized_three_round_close():
     pts = sphere_dataset(4000, k=6, dim=3, seed=4)
-    _, v2 = simulate_mr(pts, 6, "remote-clique", num_reducers=4, kprime=32)
-    _, v3 = simulate_mr(pts, 6, "remote-clique", num_reducers=4, kprime=32,
-                        generalized=True)
+    v2 = _value(pts, 6, "remote-clique", mode="mapreduce", num_reducers=4,
+                kprime=32)
+    v3 = _value(pts, 6, "remote-clique", mode="mapreduce", num_reducers=4,
+                kprime=32, generalized=True)
     assert v3 >= 0.7 * v2  # Thm 10: same α+ε class
 
 

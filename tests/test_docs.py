@@ -20,6 +20,7 @@ DOCTEST_MODULES = [
     "repro.constrained.solver",  # constrained_solve
     "repro.data.selection",      # select_diverse
     "repro.serving.engine",      # diverse_rerank
+    "repro.obs",                 # RunTrace / counters / exporters
 ]
 
 

@@ -7,7 +7,6 @@ import numpy as np
 
 import jax
 from repro.core import StreamingCoreset, build_coreset
-from repro.core.distributed import simulate_mr
 from repro.data import sphere_dataset
 
 

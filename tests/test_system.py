@@ -5,12 +5,12 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+import repro
 import repro.models as M
 from repro.configs import get_config
-from repro.data import (embed_examples, lm_batch, select_diverse,
-                        sphere_dataset)
+from repro.data import embed_examples, lm_batch, sphere_dataset
 from repro.models.common import ShardingRules
-from repro.serving import Request, ServingEngine, diverse_rerank
+from repro.serving import Request, ServingEngine
 
 # model-zoo / scaffolding suite: excluded from the CI fast lane
 # (tier-1 locally still runs it; see pytest.ini)
@@ -27,7 +27,8 @@ def test_diverse_selection_finds_planted_points():
     points can legitimately beat some of it — compare by VALUE)."""
     from repro.core import diversity_of_subset
     pts = sphere_dataset(2000, k=6, dim=3, seed=9)
-    idx = select_diverse(pts, 6, measure="remote-edge", kprime=64)
+    idx = repro.diversify(pts, k=6, measure="remote-edge",
+                          execution=repro.ExecutionSpec(kprime=64)).indices
     got = diversity_of_subset("remote-edge", pts, idx, "euclidean")
     planted = np.where(np.linalg.norm(pts, axis=1) > 0.99)[0][:6]
     ref = diversity_of_subset("remote-edge", pts, planted, "euclidean")
@@ -50,7 +51,8 @@ def test_diverse_data_selection_end_to_end():
     """Select diverse LM examples via the MR pathway (2 reducers)."""
     toks = np.random.default_rng(2).integers(0, 512, size=(64, 12))
     emb = embed_examples(toks, dim=8)
-    idx = select_diverse(emb, 8, num_reducers=2, kprime=16)
+    idx = repro.diversify(emb, k=8, execution=repro.ExecutionSpec(
+        mode="mapreduce", num_reducers=2, kprime=16)).indices
     assert len(np.unique(idx)) == 8
 
 
@@ -68,7 +70,7 @@ def test_serving_engine_greedy_decode():
 
 def test_diverse_rerank():
     embs = np.random.default_rng(5).normal(size=(40, 8)).astype(np.float32)
-    idx = diverse_rerank(embs, 4)
+    idx = repro.diversify(embs, k=4).indices
     assert len(np.unique(idx)) == 4
 
 
