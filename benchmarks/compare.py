@@ -51,6 +51,12 @@ SPECS = {
         "scope": "global",
         "quality": "value_ratio_vs_single",
     },
+    "BENCH_resilience.json": {
+        "key": ("path",),
+        "is_ref": lambda r: r["path"] == "mr-nofault",
+        "scope": "global",
+        "quality": None,
+    },
 }
 
 
@@ -82,6 +88,11 @@ def normalized_times(doc: dict, spec: dict) -> Dict[str, float]:
 #: deterministic, so the threshold is tight and there is no min-time waiver.
 GATED_COUNTERS = ("host_syncs", "bytes_swept")
 COUNTER_THRESHOLD = 0.10
+
+#: resilience counters are exact budgets, gated even from a zero base: a
+#: scenario whose baseline never retried (or checkpointed) must not start —
+#: a fresh>0 over base==0 is a behavior change the ratio test cannot see.
+ZERO_BASE_GATED_COUNTERS = ("retries", "checkpoints_written")
 
 
 def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
@@ -123,8 +134,10 @@ def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
                     f"{100 * threshold:.0f}% threshold)")
         bc = (braw.get(key) or {}).get("counters") or {}
         fc = fraw[key].get("counters") or {}
-        for cname in GATED_COUNTERS:
-            if cname in bc and cname in fc and bc[cname] > 0:
+        for cname in GATED_COUNTERS + ZERO_BASE_GATED_COUNTERS:
+            if cname not in bc or cname not in fc:
+                continue
+            if bc[cname] > 0:
                 cdelta = fc[cname] / bc[cname] - 1.0
                 rec[f"{cname}_delta"] = cdelta
                 if cdelta > COUNTER_THRESHOLD:
@@ -132,6 +145,10 @@ def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
                         f"{key}: {cname} {bc[cname]:,} -> {fc[cname]:,} "
                         f"(+{100 * cdelta:.0f}% > "
                         f"{100 * COUNTER_THRESHOLD:.0f}% counter threshold)")
+            elif cname in ZERO_BASE_GATED_COUNTERS and fc[cname] > 0:
+                regressions.append(
+                    f"{key}: {cname} 0 -> {fc[cname]:,} (scenario gained "
+                    f"{cname} its baseline never performed)")
         records.append(rec)
     # a row the baseline gates that vanished from the fresh run is itself a
     # regression (lost coverage must not read as green)

@@ -133,6 +133,16 @@ def main(argv=None) -> None:
                 "Adaptive engine"))
 
     print("\n" + "=" * 72)
+    print("Resilience — retry / degrade / checkpoint / resume "
+          "(BENCH_resilience.json)")
+    print("=" * 72)
+    from benchmarks import bench_resilience
+    rows = bench_resilience.run(quick=quick)
+    bench_resilience.emit_json(rows, path="BENCH_resilience.json")
+    print(table(rows, ["path", "n", "k'", "time_s", "degraded"],
+                "Resilience"))
+
+    print("\n" + "=" * 72)
     print("Observability — traced representative runs (BENCH_trace.json)")
     print("=" * 72)
     emit_trace_artifact(quick=quick)

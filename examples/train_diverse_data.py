@@ -22,7 +22,8 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 import repro
 from repro.data import embed_examples, lm_batch
-from repro.distributed import FailureInjector, TrainingSupervisor
+from repro.distributed import (FailureInjector, ResiliencePolicy,
+                               TrainingSupervisor)
 from repro.models.common import ShardingRules
 from repro.train import AdamW, cosine_schedule, make_train_step
 
@@ -76,8 +77,10 @@ def main():
 
     with tempfile.TemporaryDirectory() as d:
         sup = TrainingSupervisor(
-            CheckpointManager(d, keep_k=2), ckpt_every=50,
-            injector=FailureInjector(fail_at=(args.steps // 2,)))
+            CheckpointManager(d, keep_k=2),
+            policy=ResiliencePolicy(
+                max_retries=8, deadline_factor=3.0, checkpoint_every=50,
+                injector=FailureInjector(fail_at=(args.steps // 2,))))
         sup.run(state, step_fn, args.steps, batch_fn)
         losses = sup.report.losses
         print(f"steps={sup.report.final_step}  resumes={sup.report.resumes} "

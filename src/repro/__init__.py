@@ -7,8 +7,11 @@ The one front door is ``repro.diversify(ProblemSpec, ExecutionSpec)`` (see
 
 _API = ("diversify", "plan", "ProblemSpec", "ExecutionSpec", "Plan",
         "DiversityResult")
+# resilience surface (repro.distributed) re-exported for the common
+# ``ExecutionSpec(resilience=repro.ResiliencePolicy(...))`` spelling
+_RESILIENCE = ("ResiliencePolicy", "FailureInjector")
 
-__all__ = list(_API)
+__all__ = list(_API) + list(_RESILIENCE)
 
 
 def __getattr__(name):
@@ -16,4 +19,7 @@ def __getattr__(name):
     if name in _API:
         from repro import api
         return getattr(api, name)
+    if name in _RESILIENCE:
+        from repro import distributed
+        return getattr(distributed, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -111,7 +111,12 @@ class ExecutionSpec:
     to pin them (``kprime=None`` = the paper default ``max(2k, 32)``).
     ``tau``/``cliff`` override the controller's greedy-consistency bars.
     ``smm_mode`` overrides the streaming state layout (``plain``/``ext``/
-    ``gen``; None derives it from the measure).
+    ``gen``; None derives it from the measure).  ``resilience`` is an
+    optional ``repro.distributed.ResiliencePolicy`` governing how streaming
+    and mapreduce runs survive faults (per-reducer retry with backoff,
+    certified graceful degradation, streaming checkpoint/resume through
+    ``CheckpointManager``); the resolved policy shows in ``plan.explain()``
+    and the run's report lands in ``telemetry.extras["resilience"]``.
     """
     mode: str = "auto"
     mesh: Any = None
@@ -133,6 +138,7 @@ class ExecutionSpec:
     smm_mode: Optional[str] = None
     tau: Optional[float] = None
     cliff: Optional[float] = None
+    resilience: Any = None
     # observability: False = phase wall-clocks only (near-zero overhead),
     # True = full RunTrace (counters + nested spans + profiler annotations),
     # "reducers" = additionally time each simulated-MR reducer sequentially,
@@ -273,6 +279,11 @@ class Plan:
             + (f", feasible greedy + {self.execution.swap_rounds}"
                " swap rounds" if self.constrained else ""),
         ]
+        # printed only when a policy is set — the default (no resilience)
+        # keeps the golden explain() output of policy-free plans unchanged
+        if self.execution.resilience is not None:
+            lines.append(
+                f"  resilience: {self.execution.resilience.describe()}")
         if actual:
             lines.extend(self._explain_actual())
         return "\n".join(lines)
@@ -427,6 +438,20 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
                                                        "gen"):
         raise ValueError(f"smm_mode must be one of 'plain'/'ext'/'gen', "
                          f"got {ex.smm_mode!r}")
+    if ex.resilience is not None:
+        from repro.distributed.fault_tolerance import ResiliencePolicy
+        if not isinstance(ex.resilience, ResiliencePolicy):
+            raise TypeError("resilience= must be a "
+                            "repro.distributed.ResiliencePolicy, got "
+                            f"{type(ex.resilience).__name__}")
+        if mode == "batch":
+            raise ValueError("resilience= applies to streaming and "
+                             "mapreduce runs (batch is one local dispatch "
+                             "with nothing to retry or degrade to)")
+        if (mode == "streaming" and constrained
+                and ex.resilience.checkpoint_dir is not None):
+            raise ValueError("checkpoint/resume is not yet supported for "
+                             "constrained streams (retry/degrade are)")
 
     # ---- variant ---------------------------------------------------------
     generalized = ex.generalized or (ex.smm_mode == "gen")
@@ -652,28 +677,73 @@ def _run_streaming(plan_: Plan, tr) -> DiversityResult:
     from repro.core.sequential import solve_on_coreset
 
     p, kb = plan_.problem, plan_.knobs
+    pol = plan_.execution.resilience
     smm: Optional[StreamingCoreset] = None
     dim = plan_.d
     t = time.perf_counter()
     n_seen = 0
-    for chunk in _chunks_of(p, kb["chunk"], constrained=False):
+    report = mgr = None
+    chunks_done = 0          # chunks already folded in (restored on resume)
+    lost_points = 0
+    if pol is not None:
+        from repro.distributed.fault_tolerance import (ResilienceReport,
+                                                       run_unit)
+        report = ResilienceReport(scope="chunk", policy=pol.describe())
+        if pol.checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            mgr = CheckpointManager(pol.checkpoint_dir, keep_k=2)
+            smm, step = StreamingCoreset.restore(mgr)
+            if smm is not None:
+                # the SMM state is chunk-invariant, so replaying the source
+                # and skipping the first ``step`` chunks continues the run
+                # bit-identically from the checkpoint
+                chunks_done = step
+                n_seen = smm.n_seen
+                dim = smm.dim
+                report.resumed_from = step
+    for j, chunk in enumerate(_chunks_of(p, kb["chunk"], constrained=False)):
+        if j < chunks_done:
+            continue
         chunk = np.atleast_2d(np.asarray(chunk, np.float32))
         if smm is None:
             dim = chunk.shape[1] if dim is None else dim
             smm = StreamingCoreset(p.k, int(kb["kprime"]), dim,
                                    metric=p.metric, mode=plan_.variant,
                                    eps=kb["eps"])
-        smm.update(chunk)
+        if pol is None:
+            smm.update(chunk)
+        else:
+            ran = run_unit(lambda: smm.update(chunk), pol,
+                           point=f"chunk:{j}", unit=j, report=report)
+            if not ran:
+                lost_points += chunk.shape[0]
         n_seen += chunk.shape[0]
+        chunks_done = j + 1
+        if mgr is not None and chunks_done % pol.checkpoint_every == 0:
+            smm.save(mgr, chunks_done)
+            report.checkpoints_written += 1
     if smm is None:
         raise ValueError("empty stream")
     t = tr.phase("stream", t, sync=smm.state)
     cs = smm.finalize()
+    if report is not None and report.degraded:
+        # dropped chunks: the core-set covers the consumed points only —
+        # stamp the certificate with the chunk-level coverage accounting
+        # ("shards" reads "chunks" for a streaming run)
+        surv = tuple(i for i in range(chunks_done)
+                     if i not in set(report.failed))
+        cert = dataclasses.replace(
+            cs.cert, degraded=True, surviving_shards=surv,
+            total_shards=chunks_done,
+            points_covered=n_seen - lost_points, points_total=n_seen)
+        cs = cs._replace(cert=cert)
     t = tr.phase("finalize", t, sync=cs)
     sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
     t = tr.phase("solve", t, sync=sol)
     value = _value_of(sol, p.measure, p.metric)
     tr.phase("value", t)
+    if report is not None:
+        tr.annotate(resilience=report.to_dict())
     return DiversityResult(
         solution=np.asarray(sol), value=value,
         _indices=_indices_of(plan_, sol), labels=None,
@@ -689,21 +759,34 @@ def _run_streaming_constrained(plan_: Plan, tr) -> DiversityResult:
     from repro.constrained.solver import solve_and_value
 
     p, kb, mat = plan_.problem, plan_.knobs, plan_.matroid
+    pol = plan_.execution.resilience
     dim = plan_.d
     smm: Optional[FairStreamingCoreset] = None
     t = time.perf_counter()
     n_seen = 0
-    for chunk, labels in _chunks_of(p, kb["chunk"], constrained=True):
+    report = None
+    if pol is not None:
+        from repro.distributed.fault_tolerance import (ResilienceReport,
+                                                       run_unit)
+        report = ResilienceReport(scope="chunk", policy=pol.describe())
+    for j, (chunk, labels) in enumerate(_chunks_of(p, kb["chunk"],
+                                                   constrained=True)):
         chunk = np.atleast_2d(np.asarray(chunk, np.float32))
         if smm is None:
             dim = chunk.shape[1] if dim is None else dim
             smm = FairStreamingCoreset(matroid=mat, kprime=int(kb["kprime"]),
                                        dim=dim, metric=p.metric,
                                        mode=plan_.variant, eps=kb["eps"])
-        smm.update(chunk, labels)
+        if pol is None:
+            smm.update(chunk, labels)
+        else:
+            run_unit(lambda: smm.update(chunk, labels), pol,
+                     point=f"chunk:{j}", unit=j, report=report)
         n_seen += chunk.shape[0]
     if smm is None:
         raise ValueError("empty stream")
+    if report is not None:
+        tr.annotate(resilience=report.to_dict())
     t = tr.phase("stream", t, sync=getattr(smm, "state", None))
     cand_pts, cand_labels = smm.finalize()
     cert = smm.certificate()
@@ -724,17 +807,28 @@ def _run_streaming_constrained(plan_: Plan, tr) -> DiversityResult:
 def _run_mapreduce(plan_: Plan, tr) -> DiversityResult:
     p, kb, ex = plan_.problem, plan_.knobs, plan_.execution
     eps = 0.1 if kb["eps"] is None else kb["eps"]
+    pol = ex.resilience
+    report = None
     t = time.perf_counter()
     if plan_.mesh is not None:
         if ex.recursive:
             from repro.core.distributed import mr_coreset_recursive
             from repro.core.sequential import solve_on_coreset
 
-            cs = mr_coreset_recursive(p.points, p.k, kb["kprime"], p.measure,
-                                      plan_.mesh, metric=p.metric,
-                                      use_pallas=kb["use_pallas"], b=kb["b"],
-                                      chunk=kb["chunk"], eps=eps, tau=ex.tau,
-                                      cliff=ex.cliff)
+            def rounds():
+                return mr_coreset_recursive(
+                    p.points, p.k, kb["kprime"], p.measure, plan_.mesh,
+                    metric=p.metric, use_pallas=kb["use_pallas"], b=kb["b"],
+                    chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
+
+            if pol is not None:
+                import jax
+                from repro.distributed.fault_tolerance import retry_call
+                cs, report = retry_call(
+                    lambda: jax.block_until_ready(rounds()), pol,
+                    point="round:mr.recursive")
+            else:
+                cs = rounds()
             t = tr.phase("rounds", t, sync=cs)
             sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
             t = tr.phase("solve", t, sync=sol)
@@ -743,24 +837,27 @@ def _run_mapreduce(plan_: Plan, tr) -> DiversityResult:
         else:
             from repro.core.distributed import _mr_diversity_impl
 
-            sol, value, cs = _mr_diversity_impl(
+            sol, value, cs, report = _mr_diversity_impl(
                 p.points, p.k, p.measure, plan_.mesh, kprime=kb["kprime"],
                 data_axes=ex.data_axes, metric=p.metric,
                 use_pallas=kb["use_pallas"],
                 three_round=ex.three_round or plan_.variant == "gen",
                 b=kb["b"], chunk=kb["chunk"], eps=eps, tau=ex.tau,
-                cliff=ex.cliff)
+                cliff=ex.cliff, resilience=pol)
             t = tr.phase("rounds", t, sync=sol)
     else:
         from repro.core.distributed import _simulate_mr_impl
 
-        sol, value, cs = _simulate_mr_impl(
+        sol, value, cs, report = _simulate_mr_impl(
             np.asarray(p.points), p.k, p.measure,
             num_reducers=plan_.num_reducers, kprime=kb["kprime"],
             metric=p.metric, generalized=plan_.variant == "gen",
             partition=ex.partition, seed=ex.seed, b=kb["b"],
-            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
+            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff,
+            resilience=pol)
         t = tr.phase("rounds", t, sync=sol)
+    if report is not None:
+        tr.annotate(resilience=report.to_dict())
     # three-round / generalized instantiation may fall back to kernel-point
     # replicas that are not input rows — no index recovery there
     indices = (None if plan_.variant == "gen" or ex.three_round
@@ -780,21 +877,24 @@ def _run_mapreduce_constrained(plan_: Plan, tr) -> DiversityResult:
     if plan_.mesh is not None:
         from repro.constrained.mapreduce import _mr_fair_diversity_impl
 
-        sol, sol_lab, value, cert = _mr_fair_diversity_impl(
+        sol, sol_lab, value, cert, report = _mr_fair_diversity_impl(
             p.points, p.labels, matroid=mat, measure=p.measure,
             mesh=plan_.mesh, kprime=kb["kprime"], data_axes=ex.data_axes,
             metric=p.metric, use_pallas=kb["use_pallas"],
             swap_rounds=ex.swap_rounds, b=kb["b"], chunk=kb["chunk"],
-            eps=eps, tau=ex.tau, cliff=ex.cliff)
+            eps=eps, tau=ex.tau, cliff=ex.cliff, resilience=ex.resilience)
     else:
         from repro.constrained.mapreduce import _simulate_fair_mr_impl
 
-        sol, sol_lab, value, cert = _simulate_fair_mr_impl(
+        sol, sol_lab, value, cert, report = _simulate_fair_mr_impl(
             np.asarray(p.points), np.asarray(p.labels), matroid=mat,
             num_reducers=plan_.num_reducers, measure=p.measure,
             kprime=kb["kprime"], metric=p.metric, partition=ex.partition,
             seed=ex.seed, swap_rounds=ex.swap_rounds, b=kb["b"],
-            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff)
+            chunk=kb["chunk"], eps=eps, tau=ex.tau, cliff=ex.cliff,
+            resilience=ex.resilience)
+    if report is not None:
+        tr.annotate(resilience=report.to_dict())
     tr.phase("rounds", t, sync=sol)
     return DiversityResult(
         solution=np.asarray(sol), value=value,

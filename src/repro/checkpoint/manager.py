@@ -31,6 +31,27 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint is unreadable or incompatible with the restore template
+    (e.g. a template leaf missing from the archive — a renamed field, a
+    truncated write on a non-atomic filesystem, or the wrong directory)."""
+
+
+def _fsync_dir(path: str) -> None:
+    """Fsync a directory so the rename/creation it contains is durable (on
+    platforms whose dirs can't be opened for fsync, degrade gracefully)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                                  # pragma: no cover
+        return
+    try:
+        os.fsync(fd)
+    except OSError:                                  # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
 def _flatten(tree) -> dict:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -76,12 +97,22 @@ class CheckpointManager:
             tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
             final = os.path.join(self.dir, f"step_{step:09d}")
             os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            # fsync both payload files, then the tmp dir, BEFORE the rename:
+            # the atomic rename only guarantees readers never see a partial
+            # checkpoint if the contents are durable when the name appears
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
+            _fsync_dir(self.dir)
             self._gc()
 
     def wait(self):
@@ -118,6 +149,12 @@ class CheckpointManager:
         leaves = []
         for p, leaf in flat:
             key = jax.tree_util.keystr(p)
+            if key not in data.files:
+                raise CheckpointError(
+                    f"checkpoint step {step} at {path!r} has no array for "
+                    f"template leaf {key!r} (archive holds "
+                    f"{sorted(data.files)}); the template structure does "
+                    f"not match what was saved")
             arr = data[key]
             dtype = leaf.dtype
             leaves.append(jnp.asarray(arr, dtype))
@@ -127,6 +164,19 @@ class CheckpointManager:
             tree = jax.tree.map(
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree
+
+    def read_meta(self, step: int) -> dict:
+        """The meta.json of one checkpoint (``{"step", "extra"}``) — lets a
+        restorer recover host-side context (e.g. a streaming run's phase log)
+        saved via ``save(..., extra=...)``."""
+        path = os.path.join(self.dir, f"step_{step:09d}", "meta.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: unreadable meta.json at "
+                f"{path!r}: {e}") from e
 
     def restore_latest(self, template, *, shardings=None):
         step = self.latest_step()

@@ -159,10 +159,12 @@ def _mr_fair_diversity_impl(points, labels, quotas=None,
                             metric="euclidean",
                             use_pallas: bool = False, swap_rounds: int = 10,
                             b=1, chunk: int = 0, eps: float = 0.1,
-                            tau=None, cliff=None):
+                            tau=None, cliff=None, resilience=None):
     """Execution body of the constrained mesh MR pipeline (no deprecation
     warning — the ``repro.diversify`` facade routes here).  Returns
-    (sol, sol_labels, value, cert)."""
+    (sol, sol_labels, value, cert, report).  Like the unconstrained mesh
+    path, a ``ResiliencePolicy`` retries the whole sharded round-1 dispatch
+    (one collective: no per-reducer unit to degrade to)."""
     from .matroid import as_matroid
 
     if mesh is None:
@@ -171,15 +173,25 @@ def _mr_fair_diversity_impl(points, labels, quotas=None,
     m, k = mat.m, mat.k
     if kprime is None:
         kprime = max(2 * k, 32)
-    cs = mr_grouped_coreset(points, labels, m, k, kprime, measure, mesh,
-                            data_axes=data_axes, metric=metric,
-                            use_pallas=use_pallas, b=b, chunk=chunk,
-                            eps=eps, tau=tau, cliff=cliff)
+
+    def round1():
+        return mr_grouped_coreset(points, labels, m, k, kprime, measure,
+                                  mesh, data_axes=data_axes, metric=metric,
+                                  use_pallas=use_pallas, b=b, chunk=chunk,
+                                  eps=eps, tau=tau, cliff=cliff)
+
+    report = None
+    if resilience is not None:
+        from repro.distributed.fault_tolerance import retry_call
+        cs, report = retry_call(lambda: jax.block_until_ready(round1()),
+                                resilience, point="round:mr.round1")
+    else:
+        cs = round1()
     cand_pts, cand_lab = cs.compact()
     sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
                                  matroid=mat, metric=metric,
                                  swap_rounds=swap_rounds)
-    return cand_pts[sel], cand_lab[sel], value, cs.cert
+    return cand_pts[sel], cand_lab[sel], value, cs.cert, report
 
 
 def mr_fair_diversity(points, labels, quotas=None, measure: str = "remote-edge",
@@ -259,16 +271,50 @@ def _sim_round1_detail(shards, slabels, m: int, k: int, kprime: int,
                  for j in range(4))
 
 
+def _sim_round1_resilient(shards, slabels, m: int, k: int, kprime: int,
+                          metric_name: str, mode: str, b, chunk, schedule,
+                          policy):
+    """Constrained analogue of ``core.distributed._sim_round1_resilient``:
+    per-reducer dispatch with retry/degrade; failed reducers contribute
+    all-zeros blocks with ``valid=False`` (the per-group composition is
+    preserved — a dropped reducer only removes its shard's candidates).
+    Returns (pts, labels, valid, radius, report)."""
+    from repro.distributed.fault_tolerance import run_resilient
+
+    l = int(shards.shape[0])
+
+    def run_one(i):
+        with _span(f"mr.reducer[{i}]", reducer=i):
+            out = jax.block_until_ready(_sim_round1(
+                shards[i:i + 1], slabels[i:i + 1], m, k, kprime, metric_name,
+                mode, b, chunk, schedule))
+        _count("device_dispatches")
+        return out
+
+    outs, report = run_resilient(l, run_one, policy, scope="reducer")
+    ok = [o for o in outs if o is not None]
+    if not ok:
+        raise RuntimeError(
+            f"all {l} reducers failed under on_failure="
+            f"{policy.on_failure!r}; nothing to merge")
+    outs = [o if o is not None else jax.tree.map(jnp.zeros_like, ok[0])
+            for o in outs]
+    merged = tuple(jnp.concatenate([o[j] for o in outs], axis=0)
+                   for j in range(4))
+    return merged + (report,)
+
+
 def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
                            num_reducers: int,
                            measure: str = "remote-edge",
                            kprime=None, metric="euclidean",
                            partition: str = "contiguous", seed: int = 0,
                            swap_rounds: int = 10, b=1, chunk: int = 0,
-                           eps: float = 0.1, tau=None, cliff=None):
+                           eps: float = 0.1, tau=None, cliff=None,
+                           resilience=None):
     """Execution body of the simulated ℓ-reducer constrained MR run (no
     deprecation warning — the ``repro.diversify`` facade routes here).
-    Returns (sol, sol_labels, value, cert)."""
+    Returns (sol, sol_labels, value, cert, report)."""
     from repro.core.distributed import partition_shards
 
     from .matroid import as_matroid
@@ -294,7 +340,12 @@ def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
         from repro.core.distributed import _count_round1
         _count_round1(num_reducers, int(shards.shape[1]), d, kprime, b,
                       schedule, mode)
-    if _reducer_detail():
+    report = None
+    if resilience is not None:
+        g_pts, g_lab, g_valid, g_rad, report = _sim_round1_resilient(
+            shards, slabels, m, k, kprime, get_metric(metric).name, mode,
+            b, chunk, schedule, resilience)
+    elif _reducer_detail():
         g_pts, g_lab, g_valid, g_rad = _sim_round1_detail(
             shards, slabels, m, k, kprime, get_metric(metric).name, mode,
             b, chunk, schedule)
@@ -307,6 +358,13 @@ def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
             _count("device_dispatches")
             if _counting():
                 jax.block_until_ready(g_rad)
+    if report is not None and report.degraded:
+        from repro.distributed.fault_tolerance import degraded_certificate
+        cert = degraded_certificate(cert, kprime=kprime,
+                                    radius=float(jnp.max(g_rad)),
+                                    survivors=report.survivors,
+                                    total=num_reducers,
+                                    per_shard=int(shards.shape[1]))
     flat_pts = np.asarray(g_pts.reshape(-1, d))
     flat_lab = np.asarray(g_lab.reshape(-1))
     flat_valid = np.asarray(g_valid.reshape(-1))
@@ -315,7 +373,7 @@ def _simulate_fair_mr_impl(points, labels, quotas=None, *, matroid=None,
     sel, value = solve_and_value(cand_pts, cand_lab, measure=measure,
                                  matroid=mat, metric=metric,
                                  swap_rounds=swap_rounds)
-    return cand_pts[sel], cand_lab[sel], value, cert
+    return cand_pts[sel], cand_lab[sel], value, cert, report
 
 
 def simulate_fair_mr(points, labels, quotas=None, *, matroid=None,

@@ -101,6 +101,16 @@ class RadiusCertificate:
     b_schedule: Tuple[Tuple[int, int], ...] = ()
     kind: str = "batch"
     group_ratios: Optional[Tuple[float, ...]] = None
+    # Graceful-degradation accounting (ResiliencePolicy(on_failure="degrade")
+    # dropping failed reducers): the composable core-set property makes the
+    # surviving merge a valid core-set OF THE SURVIVING SHARDS ONLY, so the
+    # certificate must say which shards it covers.  ``points_covered`` /
+    # ``points_total`` count shard rows (padded partitions).
+    degraded: bool = False
+    surviving_shards: Optional[Tuple[int, ...]] = None
+    total_shards: Optional[int] = None
+    points_covered: Optional[int] = None
+    points_total: Optional[int] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

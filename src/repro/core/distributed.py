@@ -224,21 +224,33 @@ def _mr_diversity_impl(points, k: int, measure: str, mesh: Mesh, *,
                        metric="euclidean",
                        use_pallas: bool = False, three_round: bool = False,
                        b=1, chunk: int = 0, eps: float = 0.1,
-                       tau=None, cliff=None):
+                       tau=None, cliff=None, resilience=None):
     """Execution body of the mesh MR pipeline (no deprecation warning — the
-    ``repro.diversify`` facade routes here).  Returns (sol, value, cs)."""
+    ``repro.diversify`` facade routes here).  Returns (sol, value, cs,
+    report).  A ``ResiliencePolicy`` retries the whole sharded round-1
+    dispatch: the shard_map launch is one collective, so there is no
+    per-reducer unit to degrade to — ``on_failure="degrade"`` behaves like
+    retry-then-raise here (documented in ``retry_call``)."""
     if kprime is None:
         kprime = max(2 * k, 32)
+
+    def round1(generalized):
+        return mr_coreset(points, k, kprime, measure, mesh,
+                          data_axes=data_axes, metric=metric,
+                          use_pallas=use_pallas, generalized=generalized,
+                          b=b, chunk=chunk, eps=eps, tau=tau, cliff=cliff)
+
+    report = None
+    if resilience is not None:
+        from repro.distributed.fault_tolerance import retry_call
+        cs, report = retry_call(
+            lambda: jax.block_until_ready(round1(three_round)),
+            resilience, point="round:mr.round1")
+    else:
+        cs = round1(three_round)
     if not three_round:
-        cs = mr_coreset(points, k, kprime, measure, mesh, data_axes=data_axes,
-                        metric=metric, use_pallas=use_pallas, b=b, chunk=chunk,
-                        eps=eps, tau=tau, cliff=cliff)
         sol = solve_on_coreset(cs, k, measure, metric=metric)
     else:
-        cs = mr_coreset(points, k, kprime, measure, mesh,
-                        data_axes=data_axes, metric=metric,
-                        use_pallas=use_pallas, generalized=True,
-                        b=b, chunk=chunk, eps=eps, tau=tau, cliff=cliff)
         pts, mult = cs.compact()
         idx = solve(measure, pts, k, weights=mult, metric=metric)
         uniq, counts = np.unique(idx, return_counts=True)
@@ -247,7 +259,7 @@ def _mr_diversity_impl(points, k: int, measure: str, mesh: Mesh, *,
                           float(cs.radius), metric=metric)
     met = get_metric(metric)
     dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
-    return sol, diversity(measure, dm), cs
+    return sol, diversity(measure, dm), cs, report
 
 
 def mr_diversity(points, k: int, measure: str, mesh: Mesh, *,
@@ -415,30 +427,71 @@ def _sim_round1_detail(shards, k: int, kprime: int, metric: str, mode: str,
                  for j in range(3))
 
 
+def _sim_round1_resilient(shards, k: int, kprime: int, metric: str,
+                          mode: str, b, chunk, schedule, policy):
+    """Round 1 under a ``ResiliencePolicy``: the same jitted body as
+    ``_sim_round1``, dispatched once per reducer (the ``_sim_round1_detail``
+    pattern) so each reducer is an independently retryable unit.  Failed
+    reducers (``on_failure="degrade"``) contribute an all-zeros block with
+    ``valid=False`` — the merged layout is identical to the vmapped launch,
+    and the composable core-set property keeps the surviving union a valid
+    core-set of the surviving shards.  Returns (pts, valid, radius, report).
+    """
+    from repro.distributed.fault_tolerance import run_resilient
+
+    l = int(shards.shape[0])
+
+    def run_one(i):
+        with _span(f"mr.reducer[{i}]", reducer=i):
+            out = jax.block_until_ready(_sim_round1(
+                shards[i:i + 1], k, kprime, metric, mode, b, chunk,
+                schedule))
+        _count("device_dispatches")
+        return out
+
+    outs, report = run_resilient(l, run_one, policy, scope="reducer")
+    ok = [o for o in outs if o is not None]
+    if not ok:
+        raise RuntimeError(
+            f"all {l} reducers failed under on_failure="
+            f"{policy.on_failure!r}; nothing to merge")
+    outs = [o if o is not None else jax.tree.map(jnp.zeros_like, ok[0])
+            for o in outs]
+    merged = tuple(jnp.concatenate([o[j] for o in outs], axis=0)
+                   for j in range(3))
+    return merged + (report,)
+
+
 def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
                       kprime=None, metric="euclidean",
                       generalized: bool = False,
                       partition: str = "contiguous",
                       seed: int = 0, b=1, chunk: int = 0, eps: float = 0.1,
-                      tau=None, cliff=None):
+                      tau=None, cliff=None, resilience=None):
     """Execution body of the simulated ℓ-reducer MR run (no deprecation
     warning — the ``repro.diversify`` facade routes here).  Returns
-    (sol, value, cs)."""
+    (sol, value, cs, report) — ``report`` is the ``ResilienceReport`` when a
+    ``ResiliencePolicy`` governed the run, else None."""
     if kprime is None:
         kprime = max(2 * k, 32)
     pts, shards, _ = partition_shards(points, num_reducers,
                                       partition=partition, seed=seed)
     d = pts.shape[1]
+    per_shard = int(shards.shape[1])
     kprime, schedule, b, cert = _resolve_reducer_plan(
         pts, k, kprime, b, eps=eps, metric=metric, chunk=chunk,
-        per_shard=shards.shape[1], tau=tau, cliff=cliff)
+        per_shard=per_shard, tau=tau, cliff=cliff)
 
     mode = ("gen" if generalized else
             "ext" if measure in NEEDS_INJECTIVE else "plain")
     if _counting():
-        _count_round1(num_reducers, int(shards.shape[1]), d, kprime, b,
+        _count_round1(num_reducers, per_shard, d, kprime, b,
                       schedule, mode)
-    if _reducer_detail():
+    report = None
+    if resilience is not None:
+        g_pts, g_valid, g_rad, report = _sim_round1_resilient(
+            shards, k, kprime, metric, mode, b, chunk, schedule, resilience)
+    elif _reducer_detail():
         g_pts, g_valid, g_rad = _sim_round1_detail(shards, k, kprime, metric,
                                                    mode, b, chunk, schedule)
     else:
@@ -451,15 +504,27 @@ def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
     flat_pts = g_pts.reshape(-1, d)
     flat_valid = g_valid.reshape(-1)
     radius = jnp.max(g_rad)
+    if report is not None and report.degraded:
+        from repro.distributed.fault_tolerance import degraded_certificate
+        cert = degraded_certificate(cert, kprime=kprime,
+                                    radius=float(radius),
+                                    survivors=report.survivors,
+                                    total=num_reducers, per_shard=per_shard)
 
     if generalized:
-        # rerun per-shard to obtain integer multiplicities
+        # rerun per-shard to obtain integer multiplicities (survivors only
+        # under a degraded run — the dropped shards contribute nothing)
+        survivors = (tuple(range(num_reducers)) if report is None
+                     else report.survivors)
+        gshards = (shards if len(survivors) == num_reducers
+                   else shards[jnp.asarray(survivors)])
+
         def one(s):
             g = _gmm_gen(s, k, kprime, metric=metric, b=b, chunk=chunk,
                          schedule=schedule)
             return g.points, g.multiplicity, g.radius
-        with _span("mr.round1.multiplicities", reducers=num_reducers):
-            gp, gm, gr = jax.jit(jax.vmap(one))(shards)
+        with _span("mr.round1.multiplicities", reducers=len(survivors)):
+            gp, gm, gr = jax.jit(jax.vmap(one))(gshards)
             _count("device_dispatches")
             if _counting():
                 jax.block_until_ready(gr)
@@ -479,7 +544,7 @@ def _simulate_mr_impl(points, k: int, measure: str, *, num_reducers: int,
 
     met = get_metric(metric)
     dm = np.asarray(met.pairwise(jnp.asarray(sol), jnp.asarray(sol)))
-    return sol, diversity(measure, dm), cs
+    return sol, diversity(measure, dm), cs, report
 
 
 def simulate_mr(points, k: int, measure: str, *, num_reducers: int,

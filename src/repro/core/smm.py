@@ -480,6 +480,104 @@ class StreamingCoreset:
         """Per-merge (n_seen, d_i) re-certification log (read-only copy)."""
         return tuple(self._phase_log)
 
+    # -- checkpoint / resume -------------------------------------------------
+    # The SMM state is chunk-invariant: everything a resumed run needs is the
+    # SMMState arrays plus a handful of host-side scalars (n_seen, the phase
+    # log, the pre-boot prefix buffer).  Serializing exactly that through
+    # CheckpointManager therefore gives BIT-IDENTICAL resume — a stream
+    # killed mid-way and restored finalizes to the same core-set and
+    # certificate as an uninterrupted run (asserted in tests/test_resilience).
+
+    def _zero_state(self) -> SMMState:
+        """An all-zeros SMMState with this stream's shapes/dtypes — the
+        restore template (CheckpointManager takes shapes from the archive,
+        dtypes + tree structure from the template)."""
+        cap, dim = self.cap, self.dim
+        k_slots = self.k if self.mode == "ext" else 1
+        return SMMState(
+            T=jnp.zeros((cap, dim), self.dtype),
+            t_valid=jnp.zeros((cap,), bool),
+            e_pts=jnp.zeros((cap, k_slots, dim), self.dtype),
+            e_cnt=jnp.zeros((cap,), jnp.int32),
+            M=jnp.zeros((cap, dim), self.dtype),
+            m_valid=jnp.zeros((cap,), bool),
+            d_thr=jnp.asarray(0.0, self.dtype),
+            n_phases=jnp.asarray(0, jnp.int32))
+
+    def state_dict(self):
+        """``(arrays, meta)`` snapshot of the entire streaming progress.
+        ``arrays`` is a flat dict of jax arrays (the SMMState fields plus the
+        pre-boot prefix buffer); ``meta`` holds the host-side scalars and the
+        phase log (JSON-serializable, stored in the checkpoint's meta.json)."""
+        prefix = (np.concatenate(self._prefix, axis=0) if self._prefix
+                  else np.zeros((0, self.dim), np.float32))
+        booted = self._state is not None
+        st = self._state if booted else self._zero_state()
+        arrays = {"prefix": jnp.asarray(prefix, self.dtype),
+                  "T": st.T, "t_valid": st.t_valid, "e_pts": st.e_pts,
+                  "e_cnt": st.e_cnt, "M": st.M, "m_valid": st.m_valid,
+                  "d_thr": st.d_thr, "n_phases": st.n_phases}
+        meta = {"k": self.k, "kprime": self.kprime, "dim": self.dim,
+                "metric": self.metric, "mode": self.mode, "eps": self.eps,
+                "dtype": np.dtype(self.dtype).name,
+                "n_seen": int(self.n_seen),
+                "n_prefix": int(prefix.shape[0]),
+                "n_processed": int(getattr(self, "_n_processed", 0)),
+                "booted": booted,
+                "phase_log": [[int(n), float(d)] for n, d in self._phase_log]}
+        return arrays, meta
+
+    def save(self, manager, step: int) -> None:
+        """Blocking checkpoint at ``step`` (for a stream: chunks consumed so
+        far) through a ``repro.checkpoint.CheckpointManager``."""
+        arrays, meta = self.state_dict()
+        manager.save(step, arrays, extra=meta, blocking=True)
+        _count("checkpoints_written")
+
+    @classmethod
+    def from_state_dict(cls, arrays, meta) -> "StreamingCoreset":
+        smm = cls(int(meta["k"]), int(meta["kprime"]), int(meta["dim"]),
+                  metric=meta["metric"], mode=meta["mode"],
+                  dtype=getattr(jnp, meta["dtype"]), eps=meta["eps"])
+        smm.n_seen = int(meta["n_seen"])
+        smm._phase_log = [(int(n), float(d)) for n, d in meta["phase_log"]]
+        n_prefix = int(meta["n_prefix"])
+        if n_prefix:
+            smm._prefix = [np.asarray(arrays["prefix"])[:n_prefix]]
+        if meta["booted"]:
+            smm._n_processed = int(meta["n_processed"])
+            smm._state = SMMState(
+                T=jnp.asarray(arrays["T"], smm.dtype),
+                t_valid=jnp.asarray(arrays["t_valid"], bool),
+                e_pts=jnp.asarray(arrays["e_pts"], smm.dtype),
+                e_cnt=jnp.asarray(arrays["e_cnt"], jnp.int32),
+                M=jnp.asarray(arrays["M"], smm.dtype),
+                m_valid=jnp.asarray(arrays["m_valid"], bool),
+                d_thr=jnp.asarray(arrays["d_thr"], smm.dtype),
+                n_phases=jnp.asarray(arrays["n_phases"], jnp.int32))
+        return smm
+
+    @classmethod
+    def restore(cls, manager, step: Optional[int] = None):
+        """Rebuild a ``StreamingCoreset`` from checkpoint ``step`` (default:
+        the latest).  Returns ``(smm, step)``, or ``(None, None)`` when the
+        directory holds no checkpoint yet."""
+        if step is None:
+            step = manager.latest_step()
+            if step is None:
+                return None, None
+        meta = manager.read_meta(step)["extra"]
+        tmp = cls(int(meta["k"]), int(meta["kprime"]), int(meta["dim"]),
+                  metric=meta["metric"], mode=meta["mode"],
+                  dtype=getattr(jnp, meta["dtype"]), eps=meta["eps"])
+        st = tmp._zero_state()
+        template = {"prefix": jnp.zeros((0, tmp.dim), tmp.dtype),
+                    "T": st.T, "t_valid": st.t_valid, "e_pts": st.e_pts,
+                    "e_cnt": st.e_cnt, "M": st.M, "m_valid": st.m_valid,
+                    "d_thr": st.d_thr, "n_phases": st.n_phases}
+        arrays = manager.restore(step, template)
+        return cls.from_state_dict(arrays, meta), step
+
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _topup_from_M(state: SMMState, k: int) -> SMMState:

@@ -1,12 +1,15 @@
 from .compression import (dequantize_int8, init_error_feedback, psum_bf16,
                           psum_int8_ef, quantize_int8)
 from .fault_tolerance import (FailureInjector, InjectedFailure,
+                              ResiliencePolicy, ResilienceReport,
                               StragglerPolicy, SupervisorReport,
-                              TrainingSupervisor)
+                              TrainingSupervisor, degraded_certificate,
+                              retry_call, run_resilient, run_unit)
 from .pipeline import pipeline_apply
 
 __all__ = ["dequantize_int8", "init_error_feedback", "psum_bf16",
            "psum_int8_ef", "quantize_int8", "FailureInjector",
-           "InjectedFailure", "StragglerPolicy", "SupervisorReport",
-           "TrainingSupervisor",
+           "InjectedFailure", "ResiliencePolicy", "ResilienceReport",
+           "StragglerPolicy", "SupervisorReport", "TrainingSupervisor",
+           "degraded_certificate", "retry_call", "run_resilient", "run_unit",
            "pipeline_apply"]

@@ -19,7 +19,7 @@ import repro.models as M
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config
 from repro.data import lm_batch
-from repro.distributed import TrainingSupervisor
+from repro.distributed import ResiliencePolicy, TrainingSupervisor
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import rules_for
 from repro.models.common import ShardingRules, set_current_mesh
@@ -64,8 +64,10 @@ def main(argv=None):
                         seq=args.seq, t_enc=args.seq // 2)
 
     if args.ckpt_dir:
-        sup = TrainingSupervisor(CheckpointManager(args.ckpt_dir, keep_k=3),
-                                 ckpt_every=args.ckpt_every)
+        sup = TrainingSupervisor(
+            CheckpointManager(args.ckpt_dir, keep_k=3),
+            policy=ResiliencePolicy(max_retries=8, deadline_factor=3.0,
+                                    checkpoint_every=args.ckpt_every))
         sup.run(state, step_fn, args.steps, batch_fn)
         print(f"done: {sup.report.final_step} steps, "
               f"loss {sup.report.losses[-1]:.4f}")

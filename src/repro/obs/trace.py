@@ -46,9 +46,16 @@ from typing import Any, Dict, List, Optional, Tuple
 #   jit_recompiles    backend compiles observed while the trace was active
 #   points_absorbed   stream points folded into the SMM state
 #   merges            SMM merge/restructure events (threshold doublings)
+#   retries           work units (reducers/chunks/rounds/steps) re-run after
+#                     a failure under ResiliencePolicy(on_failure="retry")
+#   failures_injected InjectedFailure events raised by a FailureInjector
+#                     (chaos drills / fault-injection matrix)
+#   checkpoints_written  CheckpointManager saves issued by a resilient run
+#   reducers_recovered   reducers that failed then succeeded on a retry
 COUNTER_NAMES = ("distance_evals", "bytes_swept", "host_syncs",
                  "device_dispatches", "pool_widenings", "jit_recompiles",
-                 "points_absorbed", "merges")
+                 "points_absorbed", "merges", "retries", "failures_injected",
+                 "checkpoints_written", "reducers_recovered")
 
 ENV_VAR = "REPRO_TRACE"
 

@@ -6,12 +6,12 @@ import pytest
 import jax
 import jax.numpy as jnp
 import repro.models as M
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 from repro.configs import get_config
 from repro.data import lm_batch
-from repro.distributed import (FailureInjector, TrainingSupervisor,
-                               init_error_feedback, psum_int8_ef,
-                               quantize_int8, dequantize_int8)
+from repro.distributed import (FailureInjector, ResiliencePolicy,
+                               TrainingSupervisor, init_error_feedback,
+                               psum_int8_ef, quantize_int8, dequantize_int8)
 from repro.models.common import ShardingRules
 from repro.train import AdamW, make_train_step
 
@@ -70,8 +70,9 @@ def test_supervisor_resumes_after_failures(tmp_path):
         return lm_batch(cfg, seed=11, step=step, batch=2, seq=8)
 
     mgr = CheckpointManager(str(tmp_path), keep_k=2)
-    sup = TrainingSupervisor(mgr, ckpt_every=3,
-                             injector=FailureInjector(fail_at=(4, 8)))
+    sup = TrainingSupervisor(mgr, policy=ResiliencePolicy(
+        max_retries=8, checkpoint_every=3,
+        injector=FailureInjector(fail_at=(4, 8))))
     final = sup.run(state, step_fn, num_steps=10, batch_fn=batch_fn)
     assert sup.report.final_step == 10
     assert sup.report.resumes == 2
@@ -95,11 +96,53 @@ def test_supervisor_cold_resume(tmp_path):
         return lm_batch(cfg, seed=12, step=step, batch=2, seq=8)
 
     mgr = CheckpointManager(str(tmp_path), keep_k=2)
-    sup1 = TrainingSupervisor(mgr, ckpt_every=2)
+    sup1 = TrainingSupervisor(mgr,
+                              policy=ResiliencePolicy(checkpoint_every=2))
     sup1.run(state, step_fn, num_steps=4, batch_fn=batch_fn)
-    sup2 = TrainingSupervisor(mgr, ckpt_every=2)
+    sup2 = TrainingSupervisor(mgr,
+                              policy=ResiliencePolicy(checkpoint_every=2))
     sup2.run(state, step_fn, num_steps=8, batch_fn=batch_fn)
     assert sup2.report.steps_run == 4  # only steps 4..8
+
+
+def test_supervisor_restart_without_checkpoint_restores_entry_state(tmp_path):
+    """Regression: a failure BEFORE the first checkpoint must replay from
+    the pristine entry state, not from the partially-updated live state
+    (the old code reset step=0 but kept the mutated state, so the replayed
+    steps compounded on top of the already-applied updates)."""
+    def step_fn(state, batch, step):
+        return state + 1.0, {"loss": float(state)}
+
+    def batch_fn(step):
+        return None
+
+    mgr = CheckpointManager(str(tmp_path), keep_k=2)
+    # checkpoint_every=100 -> no checkpoint exists when step 3 fails
+    sup = TrainingSupervisor(mgr, policy=ResiliencePolicy(
+        max_retries=2, checkpoint_every=100,
+        injector=FailureInjector(fail_at=(3,))))
+    final = sup.run(jnp.asarray(0.0), step_fn, num_steps=5,
+                    batch_fn=batch_fn)
+    # exactly-once-resume semantics: 5 effective steps from state 0.0
+    assert float(final) == 5.0
+    assert sup.report.resumes == 1
+
+
+def test_restore_missing_leaf_raises_checkpoint_error(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.arange(3, dtype=jnp.float32)})
+    with pytest.raises(CheckpointError, match="no array for template leaf"):
+        mgr.restore(1, {"a": jnp.zeros(3), "missing": jnp.zeros(2)})
+
+
+def test_read_meta_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"a": jnp.zeros(1)}, extra={"phase_log": [[8, 0.5]]})
+    meta = mgr.read_meta(2)
+    assert meta["step"] == 2
+    assert meta["extra"] == {"phase_log": [[8, 0.5]]}
+    with pytest.raises(CheckpointError):
+        mgr.read_meta(99)
 
 
 # -- compression --------------------------------------------------------------

@@ -54,22 +54,26 @@ _SUBPROC = textwrap.dedent("""
     import numpy as np
     import jax
     import jax.numpy as jnp
-    from repro.core.distributed import mr_coreset, mr_diversity, \\
-        mr_coreset_recursive
-    from repro.core import diversity_maximize
+    import repro
+    from repro.core.distributed import mr_coreset, mr_coreset_recursive
     from repro.data import sphere_dataset
 
     mesh = jax.make_mesh((8,), ("data",))
     pts = sphere_dataset(4096, k=8, dim=3, seed=5)
     cs = mr_coreset(jnp.asarray(pts), 8, 32, "remote-edge", mesh)
-    sol, val = mr_diversity(jnp.asarray(pts), 8, "remote-edge", mesh,
-                            kprime=32)
-    _, val3 = mr_diversity(jnp.asarray(pts), 8, "remote-clique", mesh,
-                           kprime=32, three_round=True)
+    val = repro.diversify(pts, k=8, measure="remote-edge",
+                          execution=repro.ExecutionSpec(
+                              mode="mapreduce", mesh=mesh, kprime=32)).value
+    val3 = repro.diversify(pts, k=8, measure="remote-clique",
+                           execution=repro.ExecutionSpec(
+                               mode="mapreduce", mesh=mesh, kprime=32,
+                               three_round=True)).value
     # recursive scheme over a (pod, data) mesh
     mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
     cs_r = mr_coreset_recursive(jnp.asarray(pts), 8, 32, "remote-edge", mesh2)
-    _, seq_val, _ = diversity_maximize(pts, 8, "remote-edge", kprime=32)
+    seq_val = repro.diversify(pts, k=8, measure="remote-edge",
+                              execution=repro.ExecutionSpec(
+                                  mode="batch", kprime=32)).value
     print(json.dumps({
         "coreset_size": int(cs.size), "mr_val": float(val),
         "mr3_val": float(val3), "rec_size": int(cs_r.size),
