@@ -1,5 +1,8 @@
 """Adaptive-engine quality/speed study: fixed b vs ``b="auto"`` across a
-cluster-count sweep (ISSUE 4 acceptance).
+cluster-count sweep (ISSUE 4 acceptance), plus the device-paced ``sprint``
+leg (ISSUE 8: ≤1.5× exact b=1 on the large shapes, bit-identical results,
+``host_syncs`` collapsed to segment-boundary counts — gated exactly, with no
+noise waiver, in ``compare.py``).
 
 The lookahead-b engine degrades when k' exceeds the data's effective cluster
 count (each sweep's first pick is exact, so quality falls toward exact GMM
@@ -99,7 +102,11 @@ def shapes(quick: bool = True) -> List[Dict]:
 
 def run(quick: bool = True, *,
         only: Optional[List[str]] = None) -> List[Dict]:
-    """Benchmark b=1 (exact), fixed b, and b="auto" per shape."""
+    """Benchmark b=1 (exact), fixed b, host-paced b="auto" and the
+    device-paced sprint controller per shape.  The ``auto`` leg pins
+    ``sprint=False`` so it stays the host-paced reference the ``sprint`` leg
+    is measured against (their results are bit-identical; only the pacing —
+    ``host_syncs`` and wall-clock — differs)."""
     rows: List[Dict] = []
     for sh in shapes(quick):
         if only and sh["name"] not in only:
@@ -111,14 +118,20 @@ def run(quick: bool = True, *,
         engines = [
             lambda: gmm(pts, kp).min_dist,
             lambda: gmm_batched(pts, kp, b=b, chunk=chunk)[2],
-            lambda: gmm_adaptive(pts, kp, b0=b, chunk=chunk).min_dist,
+            lambda: gmm_adaptive(pts, kp, b0=b, chunk=chunk,
+                                 sprint=False).min_dist,
+            lambda: gmm_adaptive(pts, kp, b0=b, chunk=chunk,
+                                 sprint=True).min_dist,
         ]
-        (t_b1, t_bf, t_auto), cycles = _time_all(engines)
+        (t_b1, t_bf, t_auto, t_sprint), cycles = _time_all(engines)
         counters = [counters_of(fn) for fn in engines]
         r_b1 = float(gmm(pts, kp).radius)
         r_bf = float(gmm_batched(pts, kp, b=b, chunk=chunk)[1])
-        res = gmm_adaptive(pts, kp, b0=b, chunk=chunk)
+        res = gmm_adaptive(pts, kp, b0=b, chunk=chunk, sprint=False)
         r_auto = float(res.radius)
+        res_sprint = gmm_adaptive(pts, kp, b0=b, chunk=chunk, sprint=True)
+        r_sprint = float(res_sprint.radius)
+        assert res_sprint.schedule == res.schedule  # bit-identical pacing
 
         # speedup = median of per-cycle ratios (load-correlated; see
         # _time_all) — best-of times still reported for trend reading
@@ -126,7 +139,8 @@ def run(quick: bool = True, *,
                              axis=0)
         for (engine, t, r), sp, cnt in zip(
                 (("b1", t_b1, r_b1), (f"b{b}", t_bf, r_bf),
-                 ("auto", t_auto, r_auto)), speedups, counters):
+                 ("auto", t_auto, r_auto), ("sprint", t_sprint, r_sprint)),
+                speedups, counters):
             rows.append({
                 "shape": sh["name"], "engine": engine, "n": sh["n"],
                 "d": sh["d"], "clusters": sh["clusters"] or 0, "kprime": kp,
@@ -137,20 +151,29 @@ def run(quick: bool = True, *,
                 "speedup_vs_b1": round(float(sp), 2),
                 "counters": cnt,
             })
-        rows[-1]["b_schedule"] = [list(ph) for ph in res.schedule]
+        rows[-1]["b_schedule"] = [list(ph) for ph in res_sprint.schedule]
+        rows[-2]["b_schedule"] = [list(ph) for ph in res.schedule]
         print(f"[adaptive] {sh['name']:<14} b1={t_b1:6.3f}s "
-              f"b{b}={t_bf:6.3f}s (r×{rows[-2]['radius_ratio_vs_b1']:.3f}) "
-              f"auto={t_auto:6.3f}s (r×{rows[-1]['radius_ratio_vs_b1']:.3f},"
-              f" {res.schedule})")
+              f"b{b}={t_bf:6.3f}s (r×{rows[-3]['radius_ratio_vs_b1']:.3f}) "
+              f"auto={t_auto:6.3f}s (r×{rows[-2]['radius_ratio_vs_b1']:.3f},"
+              f" {res.schedule}) sprint={t_sprint:6.3f}s "
+              f"(syncs {counters[2]['host_syncs']}"
+              f"->{counters[3]['host_syncs']})")
     return rows
 
 
 def summarize(rows: List[Dict]) -> Dict:
     """Acceptance view: worst auto radius ratio anywhere, min auto speedup
-    on the large shapes, and the fixed-b worst ratio (the gap auto closes)."""
+    on the large shapes, the fixed-b worst ratio (the gap auto closes), and
+    the sprint acceptance — ≤1.5× exact b=1 normalized time on every large
+    shape with host_syncs collapsed to segment-boundary counts."""
     auto = [r for r in rows if r["engine"] == "auto"]
-    fixed = [r for r in rows if r["engine"] not in ("auto", "b1")]
+    fixed = [r for r in rows if r["engine"] not in ("auto", "sprint", "b1")]
+    sprint = [r for r in rows if r["engine"] == "sprint"]
     large = [r for r in auto if r["large"]]
+    b1 = {r["shape"]: r["time_s"] for r in rows if r["engine"] == "b1"}
+    sprint_norm = [r["time_s"] / max(b1.get(r["shape"], 0.0), 1e-9)
+                   for r in sprint if r["large"]]
     return {
         "auto_worst_radius_ratio": max((r["radius_ratio_vs_b1"]
                                         for r in auto), default=0.0),
@@ -160,6 +183,11 @@ def summarize(rows: List[Dict]) -> Dict:
                                       default=0.0),
         "auto_radius_within_10pct": all(r["radius_ratio_vs_b1"] <= 1.10
                                         for r in auto),
+        "sprint_max_norm_large": round(float(max(sprint_norm, default=0.0)),
+                                       4),
+        "sprint_within_1_5x_b1_large": all(x <= 1.5 for x in sprint_norm),
+        "sprint_max_host_syncs": max((r["counters"]["host_syncs"]
+                                      for r in sprint), default=0),
     }
 
 

@@ -36,9 +36,10 @@ def fmt(x, nd=4):
 
 
 #: counters the bench artifacts carry per row (benchmarks/compare.py gates
-#: host_syncs / bytes_swept at +10%); see repro.obs COUNTER_NAMES.
+#: host_syncs / bytes_swept at +10%, and sprint rows' host_syncs exactly);
+#: see repro.obs COUNTER_NAMES.
 COUNTER_KEYS = ("distance_evals", "bytes_swept", "host_syncs",
-                "device_dispatches")
+                "device_dispatches", "sprint_segments")
 
 
 def counters_of(fn: Callable, keys=COUNTER_KEYS) -> Dict[str, int]:

@@ -44,6 +44,7 @@ SPECS = {
         "is_ref": lambda r: r["engine"] == "b1",
         "scope": "shape",
         "quality": "radius_ratio_vs_b1",
+        "row_gates": "sprint",
     },
     "BENCH_constrained.json": {
         "key": ("path",),
@@ -93,6 +94,38 @@ COUNTER_THRESHOLD = 0.10
 #: scenario whose baseline never retried (or checkpointed) must not start —
 #: a fresh>0 over base==0 is a behavior change the ratio test cannot see.
 ZERO_BASE_GATED_COUNTERS = ("retries", "checkpoints_written")
+
+#: sprint acceptance (ISSUE 8): device-paced rows must stay within 1.5x the
+#: exact b=1 leg of THEIR OWN run on the large shapes, and their host_syncs
+#: must match the baseline EXACTLY — the sync count is a function of the
+#: executed segment structure, so any drift is a controller change, not
+#: noise.  Neither gate carries a min-time waiver.
+SPRINT_NORM_LIMIT = 1.5
+
+
+def _sprint_row_gates(key: str, fresh_row: dict, base_row: Optional[dict],
+                      fresh_norm: Optional[float]) -> List[str]:
+    if fresh_row.get("engine") != "sprint":
+        return []
+    msgs = []
+    if (fresh_row.get("large") and fresh_norm is not None
+            and fresh_norm > SPRINT_NORM_LIMIT):
+        msgs.append(
+            f"{key}: sprint normalized time {fresh_norm:.3f} > "
+            f"{SPRINT_NORM_LIMIT}x the exact b=1 leg (absolute gate, "
+            f"no noise waiver)")
+    fc = fresh_row.get("counters") or {}
+    bc = (base_row or {}).get("counters") or {}
+    if "host_syncs" in fc and "host_syncs" in bc \
+            and fc["host_syncs"] != bc["host_syncs"]:
+        msgs.append(
+            f"{key}: sprint host_syncs {bc['host_syncs']} -> "
+            f"{fc['host_syncs']} (must match the baseline exactly: "
+            f"segment pacing is deterministic)")
+    return msgs
+
+
+ROW_GATES = {"sprint": _sprint_row_gates}
 
 
 def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
@@ -149,6 +182,9 @@ def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,
                 regressions.append(
                     f"{key}: {cname} 0 -> {fc[cname]:,} (scenario gained "
                     f"{cname} its baseline never performed)")
+        gate = ROW_GATES.get(spec.get("row_gates"))
+        if gate:
+            regressions.extend(gate(key, fraw[key], braw.get(key), fn[key]))
         records.append(rec)
     # a row the baseline gates that vanished from the fresh run is itself a
     # regression (lost coverage must not read as green)

@@ -10,7 +10,8 @@ variant of each.  This module is the declarative surface over all of them:
 * ``ExecutionSpec`` says HOW (``mode="auto"`` lets the planner pick from
   the input type, mesh and memory budget; every engine knob —
   ``kprime``/``b``/``eps``/``chunk``/``schedule``/``use_pallas``/``tau``/
-  ``cliff`` — defaults to ``"auto"``/None and resolves per path);
+  ``cliff``/``sprint`` — defaults to ``"auto"``/None and resolves per
+  path);
 * ``plan()`` compiles the two into an inspectable ``Plan`` whose
   ``explain()`` prints the chosen mode, the composition-aware k' schedule,
   the reducer layout and the predicted core-set footprint;
@@ -109,7 +110,11 @@ class ExecutionSpec:
     radius certificate meets ``eps`` and ``b="auto"`` runs the
     radius-certified adaptive controller (``core.adaptive``); pass numbers
     to pin them (``kprime=None`` = the paper default ``max(2k, 32)``).
-    ``tau``/``cliff`` override the controller's greedy-consistency bars.
+    ``tau``/``cliff`` override the controller's greedy-consistency bars and
+    ``sprint`` its device-paced segment runner (``"auto"`` = on whenever the
+    run is bit-identical to host pacing — i.e. no cross-block ``gamma``
+    margin; ``True`` insists and raises if it cannot be; ``False`` keeps
+    every block host-paced — see ``core.adaptive.resolve_sprint``).
     ``smm_mode`` overrides the streaming state layout (``plain``/``ext``/
     ``gen``; None derives it from the measure).  ``resilience`` is an
     optional ``repro.distributed.ResiliencePolicy`` governing how streaming
@@ -138,6 +143,7 @@ class ExecutionSpec:
     smm_mode: Optional[str] = None
     tau: Optional[float] = None
     cliff: Optional[float] = None
+    sprint: Any = "auto"
     resilience: Any = None
     # observability: False = phase wall-clocks only (near-zero overhead),
     # True = full RunTrace (counters + nested spans + profiler annotations),
@@ -271,7 +277,11 @@ class Plan:
             f"  engine: b={k['b']}, chunk={k['chunk']},"
             f" schedule={'none' if k['schedule'] is None else k['schedule']},"
             f" use_pallas={k['use_pallas']},"
-            f" tau={k['tau']}, cliff={k['cliff']}",
+            f" tau={k['tau']}, cliff={k['cliff']}"
+            # sprint only matters on the adaptive paths — fixed-knob plans
+            # keep their golden explain() output unchanged
+            + (f", sprint={k['sprint']}"
+               if k['b'] == "auto" or k['kprime'] == "auto" else ""),
             f"  layout: {self.layout}",
             f"  predicted coreset: {rows} rows, {bts}",
             f"  solver: sequential alpha={SEQ_ALPHA[self.problem.measure]}"
@@ -483,7 +493,7 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
     tau, cliff = resolve_bars(ex.tau, ex.cliff)
     knobs = {"kprime": kprime, "b": b, "chunk": chunk, "eps": eps,
              "schedule": ex.schedule, "use_pallas": use_pallas,
-             "tau": tau, "cliff": cliff}
+             "tau": tau, "cliff": cliff, "sprint": ex.sprint}
 
     # ---- composition-aware k' plan + layout + footprint -------------------
     m_groups = mat.m if constrained else 1
@@ -629,7 +639,7 @@ def _run_batch(plan_: Plan, tr) -> DiversityResult:
                        chunk=kb["chunk"], eps=(0.1 if kb["eps"] is None
                                                else kb["eps"]),
                        schedule=kb["schedule"], tau=plan_.execution.tau,
-                       cliff=plan_.execution.cliff)
+                       cliff=plan_.execution.cliff, sprint=kb["sprint"])
     t = tr.phase("coreset", t, sync=cs)
     sol = solve_on_coreset(cs, p.k, p.measure, metric=p.metric)
     t = tr.phase("solve", t, sync=sol)
@@ -656,7 +666,7 @@ def _run_batch_constrained(plan_: Plan, tr) -> DiversityResult:
                          use_pallas=kb["use_pallas"], b=kb["b"],
                          chunk=kb["chunk"], schedule=kb["schedule"],
                          eps=kb["eps"], tau=plan_.execution.tau,
-                         cliff=plan_.execution.cliff)
+                         cliff=plan_.execution.cliff, sprint=kb["sprint"])
     t = tr.phase("coreset", t, sync=cs)
     cand_idx, cand_labels = cs.flatten()
     sel, value = solve_and_value(pts[cand_idx], cand_labels,

@@ -235,7 +235,8 @@ def grouped_adaptive(points, labels, m: int, k: int, kprime, *,
                      eps: Optional[float] = None,
                      kprime_max: Optional[int] = None,
                      tau: Optional[float] = None,
-                     cliff: Optional[float] = None) -> GroupedCoreset:
+                     cliff: Optional[float] = None,
+                     sprint="auto") -> GroupedCoreset:
     """Radius-certified grouped builder: all m per-group GMM runs advance in
     lock-step under the adaptive-b controller (``core.adaptive``), shrinking
     the lookahead block when ANY inhabited group's greedy-consistency margin
@@ -266,13 +267,13 @@ def grouped_adaptive(points, labels, m: int, k: int, kprime, *,
                               metric=metric,
                               use_pallas=use_pallas, milestones=miles,
                               eps=eps_t, scale_count=k,
-                              group_counts=counts_np)
+                              group_counts=counts_np, sprint=sprint)
     else:
         run = adaptive_select(points, labels_np, starts, m, int(kprime),
                               b0=b0, tau=tau, cliff=cliff, chunk=chunk,
                               metric=metric,
                               use_pallas=use_pallas, scale_count=k,
-                              group_counts=counts_np)
+                              group_counts=counts_np, sprint=sprint)
     kp = run.ksel
     counts = jnp.asarray(counts_np.astype(np.int32))
     radius = jnp.where(counts > 0,
@@ -312,7 +313,8 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
                     chunk: int = 0, schedule=None,
                     eps: Optional[float] = None,
                     tau: Optional[float] = None,
-                    cliff: Optional[float] = None) -> GroupedCoreset:
+                    cliff: Optional[float] = None,
+                    sprint="auto") -> GroupedCoreset:
     """Build the union-of-per-group core-sets for a label-count matroid.
 
     ``labels`` is an ``(n,)`` int array in ``[0, m)``.  Each group contributes
@@ -349,7 +351,8 @@ def grouped_coreset(points, labels, m: Optional[int] = None,
     if b == "auto" or kprime == "auto":
         return grouped_adaptive(points, labels, m, k, kprime, measure=measure,
                                 metric=metric, use_pallas=use_pallas, b=b,
-                                chunk=chunk, eps=eps, tau=tau, cliff=cliff)
+                                chunk=chunk, eps=eps, tau=tau, cliff=cliff,
+                                sprint=sprint)
     if not 1 <= kprime <= n:
         raise ValueError(f"kprime={kprime} out of range for n={n}")
     metric_name = get_metric(metric).name

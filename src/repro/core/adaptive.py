@@ -70,6 +70,26 @@ def resolve_bars(tau: Optional[float],
             DEFAULT_CLIFF if cliff is None else float(cliff))
 
 
+def resolve_sprint(sprint, gamma: float = 0.0) -> bool:
+    """Resolve the sprint knob ("auto" | True | False | None).
+
+    Sprint mode runs post-certified multi-block segments as one fused
+    ``lax.while_loop`` dispatch (``_sprint_impl``) and is bit-identical to
+    the host-paced controller — EXCEPT under a nonzero cross-block
+    ``gamma`` margin, whose block-halving decision is host-paced by design.
+    ``"auto"``/None therefore enable sprint exactly when ``gamma == 0``
+    (the default); ``True`` insists and raises on a conflicting ``gamma``;
+    ``False`` keeps every block host-paced.
+    """
+    if sprint == "auto" or sprint is None:
+        return gamma == 0.0
+    if sprint and gamma != 0.0:
+        raise ValueError(
+            "sprint=True requires gamma=0: the cross-block gamma margin is "
+            "a per-block host decision the fused segment cannot replay")
+    return bool(sprint)
+
+
 # --------------------------------------------------------------------------
 # certificate container
 # --------------------------------------------------------------------------
@@ -230,6 +250,73 @@ def _block_step_impl(points, labels, min_dist, pending, m: int, take: int,
     return md, chosen, jnp.concatenate([cd[:, :1], seld], axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "b", "p", "rcap", "chunk",
+                                             "metric_name", "use_pallas"),
+                   donate_argnums=(2,))
+def _sprint_impl(points, labels, min_dist, pending, counts, pos0, rmax,
+                 tau, cliff, m: int, b: int, p: int, rcap: int, chunk: int,
+                 metric_name: str, use_pallas: bool):
+    """Device-resident sprint segment: up to ``rmax`` full lookahead blocks
+    in ONE fused ``lax.while_loop`` dispatch (the tentpole of sprint mode).
+
+    Each round folds the previously committed block into the donated field,
+    samples the exact anticover radius, runs the pooled in-block GMM for
+    ``b`` tentative picks, and evaluates the host controller's tau/cliff
+    greedy-consistency bars ON DEVICE — the same float32 arithmetic the
+    host applies to ``stats_np``, so the commit decision is bit-identical.
+    A fully certified block commits into the block buffer and becomes the
+    next round's fold; a block failing a bar past pick 0 is rolled back
+    (nothing committed) and its stats/picks spill to the host, which
+    truncates it exactly as a host-paced block.  The host blocks ONCE per
+    segment, on the packed state below, instead of once per block.
+
+    Returns ``(rounds, truncated, min_dist, pending, blocks (rcap, m, b),
+    traj (rcap, m), spill_stats (m, b+1), spill_chosen (m, b))`` where
+    ``rounds`` counts committed full blocks and ``traj[r]`` the radius
+    observed when round ``r``'s fold landed (``traj[rounds]`` belongs to
+    the spilled block when ``truncated``).
+    """
+    sweep = _make_grouped_sweep(points, labels, m, p, chunk, metric_name,
+                                use_pallas)
+
+    def cond(state):
+        r, truncated = state[0], state[1]
+        return (r < rmax) & jnp.logical_not(truncated)
+
+    def body(state):
+        r, _, md, pend, blocks, traj, spill_stats, spill_chosen = state
+        md, cd, ci = sweep(md, points[pend])
+        rnow = cd[:, 0]
+        traj = traj.at[r].set(rnow)
+        chosen, seld = _grouped_inblock(points, metric_name, cd, ci, b)
+        # the host controller's truncation test, verbatim: every pick past
+        # the first must clear tau*radius AND cliff*previous-pick in every
+        # group that still has fresh points, else the block truncates.
+        active = counts > (pos0 + r * b)
+        thr = tau * jnp.maximum(rnow, 0.0)
+        above_tau = seld >= thr[:, None]
+        no_cliff = jnp.concatenate(
+            [jnp.ones((m, 1), bool), seld[:, 1:] >= cliff * seld[:, :-1]],
+            axis=1)
+        ok = (~active[:, None]) | (above_tau & no_cliff)
+        bad = jnp.logical_not(jnp.all(ok, axis=0)).at[0].set(False)
+        full = jnp.logical_not(jnp.any(bad))
+        blocks = jnp.where(full, blocks.at[r].set(chosen), blocks)
+        pend = jnp.where(full, chosen, pend)
+        stats = jnp.concatenate([cd[:, :1], seld], axis=1)
+        spill_stats = jnp.where(full, spill_stats, stats)
+        spill_chosen = jnp.where(full, spill_chosen, chosen)
+        return (r + full.astype(jnp.int32), jnp.logical_not(full), md, pend,
+                blocks, traj, spill_stats, spill_chosen)
+
+    init = (jnp.asarray(0, jnp.int32), jnp.asarray(False), min_dist, pending,
+            jnp.zeros((rcap, m, b), jnp.int32),
+            jnp.zeros((rcap, m), jnp.float32),
+            jnp.zeros((m, b + 1), jnp.float32),
+            jnp.zeros((m, b), jnp.int32))
+    return jax.lax.while_loop(cond, body, init)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "kcap", "chunk",
                                              "metric_name", "use_pallas"))
 def _resume_impl(points, labels, min_dist, idx, start, end, m: int, kcap: int,
@@ -290,9 +377,10 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
                     use_pallas: bool = False,
                     milestones: Sequence[int] = (), eps: Optional[float] = None,
                     scale_count: Optional[int] = None,
-                    group_counts=None) -> AdaptiveRun:
-    """Host-paced adaptive engine: one fused fold+pool+pick dispatch per
-    block, a few-scalar certificate check on the host.
+                    group_counts=None, sprint="auto") -> AdaptiveRun:
+    """Adaptive engine: one fused fold+pool+pick dispatch per supervised
+    block, a few-scalar certificate check on the host — and, with ``sprint``
+    enabled, whole multi-block segments device-paced between those checks.
 
     Three adaptations keep every committed pick greedy-consistent without
     giving up the lookahead's sweep savings:
@@ -331,6 +419,18 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
     Two consecutive single-pick blocks switch to ``_resume_impl`` — a
     bit-exact b=1 continuation of plain GMM in one dispatch.
 
+    **Sprint mode** (``sprint="auto"|True|False``, see ``resolve_sprint``):
+    after a supervised block certifies fully, the controller state is
+    stable (pool relaxed to 16b, streak reset), so the following blocks up
+    to the next milestone / k_cap run as ONE fused ``lax.while_loop``
+    dispatch (``_sprint_impl``) that evaluates the tau/cliff bars on
+    device, commits certified blocks into donated buffers, rolls back a
+    truncating block (spilling its stats for the host to truncate exactly
+    as a host-paced block) and returns to the host only at the segment
+    boundary.  Picks, trajectory, executed schedule — and therefore the
+    ``RadiusCertificate`` — are bit-identical to the host-paced loop, but
+    ``host_syncs`` drops from O(k'/b) to O(#segments).
+
     With ``milestones`` (sorted center counts) and ``eps``, the loop stops
     at the first milestone whose measured certificate ratio
     (2·radius/scale, scale sampled at ``scale_count``) meets ``eps`` in
@@ -351,6 +451,9 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
                  if group_counts is not None else np.full((m,), n, np.int64))
     k_cap = max(1, min(k_cap, n))
     starts_np = np.asarray(starts, np.int32)
+    sprint_on = resolve_sprint(sprint, gamma)
+    counts_dev = jnp.asarray(np.minimum(counts_np, 2 ** 31 - 1)
+                             .astype(np.int32))
 
     idx_host = np.zeros((m, k_cap), np.int32)
     idx_host[:, 0] = starts_np
@@ -418,6 +521,130 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
         _count("distance_evals", n * folded)
         _count("bytes_swept", _sweep_bytes(n, d, sweeps=sweeps, m=m))
 
+    def commit_block(chosen, stats_np, take):
+        """Host bookkeeping for one evaluated block — shared verbatim by the
+        supervised path and the sprint spill replay, so a device-rolled-back
+        block truncates bit-identically to a host-paced one.
+
+        Certified within-block truncation: keep the prefix of picks that
+        clear BOTH bars in every group that still has fresh points — tau x
+        the current radius (the greedy-consistency scale) and cliff x the
+        previous pick (the scale-free cluster cliff detector).  The pool
+        floor is NOT a usable reference: on tightly clustered data a wide
+        pool's tail digs into within-cluster mass and the floor collapses
+        with it."""
+        nonlocal b_cur, ones_streak, p_mult, pending, pending_folded, pos, \
+            prev_active, prev_margin
+        rnow = stats_np[:, 0]
+        active = counts_np > pos
+        if prev_margin is not None and np.any(
+                prev_active & (prev_margin
+                               < gamma * np.maximum(rnow, 0.0))):
+            b_cur = max(1, b_cur // 2)
+            shrink_at.append(pos)
+        seld_np = stats_np[:, 1:]
+        thr = tau * np.maximum(rnow, 0.0)
+        above_tau = seld_np >= thr[:, None]
+        no_cliff = np.ones_like(above_tau)
+        if take > 1:
+            no_cliff[:, 1:] = seld_np[:, 1:] >= cliff * seld_np[:, :-1]
+        ok = ~active[:, None] | (above_tau & no_cliff)
+        take_eff = take
+        for j in range(1, take):
+            if not ok[:, j].all():
+                take_eff = j
+                break
+        committed = chosen[:, :take_eff]
+        idx_host[:, pos:pos + take_eff] = np.asarray(committed)
+        pending = committed
+        prev_margin = np.min(
+            np.where(active[:, None], seld_np[:, :take_eff], np.inf),
+            axis=1)
+        prev_active = active
+        takes.append(take_eff)
+        pending_folded = False
+        pos += take_eff
+        # pool adaptation: heavy truncation -> widen; full blocks -> relax
+        if take_eff <= take // 2:
+            if p_mult < 32:
+                _count("pool_widenings")
+            p_mult = min(32, p_mult * 2)
+        elif take_eff == take:
+            p_mult = max(16, p_mult // 2)
+        if take_eff == 1:
+            ones_streak += 1
+            if ones_streak >= 2 and b_cur > 1:
+                b_cur = 1
+                shrink_at.append(pos)
+        else:
+            ones_streak = 0
+        return take_eff
+
+    def sprint_segment():
+        """Device-paced segment: run the next full b_cur-blocks as ONE fused
+        while_loop dispatch, stopping before the next milestone observe /
+        k_cap (so every host decision stays host-made) or on the first
+        device-detected truncation.  The committed blocks are replayed into
+        the host bookkeeping from the single packed readback; a truncated
+        block spills through ``commit_block`` exactly like a supervised one.
+        Returns False when the remaining segment is too short to pay for a
+        dispatch (< 2 full blocks)."""
+        nonlocal md, pending, pending_folded, last_rnow, pos, \
+            prev_active, prev_margin, ones_streak
+        bseg = b_cur
+        rmax = (k_cap - pos) // bseg
+        if miles:
+            if pos >= miles[0]:
+                return False
+            # observes land at pos, pos+b, ...: stay strictly below the
+            # milestone so its eval (stop / secant re-plan) runs host-paced
+            rmax = min(rmax, (miles[0] - 1 - pos) // bseg + 1)
+        if rmax < 2:
+            return False
+        p = min(p_mult * bseg, pts_p.shape[0])
+        rcap = max(1, k_cap // bseg)
+        with _span("adaptive.sprint", pos=pos, b=bseg, rmax=int(rmax)):
+            (r_dev, trunc_dev, md2, _pend, blocks_dev, traj_dev,
+             spill_stats_dev, spill_chosen_dev) = _sprint_impl(
+                pts_p, lab_p, md, pending, counts_dev,
+                jnp.asarray(pos, jnp.int32), jnp.asarray(rmax, jnp.int32),
+                jnp.asarray(tau, jnp.float32), jnp.asarray(cliff, jnp.float32),
+                m, bseg, p, rcap, ch, metric_name, use_pallas)
+            rounds = int(r_dev)           # the one blocking transfer
+            truncated = bool(trunc_dev)
+            traj_seg = np.asarray(traj_dev)
+            blocks_seg = np.asarray(blocks_dev)
+        md = md2
+        if _counting():
+            folds = rounds + (1 if truncated else 0)
+            _count("sprint_segments")
+            _step_obs(folded=folds * bseg, sweeps=folds)
+        for r in range(rounds):
+            # replay the committed rounds: observe cannot stop or re-plan
+            # here (the segment ends before the next milestone observe)
+            rnow = traj_seg[r]
+            pending_folded, last_rnow = True, rnow
+            observe(rnow)
+            idx_host[:, pos:pos + bseg] = blocks_seg[r]
+            takes.append(bseg)
+            pos += bseg
+        if rounds:
+            # full commits: the host loop would relax the (already-relaxed)
+            # pool, zero the ones streak and never consult the margin at
+            # gamma=0 (committed picks clear tau*radius >= 0)
+            pending = blocks_dev[rounds - 1]
+            pending_folded = False
+            prev_margin = prev_active = None
+            ones_streak = 0
+        if truncated:
+            stats_np = np.asarray(spill_stats_dev)
+            rnow = stats_np[:, 0]
+            pending_folded, last_rnow = True, rnow
+            observe(rnow)
+            if not stopped:
+                commit_block(spill_chosen_dev, stats_np, bseg)
+        return True
+
     p_mult = 16
     while pos < k_cap and not stopped:
         if b_cur > 1:
@@ -435,55 +662,13 @@ def adaptive_select(points, labels, starts, m: int, k_cap: int, *,
             observe(rnow)
             if stopped:
                 break
-            active = counts_np > pos
-            if prev_margin is not None and np.any(
-                    prev_active & (prev_margin
-                                   < gamma * np.maximum(rnow, 0.0))):
-                b_cur = max(1, b_cur // 2)
-                shrink_at.append(pos)
-            # certified within-block truncation: keep the prefix of picks
-            # that clear BOTH bars in every group that still has fresh
-            # points — tau x the current radius (the greedy-consistency
-            # scale) and cliff x the previous pick (the scale-free cluster
-            # cliff detector).  The pool floor is NOT a usable reference: on
-            # tightly clustered data a wide pool's tail digs into
-            # within-cluster mass and the floor collapses with it.
-            seld_np = stats_np[:, 1:]
-            thr = tau * np.maximum(rnow, 0.0)
-            above_tau = seld_np >= thr[:, None]
-            no_cliff = np.ones_like(above_tau)
-            if take > 1:
-                no_cliff[:, 1:] = seld_np[:, 1:] >= cliff * seld_np[:, :-1]
-            ok = ~active[:, None] | (above_tau & no_cliff)
-            take_eff = take
-            for j in range(1, take):
-                if not ok[:, j].all():
-                    take_eff = j
-                    break
-            committed = chosen[:, :take_eff]
-            idx_host[:, pos:pos + take_eff] = np.asarray(committed)
-            pending = committed
-            prev_margin = np.min(
-                np.where(active[:, None], seld_np[:, :take_eff], np.inf),
-                axis=1)
-            prev_active = active
-            takes.append(take_eff)
-            pending_folded = False
-            pos += take_eff
-            # pool adaptation: heavy truncation -> widen; full blocks -> relax
-            if take_eff <= take // 2:
-                if p_mult < 32:
-                    _count("pool_widenings")
-                p_mult = min(32, p_mult * 2)
-            elif take_eff == take:
-                p_mult = max(16, p_mult // 2)
-            if take_eff == 1:
-                ones_streak += 1
-                if ones_streak >= 2 and b_cur > 1:
-                    b_cur = 1
-                    shrink_at.append(pos)
-            else:
-                ones_streak = 0
+            take_eff = commit_block(chosen, stats_np, take)
+            # a fully-certified opening block hands the segment to the
+            # device: the pool just relaxed to 16b and the streak reset, so
+            # the controller state is dispatch-stable until the boundary
+            if (sprint_on and b_cur > 1 and take_eff == take == b_cur
+                    and p_mult == 16 and pos < k_cap):
+                sprint_segment()
         else:
             # bit-exact b=1 tail, one dispatch per milestone segment
             if not pending_folded:
@@ -573,13 +758,15 @@ def gmm_adaptive(points, k: int, *, b0: int = 8, metric="euclidean",
                  use_pallas: bool = False, gamma: float = 0.0,
                  tau: Optional[float] = None, cliff: Optional[float] = None,
                  scale_count: Optional[int] = None,
-                 eps: Optional[float] = None) -> AdaptiveGMMResult:
+                 eps: Optional[float] = None,
+                 sprint="auto") -> AdaptiveGMMResult:
     """Adaptive-b GMM: lookahead-b speed where the radius curve is steep, a
     bit-exact b=1 fallback once it flattens (``b="auto"`` everywhere in the
     public API routes here).  Unlike ``gmm_batched``, any k works — the
     schedule is discovered, not prescribed.  ``tau``/``cliff`` override the
     controller's greedy-consistency bars (None = ``DEFAULT_TAU`` /
-    ``DEFAULT_CLIFF``)."""
+    ``DEFAULT_CLIFF``); ``sprint`` selects the device-paced segment runner
+    (bit-identical results, fewer host syncs — see ``adaptive_select``)."""
     points = jnp.asarray(points)
     n = points.shape[0]
     if mask is None:
@@ -588,7 +775,8 @@ def gmm_adaptive(points, k: int, *, b0: int = 8, metric="euclidean",
     run = adaptive_select(points, labels, [start], 1, k, b0=b0, gamma=gamma,
                           tau=tau, cliff=cliff, chunk=chunk, metric=metric,
                           use_pallas=use_pallas,
-                          scale_count=scale_count or min(k, n), eps=eps)
+                          scale_count=scale_count or min(k, n), eps=eps,
+                          sprint=sprint)
     cert = certificate_from_trajectory(
         run.counts, run.traj[:, 0], scale_count or min(k, n), eps=eps,
         b_schedule=run.schedule)
@@ -604,7 +792,8 @@ def auto_kprime(points, k: int, eps: float = 0.1,
                 b="auto", chunk: int = 0, use_pallas: bool = False,
                 kprime_max: Optional[int] = None, mask=None,
                 start=0, tau: Optional[float] = None,
-                cliff: Optional[float] = None) -> AdaptiveGMMResult:
+                cliff: Optional[float] = None,
+                sprint="auto") -> AdaptiveGMMResult:
     """ε-targeted core-set sizing: grow k' until the measured radius
     certificate meets the target (ratio = 2·r_T(k')/scale_k <= eps),
     resuming the same engine run at every milestone.  The first growth step
@@ -643,7 +832,8 @@ def auto_kprime(points, k: int, eps: float = 0.1,
     run = adaptive_select(points, labels, [start], 1, kmax, b0=b0, tau=tau,
                           cliff=cliff, chunk=chunk, metric=metric,
                           use_pallas=use_pallas,
-                          milestones=miles, eps=eps, scale_count=k)
+                          milestones=miles, eps=eps, scale_count=k,
+                          sprint=sprint)
     cert = certificate_from_trajectory(run.counts, run.traj[:, 0], k,
                                        eps=eps, b_schedule=run.schedule)
     return AdaptiveGMMResult(idx=jnp.asarray(run.idx[0]),
@@ -688,7 +878,7 @@ def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
                         metric="euclidean", labels=None, m: int = 1,
                         chunk: int = 0, use_pallas: bool = False,
                         sample: int = 8192, tau: Optional[float] = None,
-                        cliff: Optional[float] = None):
+                        cliff: Optional[float] = None, sprint="auto"):
     """Resolve ``b="auto"`` / ``kprime="auto"`` into static engine inputs for
     paths that run inside ``shard_map``/``vmap`` (the MapReduce reducers): a
     cheap strided-subsample probe runs the adaptive controller once on the
@@ -722,7 +912,7 @@ def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
                               use_pallas=use_pallas, milestones=miles,
                               eps=eps, scale_count=k_probe,
                               group_counts=counts if labels is not None
-                              else None)
+                              else None, sprint=sprint)
         kp = run.ksel
     else:
         kp = int(kprime)
@@ -731,7 +921,7 @@ def resolve_engine_plan(points, k: int, kprime, b, *, eps: float = 0.1,
                               chunk=chunk, metric=metric,
                               use_pallas=use_pallas, scale_count=k_probe,
                               group_counts=counts if labels is not None
-                              else None)
+                              else None, sprint=sprint)
     cert = certificate_from_trajectory(
         run.counts, run.traj.max(axis=1), k_probe,
         eps=eps if kprime == "auto" else None, b_schedule=run.schedule)

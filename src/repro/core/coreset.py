@@ -61,7 +61,8 @@ def coreset_from_points(points, weights=None) -> Coreset:
 def build_coreset(points, k: int, kprime, measure: str, *,
                   metric="euclidean", use_pallas: bool = False,
                   generalized: bool = False, b=1, chunk: int = 0,
-                  eps: float = 0.1, schedule=None, tau=None, cliff=None):
+                  eps: float = 0.1, schedule=None, tau=None, cliff=None,
+                  sprint="auto"):
     """Sequential (single-partition) core-set per the paper's recipe:
 
     * remote-edge / remote-cycle  -> GMM(S, k')            (Thm 4)
@@ -75,7 +76,9 @@ def build_coreset(points, k: int, kprime, measure: str, *,
     certificate meets the ``eps`` accuracy target (``core.adaptive``); both
     attach the resulting ``RadiusCertificate`` as ``cs.cert``.
     ``tau``/``cliff`` override the adaptive controller's greedy-consistency
-    bars (None = ``core.adaptive.DEFAULT_TAU`` / ``DEFAULT_CLIFF``).
+    bars (None = ``core.adaptive.DEFAULT_TAU`` / ``DEFAULT_CLIFF``) and
+    ``sprint`` its device-paced segment runner (``"auto"`` = on whenever it
+    is bit-identical; see ``core.adaptive.resolve_sprint``).
 
     >>> import numpy as np
     >>> rng = np.random.default_rng(0)
@@ -101,14 +104,14 @@ def build_coreset(points, k: int, kprime, measure: str, *,
         from .adaptive import auto_kprime
         res = auto_kprime(points, k, eps, measure, metric=metric, b=b,
                           chunk=chunk, use_pallas=use_pallas, tau=tau,
-                          cliff=cliff)
+                          cliff=cliff, sprint=sprint)
         kprime, cert = int(res.idx.shape[0]), res.cert
         kernel = res
     elif b == "auto":
         from .adaptive import gmm_adaptive
         kernel = gmm_adaptive(points, kprime, metric=metric, chunk=chunk,
                               use_pallas=use_pallas, tau=tau, cliff=cliff,
-                              scale_count=min(k, kprime))
+                              scale_count=min(k, kprime), sprint=sprint)
         cert = kernel.cert
     if generalized:
         if auto:

@@ -495,7 +495,7 @@ def gmm_schedule(points, k: int, schedule, *, metric="euclidean", mask=None,
 
 def gmm_batched(points, k: int, *, b=8, metric="euclidean", mask=None,
                 start=0, chunk: int = 0, use_pallas: bool = False,
-                schedule=None):
+                schedule=None, sprint="auto"):
     """Batched GMM (beyond-paper optimization, EXPERIMENTS.md §Perf).
 
     Sequential GMM sweeps the point set once per center — arithmetic
@@ -525,7 +525,7 @@ def gmm_batched(points, k: int, *, b=8, metric="euclidean", mask=None,
     if b == "auto" and schedule is None:
         from .adaptive import gmm_adaptive
         res = gmm_adaptive(points, k, metric=metric, mask=mask, start=start,
-                           chunk=chunk, use_pallas=use_pallas)
+                           chunk=chunk, use_pallas=use_pallas, sprint=sprint)
         return res.idx, res.radius, res.min_dist
     if schedule is None:
         if k % b:

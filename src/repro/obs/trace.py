@@ -40,9 +40,12 @@ from typing import Any, Dict, List, Optional, Tuple
 #   bytes_swept       modeled HBM traffic of the field sweeps (fp32 model
 #                     shared with benchmarks/bench_gmm.py)
 #   host_syncs        blocking device->host transfers (each one stalls the
-#                     dispatch pipeline — the baseline sprint mode must beat)
+#                     dispatch pipeline — the pacing metric sprint mode
+#                     collapses from O(k'/b) to O(#segments))
 #   device_dispatches jitted computations launched by a host driver
 #   pool_widenings    adaptive-controller oversampling-pool doublings
+#   sprint_segments   device-resident adaptive segments (one fused
+#                     while_loop dispatch each; see core.adaptive sprint)
 #   jit_recompiles    backend compiles observed while the trace was active
 #   points_absorbed   stream points folded into the SMM state
 #   merges            SMM merge/restructure events (threshold doublings)
@@ -53,9 +56,10 @@ from typing import Any, Dict, List, Optional, Tuple
 #   checkpoints_written  CheckpointManager saves issued by a resilient run
 #   reducers_recovered   reducers that failed then succeeded on a retry
 COUNTER_NAMES = ("distance_evals", "bytes_swept", "host_syncs",
-                 "device_dispatches", "pool_widenings", "jit_recompiles",
-                 "points_absorbed", "merges", "retries", "failures_injected",
-                 "checkpoints_written", "reducers_recovered")
+                 "device_dispatches", "pool_widenings", "sprint_segments",
+                 "jit_recompiles", "points_absorbed", "merges", "retries",
+                 "failures_injected", "checkpoints_written",
+                 "reducers_recovered")
 
 ENV_VAR = "REPRO_TRACE"
 

@@ -2,10 +2,13 @@
 package is absent in the runtime image — see conftest.py).
 
 Implements exactly the surface this test-suite uses: ``given`` / ``settings``
-and the ``integers`` / ``sampled_from`` / ``just`` / ``tuples`` / ``flatmap``
-strategies.  Examples are drawn from a seeded ``numpy`` RNG keyed on the test
-name, so every run exercises the same inputs — property coverage without the
-dependency, not shrinkage or fuzzing.
+/ ``assume`` and the ``integers`` / ``sampled_from`` / ``just`` / ``tuples``
+/ ``flatmap`` / ``data`` strategies.  Examples are drawn from a seeded
+``numpy`` RNG keyed on the test name, so every run exercises the same inputs
+— property coverage without the dependency, not shrinkage or fuzzing.
+
+``__repro_fallback__`` marks the shim so CI lanes that require the real
+package (``REPRO_NO_HYPOTHESIS_FALLBACK=1``) can assert they got it.
 """
 from __future__ import annotations
 
@@ -15,7 +18,19 @@ import zlib
 
 import numpy as np
 
+__repro_fallback__ = True
+
 DEFAULT_MAX_EXAMPLES = 20
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)``; ``given`` skips to the next example."""
+
+
+def assume(condition):
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
 
 
 class SearchStrategy:
@@ -54,6 +69,20 @@ def booleans():
     return SearchStrategy(lambda rng: bool(rng.integers(2)))
 
 
+class DataObject:
+    """Interactive draws (the real package's ``st.data()`` handle)."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+
+def data():
+    return SearchStrategy(lambda rng: DataObject(rng))
+
+
 def floats(min_value=0.0, max_value=1.0):
     return SearchStrategy(
         lambda rng: float(rng.uniform(min_value, max_value)))
@@ -83,7 +112,10 @@ def given(*strategies):
                 drawn = tuple(s.example(rng) for s in strategies)
                 # bind by keyword: pytest passes fixtures as kwargs, so a
                 # positional splat would land on the fixture parameters
-                fn(*args, **kwargs, **dict(zip(drawn_names, drawn)))
+                try:
+                    fn(*args, **kwargs, **dict(zip(drawn_names, drawn)))
+                except UnsatisfiedAssumption:
+                    continue  # assume() rejected this example; draw the next
 
         wrapper.__signature__ = sig.replace(parameters=fixture_params)
         return wrapper

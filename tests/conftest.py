@@ -36,7 +36,9 @@ if importlib.util.find_spec("hypothesis") is None:
     _mod = type(sys)("hypothesis")
     _mod.given = _hf.given
     _mod.settings = _hf.settings
+    _mod.assume = _hf.assume
     _mod.strategies = _hf
+    _mod.__repro_fallback__ = True   # lets tests detect shim vs real package
     sys.modules["hypothesis"] = _mod
     sys.modules["hypothesis.strategies"] = _hf
 

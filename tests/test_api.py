@@ -173,7 +173,7 @@ def test_plan_explain_golden_auto_constrained_mr():
         " -> 128 -> 256, eps=0.3, x2 first step, secant-refined),"
         " composed over 8 reducers x 4 groups",
         "  engine: b=auto, chunk=0, schedule=none, use_pallas=False,"
-        " tau=0.15, cliff=0.35",
+        " tau=0.15, cliff=0.35, sprint=auto",
         "  layout: simulated mapreduce, 8 reducers"
         " (vmap, partition=contiguous), 4 matroid groups",
         "  predicted coreset: <=8192 rows, <=128.0 KiB",

@@ -13,7 +13,8 @@ def test_bench_adaptive_emits_machine_readable_json(tmp_path):
     rows = bench_adaptive.run(quick=True, only=["clu4", "uniform"])
     engines = {(r["shape"], r["engine"]) for r in rows}
     assert {("clu4", "b1"), ("clu4", "b8"), ("clu4", "auto"),
-            ("uniform", "b1"), ("uniform", "auto")} <= engines
+            ("clu4", "sprint"), ("uniform", "b1"), ("uniform", "auto"),
+            ("uniform", "sprint")} <= engines
     for r in rows:
         for key in ("time_s", "radius", "radius_ratio_vs_b1",
                     "speedup_vs_b1", "large"):
@@ -98,6 +99,53 @@ def test_compare_counter_gate():
         r.pop("counters")
     _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
     assert regressions == []
+
+
+def test_compare_sprint_absolute_norm_gate():
+    """Sprint rows on large shapes carry an ABSOLUTE ceiling — ≤1.5x the
+    in-run exact b=1 leg — independent of the baseline delta, with no
+    min-time noise waiver."""
+    base = _doc({("s1", "b1"): 1.0, ("s1", "sprint"): 0.030})
+    fresh = _doc({("s1", "b1"): 1.0, ("s1", "sprint"): 0.033})
+    for doc in (base, fresh):
+        for r in doc["rows"]:
+            r["large"] = True
+    # within the ceiling and within the relative threshold: green
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+    # sub-floor row drifting past 1.5x b1: the absolute gate still fires
+    for r in fresh["rows"]:
+        if r["engine"] == "sprint":
+            r["time_s"] = 0.040  # sub-floor either side -> relative gate off
+    base["rows"][0]["time_s"] = fresh["rows"][0]["time_s"] = 0.020
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert len(regressions) == 1 and "1.5" in regressions[0]
+    # small (non-large) shapes are exempt from the absolute ceiling
+    for doc in (base, fresh):
+        for r in doc["rows"]:
+            r["large"] = False
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+
+
+def test_compare_sprint_host_syncs_exact():
+    """Sprint host_syncs are gated on EXACT equality with the baseline: the
+    sync count mirrors the executed segment structure, so a drift of even
+    one (well under the 10% ratio gate) must fail."""
+    base = _doc({("s1", "b1"): 1.0, ("s1", "sprint"): 0.25})
+    for r in base["rows"]:
+        r["large"] = True
+        r["counters"] = {"host_syncs": 40, "bytes_swept": 1000}
+    fresh = copy.deepcopy(base)
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert regressions == []
+    for r in fresh["rows"]:
+        if r["engine"] == "sprint":
+            r["counters"]["host_syncs"] = 41      # +2.5%: ratio gate blind
+    _, regressions = compare.compare_doc(base, fresh, SPEC, 0.25)
+    assert len(regressions) == 1 and "exactly" in regressions[0]
+    # the b1 leg keeps the ordinary 10% ratio gate (41/40 passes)
+    assert "b1" not in regressions[0]
 
 
 def test_compare_gmm_global_reference():

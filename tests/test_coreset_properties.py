@@ -1,9 +1,11 @@
 """Property tests for the core-set guarantees (hypothesis) — the empirical
 counterpart of Tables 2/3: end-to-end approximation vs brute force, subset
 monotonicity, composability, and the Lemma 7 instantiation bound."""
+import os
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
 import jax.numpy as jnp
 import repro
@@ -93,6 +95,96 @@ def test_instantiation_bound_lemma7(seed):
     inst_div = diversity("remote-clique", dmi)
     f_k = k * (k - 1) / 2
     assert inst_div >= gen_div - f_k * 2 * float(gen.radius) - 1e-4
+
+
+# --------------------------------------------------------------------------
+# sprint-path invariants (ISSUE 8): the device-paced segment runner must keep
+# every measured property of the host-paced adaptive controller under random
+# shapes / metrics / seeds — drawn interactively so later draws can depend on
+# earlier ones (st.data + assume, covered by the fallback shim too).
+# --------------------------------------------------------------------------
+
+def _random_adaptive_case(data):
+    """Draw (points, kprime, metric) for an adaptive-engine property run."""
+    seed = data.draw(st.integers(0, 2 ** 31))
+    clusters = data.draw(st.sampled_from([0, 2, 4, 8]))
+    dim = data.draw(st.integers(2, 6))
+    n = data.draw(st.integers(200, 1200))
+    kprime = data.draw(st.integers(8, 64))
+    assume(kprime <= n // 4)
+    metric = data.draw(st.sampled_from(["euclidean", "cosine"]))
+    if clusters:
+        from repro.data import clustered_dataset
+        pts = np.asarray(clustered_dataset(n, clusters=clusters, dim=dim,
+                                           seed=seed))
+    else:
+        pts = np.random.default_rng(seed).normal(size=(n, dim)) \
+            .astype(np.float32)
+    return pts, kprime, metric
+
+
+@given(st.data())
+@settings(max_examples=8, deadline=None)
+def test_sprint_trajectory_monotone_and_host_identical(data):
+    """Sprint runs keep the anticover-radius trajectory non-increasing AND
+    bit-identical (picks, trajectory, schedule, certificate) to host pacing."""
+    from repro.core.adaptive import gmm_adaptive
+    pts, kprime, metric = _random_adaptive_case(data)
+    fast = gmm_adaptive(pts, kprime, metric=metric, sprint=True)
+    traj = np.asarray(fast.traj)
+    assert np.all(np.diff(traj) <= 1e-5)
+    assert fast.counts[-1] == kprime
+    host = gmm_adaptive(pts, kprime, metric=metric, sprint=False)
+    np.testing.assert_array_equal(np.asarray(host.idx), np.asarray(fast.idx))
+    np.testing.assert_array_equal(np.asarray(host.traj), traj)
+    assert host.schedule == fast.schedule and host.cert == fast.cert
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_sprint_margins_clear_committed_bar(data):
+    """Every committed pick's insertion distance (its corrected anticover
+    distance at commit time) clears tau x the radius measured at its sweep;
+    the sweep radius only shrinks, so every pick must clear tau x the FINAL
+    radius — the greedy-consistency bar the controller certifies."""
+    from repro.core.adaptive import DEFAULT_TAU, gmm_adaptive
+    from repro.core.metrics import get_metric
+    pts, kprime, metric = _random_adaptive_case(data)
+    res = gmm_adaptive(pts, kprime, metric=metric, sprint=True)
+    sel = np.asarray(pts)[np.asarray(res.idx)]
+    dm = np.asarray(get_metric(metric).pairwise(jnp.asarray(sel),
+                                                jnp.asarray(sel)))
+    r_fin = float(res.radius)
+    for j in range(1, kprime):
+        insertion = dm[j, :j].min()
+        assert insertion >= DEFAULT_TAU * r_fin * (1 - 1e-3) - 1e-6, (
+            j, insertion, r_fin)
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_sprint_chunk_invariance(data):
+    """The fused segment's commit decisions are a function of the points
+    only: any sweep tiling (chunk) yields the identical run."""
+    from repro.core.adaptive import gmm_adaptive
+    pts, kprime, metric = _random_adaptive_case(data)
+    chunk_a = data.draw(st.sampled_from([0, 128]))
+    chunk_b = data.draw(st.sampled_from([256, 512]))
+    a = gmm_adaptive(pts, kprime, metric=metric, chunk=chunk_a, sprint=True)
+    b = gmm_adaptive(pts, kprime, metric=metric, chunk=chunk_b, sprint=True)
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.traj), np.asarray(b.traj))
+    assert a.schedule == b.schedule and a.cert == b.cert
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_NO_HYPOTHESIS_FALLBACK") != "1",
+                    reason="only meaningful on lanes that forbid the shim")
+def test_no_fallback_lane_runs_real_hypothesis():
+    """CI lanes that set REPRO_NO_HYPOTHESIS_FALLBACK=1 promise the real
+    package; a regressed image that silently got the shim must fail here."""
+    import hypothesis
+    assert not getattr(hypothesis, "__repro_fallback__", False)
+    assert hasattr(hypothesis, "__version__")
 
 
 def test_planted_sphere_recovered():

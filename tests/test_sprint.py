@@ -1,0 +1,254 @@
+"""Sprint-mode certificate-equivalence harness (ISSUE 8 tentpole).
+
+Sprint mode (``core.adaptive._sprint_impl``) runs post-certified multi-block
+segments as one fused ``lax.while_loop`` dispatch and promises BIT-IDENTICAL
+results to the host-paced controller: same picks, same radius trajectory,
+same executed schedule, same ``RadiusCertificate`` — only ``host_syncs``
+changes, from O(k'/b) to O(#segments).  Every test here runs both pacings on
+the same input and asserts exact equality, then checks the counter story via
+``repro.obs``.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.constrained.coreset import grouped_adaptive
+from repro.core.adaptive import (auto_kprime, gmm_adaptive, resolve_sprint)
+from repro.data import clustered_dataset
+from repro.obs.trace import RunTrace, activate
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_caches():
+    # A full tier-1 run reaches this module with hundreds of live compiled
+    # executables, and XLA's CPU client has been seen to segfault compiling
+    # the fused sprint while_loop under that accumulated JIT load.  Dropping
+    # the cached executables first gives the heavy compiles a fresh arena.
+    jax.clear_caches()
+    yield
+
+
+def _clustered(n=4000, clusters=4, dim=8, seed=0):
+    return np.asarray(clustered_dataset(n, clusters=clusters, dim=dim,
+                                        seed=seed))
+
+
+def _uniform(n=4000, dim=8, seed=1):
+    return np.random.default_rng(seed).normal(size=(n, dim)) \
+        .astype(np.float32)
+
+
+def _traced(fn):
+    """Run ``fn`` under an enabled RunTrace; return (result, trace)."""
+    tr = RunTrace(enabled=True)
+    with activate(tr):
+        out = fn()
+    return out, tr
+
+
+def _span_count(tr, prefix="adaptive."):
+    def walk(spans):
+        total = 0
+        for s in spans:
+            total += s.name.startswith(prefix)
+            total += walk(s.children)
+        return total
+    return walk(tr.spans)
+
+
+def _assert_results_identical(host, sprint):
+    """The full certificate-equivalence contract on AdaptiveGMMResult."""
+    np.testing.assert_array_equal(np.asarray(host.idx),
+                                  np.asarray(sprint.idx))
+    assert float(host.radius) == float(sprint.radius)
+    assert host.counts == sprint.counts
+    np.testing.assert_array_equal(np.asarray(host.traj),
+                                  np.asarray(sprint.traj))
+    assert host.schedule == sprint.schedule
+    assert host.cert == sprint.cert
+
+
+# --------------------------------------------------------------------------
+# knob resolution
+# --------------------------------------------------------------------------
+
+def test_resolve_sprint_knob():
+    assert resolve_sprint("auto") is True
+    assert resolve_sprint(None) is True
+    assert resolve_sprint(False) is False
+    assert resolve_sprint(True) is True
+    # a nonzero cross-block gamma margin is host-paced by design: auto backs
+    # off silently, an explicit True refuses loudly
+    assert resolve_sprint("auto", gamma=0.1) is False
+    assert resolve_sprint(False, gamma=0.1) is False
+    with pytest.raises(ValueError, match="gamma"):
+        resolve_sprint(True, gamma=0.1)
+
+
+def test_gamma_run_stays_host_paced():
+    """gamma != 0 + sprint="auto" must run (host-paced), not raise."""
+    pts = _uniform(1500, dim=4)
+    res = gmm_adaptive(pts, 32, gamma=0.05)
+    assert int(res.idx.shape[0]) == 32
+
+
+# --------------------------------------------------------------------------
+# m=1 parity matrix: picks / trajectory / schedule / certificate
+# --------------------------------------------------------------------------
+
+# clusters=None is the uniform (healthy lookahead) regime; small cluster
+# counts with k' far above them force truncation, pool widening and the
+# b=1 tail — the regimes where the device bars must agree with the host.
+@pytest.mark.parametrize("clusters", [None, 4, 16])
+def test_parity_m1(clusters):
+    pts = _clustered(clusters=clusters) if clusters else _uniform()
+    host = gmm_adaptive(pts, 64, chunk=1024, sprint=False)
+    fast = gmm_adaptive(pts, 64, chunk=1024, sprint=True)
+    _assert_results_identical(host, fast)
+    np.testing.assert_array_equal(np.asarray(host.min_dist),
+                                  np.asarray(fast.min_dist))
+
+
+def test_parity_truncation_heavy():
+    """k' >> effective cluster count: nearly every block truncates, the pool
+    widens and the run degrades to the b=1 tail — the sprint spill path must
+    replay every one of those host decisions bit-identically."""
+    pts = _clustered(3000, clusters=4, dim=2, seed=3)
+    host, tr_host = _traced(lambda: gmm_adaptive(pts, 96, sprint=False))
+    fast, tr_fast = _traced(lambda: gmm_adaptive(pts, 96, sprint=True))
+    _assert_results_identical(host, fast)
+    assert any(b == 1 for b, _ in host.schedule)   # the regime under test
+    assert tr_host.counters["pool_widenings"] >= 1
+    # identical truncation decisions => identical pool adaptation
+    assert (tr_host.counters["pool_widenings"]
+            == tr_fast.counters["pool_widenings"])
+
+
+def test_parity_flat_regime_metrics_and_chunks():
+    """Flat-radius data under different metrics and chunk sizes."""
+    pts = _clustered(2000, clusters=8, dim=4, seed=4)
+    for metric in ("euclidean", "cosine"):
+        for chunk in (0, 512):
+            host = gmm_adaptive(pts, 48, metric=metric, chunk=chunk,
+                                sprint=False)
+            fast = gmm_adaptive(pts, 48, metric=metric, chunk=chunk,
+                                sprint=True)
+            _assert_results_identical(host, fast)
+
+
+@pytest.mark.slow
+def test_parity_m1_pallas_and_wide_sweep():
+    """Heavier matrix: Pallas top-b pool (interpret mode on CPU) traced
+    inside the while_loop, larger shapes, more cluster counts."""
+    for clusters, kp in ((None, 128), (4, 96), (64, 96)):
+        pts = (_clustered(8000, clusters=clusters, seed=11) if clusters
+               else _uniform(8000, seed=11))
+        for use_pallas in (False, True):
+            host = gmm_adaptive(pts, kp, chunk=2048, use_pallas=use_pallas,
+                                sprint=False)
+            fast = gmm_adaptive(pts, kp, chunk=2048, use_pallas=use_pallas,
+                                sprint=True)
+            _assert_results_identical(host, fast)
+
+
+# --------------------------------------------------------------------------
+# grouped path parity
+# --------------------------------------------------------------------------
+
+def test_parity_grouped():
+    rng = np.random.default_rng(5)
+    pts = _clustered(3000, clusters=8, seed=5)
+    lab = rng.integers(0, 4, size=3000).astype(np.int32)
+    lab[:4] = np.arange(4)
+    runs = {s: grouped_adaptive(pts, lab, 4, 4, 32, b="auto", sprint=s)
+            for s in (False, True)}
+    host, fast = runs[False], runs[True]
+    np.testing.assert_array_equal(np.asarray(host.idx), np.asarray(fast.idx))
+    np.testing.assert_array_equal(np.asarray(host.valid),
+                                  np.asarray(fast.valid))
+    np.testing.assert_array_equal(np.asarray(host.radius),
+                                  np.asarray(fast.radius))
+    assert host.cert == fast.cert
+
+
+def test_parity_grouped_auto_kprime():
+    rng = np.random.default_rng(6)
+    pts = _clustered(3000, clusters=8, seed=6)
+    lab = rng.integers(0, 3, size=3000).astype(np.int32)
+    lab[:3] = np.arange(3)
+    runs = {s: grouped_adaptive(pts, lab, 3, 4, "auto", eps=0.4, sprint=s)
+            for s in (False, True)}
+    assert runs[False].cert == runs[True].cert
+    np.testing.assert_array_equal(np.asarray(runs[False].idx),
+                                  np.asarray(runs[True].idx))
+
+
+# --------------------------------------------------------------------------
+# auto-k' milestone resume parity
+# --------------------------------------------------------------------------
+
+def test_parity_auto_kprime_resume():
+    """Milestone observes (stop / secant re-plan) stay host-paced; segments
+    must end before each milestone and the grown run must match exactly."""
+    for make, eps in ((lambda: _clustered(6000, clusters=4, dim=2, seed=7),
+                       0.5),
+                      (lambda: _uniform(6000, dim=2, seed=7), 0.6)):
+        pts = make()
+        host = auto_kprime(pts, k=6, eps=eps, sprint=False)
+        fast = auto_kprime(pts, k=6, eps=eps, sprint=True)
+        _assert_results_identical(host, fast)
+        assert fast.cert.meets_target
+
+
+# --------------------------------------------------------------------------
+# host_syncs == O(#segments): the point of the exercise
+# --------------------------------------------------------------------------
+
+def test_host_syncs_drop_to_segment_counts():
+    pts = _uniform(6000, seed=8)
+    host, tr_host = _traced(lambda: gmm_adaptive(pts, 128, chunk=1024,
+                                                 sprint=False))
+    fast, tr_fast = _traced(lambda: gmm_adaptive(pts, 128, chunk=1024,
+                                                 sprint=True))
+    _assert_results_identical(host, fast)
+    ch, cf = tr_host.counters, tr_fast.counters
+    # work identical, pacing different
+    assert ch["distance_evals"] == cf["distance_evals"]
+    assert ch["bytes_swept"] == cf["bytes_swept"]
+    assert ch["sprint_segments"] == 0
+    assert cf["sprint_segments"] >= 1
+    # every controller round-trip is a span wrapping exactly one blocking
+    # readback — sprint keeps that invariant, with far fewer round-trips
+    assert ch["host_syncs"] == _span_count(tr_host) == ch["device_dispatches"]
+    assert cf["host_syncs"] == _span_count(tr_fast) == cf["device_dispatches"]
+    assert cf["host_syncs"] <= ch["host_syncs"] // 2
+    # O(#segments): each sprint segment costs 1 sync and needs at most one
+    # supervised opening block + one b=1/boundary sync around it
+    assert cf["host_syncs"] <= 3 * cf["sprint_segments"] + 2
+    assert _span_count(tr_fast, "adaptive.sprint") == cf["sprint_segments"]
+
+
+def test_sprint_counters_through_facade():
+    pts = _uniform(4096, seed=9)
+    runs = {s: repro.diversify(pts, k=8, execution=repro.ExecutionSpec(
+        mode="batch", kprime=64, b="auto", sprint=s, trace=True))
+        for s in (False, True)}
+    ch = runs[False].telemetry.counters
+    cf = runs[True].telemetry.counters
+    np.testing.assert_array_equal(runs[False].solution, runs[True].solution)
+    assert runs[False].cert == runs[True].cert
+    assert cf["sprint_segments"] >= 1 and ch["sprint_segments"] == 0
+    assert cf["host_syncs"] < ch["host_syncs"]
+    assert ch["distance_evals"] == cf["distance_evals"]
+
+
+def test_sprint_auto_is_default_and_explained():
+    pts = _uniform(1024, dim=4)
+    p = repro.plan(repro.ProblemSpec(points=pts, k=6),
+                   repro.ExecutionSpec(mode="batch", kprime=32, b="auto"))
+    assert "sprint=auto" in p.explain()
+    # fixed-knob plans keep their golden engine line sprint-free
+    p_fixed = repro.plan(repro.ProblemSpec(points=pts, k=6),
+                         repro.ExecutionSpec(mode="batch", kprime=32, b=4))
+    assert "sprint" not in p_fixed.explain()
