@@ -58,6 +58,13 @@ SPECS = {
         "scope": "global",
         "quality": None,
     },
+    "BENCH_serving.json": {
+        "key": ("path",),
+        "is_ref": lambda r: r["path"] == "resolve-per-request",
+        "scope": "global",
+        "quality": None,
+        "row_gates": "serving",
+    },
 }
 
 
@@ -125,7 +132,35 @@ def _sprint_row_gates(key: str, fresh_row: dict, base_row: Optional[dict],
     return msgs
 
 
-ROW_GATES = {"sprint": _sprint_row_gates}
+#: serving acceptance (ISSUE 9): the session-reuse leg must stay FASTER than
+#: the resolve-per-request reference of its own run (normalized time < 1.0 —
+#: that ratio is the measured speedup claim, machine-portable by
+#: construction), and its reuse rate must not drop: the workload is seeded,
+#: so a lower rate means absorption behavior changed, not noise.
+SERVING_NORM_LIMIT = 1.0
+SERVING_REUSE_TOL = 0.05
+
+
+def _serving_row_gates(key: str, fresh_row: dict, base_row: Optional[dict],
+                       fresh_norm: Optional[float]) -> List[str]:
+    if fresh_row.get("path") != "session-reuse":
+        return []
+    msgs = []
+    if fresh_norm is not None and fresh_norm >= SERVING_NORM_LIMIT:
+        msgs.append(
+            f"{key}: session-reuse normalized time {fresh_norm:.3f} >= "
+            f"{SERVING_NORM_LIMIT} — no longer faster than re-solving every "
+            f"request (the speedup IS the acceptance claim)")
+    br = (base_row or {}).get("reuse_rate")
+    fr = fresh_row.get("reuse_rate")
+    if br is not None and fr is not None and fr < br - SERVING_REUSE_TOL:
+        msgs.append(
+            f"{key}: reuse_rate {br:.3f} -> {fr:.3f} (seeded workload: a "
+            f"drop is an absorption behavior change, not noise)")
+    return msgs
+
+
+ROW_GATES = {"sprint": _sprint_row_gates, "serving": _serving_row_gates}
 
 
 def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,

@@ -143,6 +143,16 @@ def main(argv=None) -> None:
                 "Resilience"))
 
     print("\n" + "=" * 72)
+    print("Serving — session-reuse rerank vs per-request re-solve "
+          "(BENCH_serving.json)")
+    print("=" * 72)
+    from benchmarks import bench_serving
+    rows = bench_serving.run(quick=quick)
+    bench_serving.emit_json(rows, path="BENCH_serving.json")
+    print(table(rows, ["path", "sessions", "n_per_req", "time_s", "p50_ms",
+                       "p99_ms", "qps"], "Serving rerank"))
+
+    print("\n" + "=" * 72)
     print("Observability — traced representative runs (BENCH_trace.json)")
     print("=" * 72)
     emit_trace_artifact(quick=quick)

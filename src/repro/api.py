@@ -56,7 +56,7 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
-_MODES = ("auto", "batch", "streaming", "mapreduce")
+_MODES = ("auto", "batch", "streaming", "mapreduce", "serving")
 
 
 def _warn_legacy(name: str) -> None:
@@ -241,6 +241,7 @@ class Plan:
     coreset_bytes: Optional[int]
     n: Optional[int]
     d: Optional[int]
+    requests: Optional[int] = None   # serving mode: fused requests per dispatch
 
     @property
     def trace(self):
@@ -258,6 +259,31 @@ class Plan:
         """
         k = self.knobs
         from repro.core.sequential import SEQ_ALPHA
+
+        if self.mode == "serving":
+            lines = [
+                "DiversityPlan",
+                f"  mode: serving ({self.reason})",
+                f"  problem: k={self.problem.k},"
+                f" measure={self.problem.measure},"
+                f" metric={self.problem.metric},"
+                f" input=({self.requests}, {self.n}, {self.d}),"
+                " constrained=no",
+                f"  rerank: fused multi-tenant vmap of the m=1 engine,"
+                f" {self.requests} requests per dispatch",
+                f"  engine: b=1 (exact per-request GMM slate),"
+                f" chunk={k['chunk']}, use_pallas={k['use_pallas']}",
+                f"  layout: {self.layout}",
+                f"  predicted slate: {self.requests} x {self.problem.k}"
+                f" rows, {_fmt_bytes(self.coreset_bytes)}",
+                f"  solver: sequential"
+                f" alpha={SEQ_ALPHA[self.problem.measure]}"
+                f" ({self.problem.measure}), stateless — session reuse via"
+                " serving.OnlineReranker",
+            ]
+            if actual:
+                lines.extend(self._explain_actual())
+            return "\n".join(lines)
 
         shape = (f"({self.n}, {self.d})" if self.n is not None
                  else f"stream (d={self.d if self.d is not None else '?'})")
@@ -381,9 +407,17 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
         raise ValueError(f"mode must be one of {_MODES}, got {ex.mode!r}")
 
     arr = _is_array(problem.points)
-    n = int(problem.points.shape[0]) if arr else None
-    d = (int(problem.points.shape[1]) if arr and problem.points.ndim > 1
-         else problem.dim)
+    ndim = int(problem.points.ndim) if arr else None
+    requests = None
+    if arr and ndim == 3:
+        # (requests, candidates, d) tensor — the serving-mode input shape
+        requests = int(problem.points.shape[0])
+        n = int(problem.points.shape[1])
+        d = int(problem.points.shape[2])
+    else:
+        n = int(problem.points.shape[0]) if arr else None
+        d = (int(problem.points.shape[1]) if arr and ndim is not None
+             and ndim > 1 else problem.dim)
     itemsize = int(getattr(problem.points, "dtype", np.dtype(np.float32)
                            ).itemsize) if arr else 4
 
@@ -403,6 +437,8 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
                                  "num_reducers > 1")
     elif not arr:
         mode, reason = "streaming", "auto: chunk-iterator input"
+    elif ndim == 3:
+        mode, reason = "serving", "auto: (requests, candidates, d) tensor"
     else:
         sharded_mesh, multi = _mesh_from_sharded(problem.points)
         if mesh is not None:
@@ -425,6 +461,38 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
     if not arr and mode != "streaming":
         raise ValueError(f"a chunk-iterator source only supports "
                          f"mode='streaming', got {mode!r}")
+    if mode == "serving" and requests is None:
+        raise ValueError("mode='serving' needs a 3-D (requests, candidates, "
+                         "d) array of per-request candidate embeddings")
+    if mode != "serving" and requests is not None:
+        raise ValueError(f"a 3-D (requests, candidates, d) tensor only "
+                         f"supports mode='serving', got {mode!r}")
+    if mode == "serving":
+        from repro.serving.rerank import GMM_PREFIX_MEASURES
+        if constrained:
+            raise ValueError(
+                "mode='serving' is unconstrained — serve quota-constrained "
+                "slates through repro.serving.OnlineReranker(matroid=...) "
+                "sessions instead")
+        if problem.measure not in GMM_PREFIX_MEASURES:
+            raise ValueError(
+                f"mode='serving' answers per-request slates with the "
+                f"GMM-prefix engine; measure {problem.measure!r} is not "
+                f"GMM-solvable (one of {GMM_PREFIX_MEASURES})")
+        if n < problem.k:
+            raise ValueError(f"k={problem.k} exceeds the {n} candidates "
+                             f"per request")
+        # knobs without a serving execution path must fail at plan time
+        if ex.kprime not in ("auto", None):
+            raise ValueError("kprime= has no serving path (stateless "
+                             "per-request slates build no core-set)")
+        if ex.b not in ("auto", 1):
+            raise ValueError("mode='serving' runs the exact b=1 engine "
+                             "per request; b= has no serving path")
+        if ex.schedule is not None:
+            raise ValueError("schedule= has no serving path")
+        if ex.generalized or ex.smm_mode is not None:
+            raise ValueError("generalized=/smm_mode= have no serving path")
     if mode == "mapreduce" and mesh is None:
         num_red = num_red or 1
     if constrained and (ex.generalized or ex.three_round):
@@ -454,9 +522,9 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
             raise TypeError("resilience= must be a "
                             "repro.distributed.ResiliencePolicy, got "
                             f"{type(ex.resilience).__name__}")
-        if mode == "batch":
+        if mode in ("batch", "serving"):
             raise ValueError("resilience= applies to streaming and "
-                             "mapreduce runs (batch is one local dispatch "
+                             f"mapreduce runs ({mode} is one local dispatch "
                              "with nothing to retry or degrade to)")
         if (mode == "streaming" and constrained
                 and ex.resilience.checkpoint_dir is not None):
@@ -494,6 +562,19 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
     knobs = {"kprime": kprime, "b": b, "chunk": chunk, "eps": eps,
              "schedule": ex.schedule, "use_pallas": use_pallas,
              "tau": tau, "cliff": cliff, "sprint": ex.sprint}
+
+    if mode == "serving":
+        # stateless fused slates: no core-set, no reducers — the predicted
+        # footprint is the (requests x k) slate tensor itself
+        return Plan(
+            problem=problem, execution=ex, mode=mode, reason=reason,
+            constrained=False, matroid=None, variant="plain", mesh=None,
+            num_reducers=None, knobs=knobs,
+            layout=(f"multi-tenant vmap, {requests} requests x {n} "
+                    f"candidates per dispatch"),
+            kprime_plan="none (stateless per-request slate)",
+            coreset_rows=requests * k, coreset_bytes=requests * k * d * 4,
+            n=n, d=d, requests=requests)
 
     # ---- composition-aware k' plan + layout + footprint -------------------
     m_groups = mat.m if constrained else 1
@@ -814,6 +895,32 @@ def _run_streaming_constrained(plan_: Plan, tr) -> DiversityResult:
                               coreset_size=len(cand_pts)), plan=plan_)
 
 
+def _run_serving(plan_: Plan, tr) -> DiversityResult:
+    """Stateless fused multi-tenant rerank: one vmapped b=1 engine dispatch
+    answers every request's exact-GMM slate.  ``solution`` is (R, k, d),
+    ``indices`` (R, k) rows into each request's candidate set and ``value``
+    the mean per-request diversity objective (per-request values ride in
+    ``telemetry["values"]``)."""
+    from repro.serving.rerank import rerank_batched
+
+    p, kb = plan_.problem, plan_.knobs
+    pts = np.asarray(p.points, np.float32)
+    t = time.perf_counter()
+    out = rerank_batched(pts, p.k, measure=p.measure, metric=p.metric,
+                         chunk=kb["chunk"])
+    t = tr.phase("rerank", t, sync=None)
+    sol = np.take_along_axis(pts, out.indices[:, :, None], axis=1)
+    tr.phase("value", t)
+    return DiversityResult(
+        solution=sol, value=float(np.mean(out.values)),
+        _indices=np.asarray(out.indices), labels=None, cert=None,
+        coreset=None,
+        telemetry=tr.annotate(mode="serving", requests=pts.shape[0],
+                              values=out.values.tolist(),
+                              radii=out.radii.tolist()),
+        plan=plan_)
+
+
 def _run_mapreduce(plan_: Plan, tr) -> DiversityResult:
     p, kb, ex = plan_.problem, plan_.knobs, plan_.execution
     eps = 0.1 if kb["eps"] is None else kb["eps"]
@@ -922,6 +1029,8 @@ def _execute(plan_: Plan) -> DiversityResult:
     elif plan_.mode == "streaming":
         run = (_run_streaming_constrained if plan_.constrained
                else _run_streaming)
+    elif plan_.mode == "serving":
+        run = _run_serving    # plan() rejects constrained serving
     else:
         run = (_run_mapreduce_constrained if plan_.constrained
                else _run_mapreduce)

@@ -284,6 +284,15 @@ class StreamingCoreset:
         self._prefix = []        # buffers the first cap points
         self._state: Optional[SMMState] = None
         self.n_seen = 0
+        # Host-side cache-invalidation token for the serving layer
+        # (``repro.serving.rerank``): bumped whenever an update could change
+        # the finalized core-set or its certificate — boot, far-point insert,
+        # merge, any pre-boot buffering, and (ext/gen) any absorbed point.
+        # A fully-absorbed chunk in ``plain`` mode leaves it unchanged, which
+        # is exactly the certificate-reuse fast path.  NOT part of the
+        # certified state: different chunkings of the same stream may count
+        # different generations even though the SMM state is chunk-invariant.
+        self.generation = 0
         # per-merge re-certification log: (n_seen, d_i) at every merge — the
         # streaming analogue of the batch engine's radius trajectory (the
         # proxy-distance bound is 4·d_i, and d_i only moves at merges)
@@ -311,6 +320,7 @@ class StreamingCoreset:
         # T is full after initialization -> Phase 1 begins with a merge
         _count("device_dispatches")          # _init_threshold
         _count("points_absorbed", cap)       # the boot prefix
+        self.generation += 1
         self._state = self._merge_until_room(state)
 
     def _merge_until_room(self, state: SMMState) -> SMMState:
@@ -340,7 +350,10 @@ class StreamingCoreset:
         chunk = np.asarray(chunk, dtype=np.dtype(self.dtype.dtype.name)
                            if hasattr(self.dtype, "dtype") else np.float32)
         chunk = np.atleast_2d(chunk)
+        if chunk.shape[0] == 0:
+            return
         self.n_seen += chunk.shape[0]
+        gen0 = self.generation
         if self._state is None:
             need = self.cap - sum(len(p) for p in self._prefix)
             self._prefix.append(chunk[:need])
@@ -348,10 +361,17 @@ class StreamingCoreset:
             if sum(len(p) for p in self._prefix) >= self.cap:
                 self._boot(np.concatenate(self._prefix, axis=0))
                 self._prefix = []
+            else:
+                # still buffering: finalize() would return the grown prefix
+                self.generation += 1
             if chunk.shape[0] == 0:
                 return
         self._consume(jnp.asarray(chunk, self.dtype),
                       self.n_seen - chunk.shape[0])
+        if self.mode != "plain" and self.generation == gen0:
+            # ext/gen: even fully-absorbed points mutate delegate sets /
+            # multiplicities, so the finalized core-set may change
+            self.generation += 1
 
     def _consume(self, chunk, base: int = 0) -> None:
         """Sync-free chunk loop: ``_classify_absorb`` classifies the tail,
@@ -375,6 +395,7 @@ class StreamingCoreset:
             if first_far == tail.shape[0]:      # whole tail absorbed
                 pos = c
                 break
+            self.generation += 1                # far insert mutates T
             cvalid = jnp.ones((tail.shape[0],), bool)
             state, consumed, full = _seq_insert(state, tail, cvalid, first_far,
                                                 self.metric, self.mode, self.k)
@@ -523,6 +544,7 @@ class StreamingCoreset:
                 "n_seen": int(self.n_seen),
                 "n_prefix": int(prefix.shape[0]),
                 "n_processed": int(getattr(self, "_n_processed", 0)),
+                "generation": int(self.generation),
                 "booted": booted,
                 "phase_log": [[int(n), float(d)] for n, d in self._phase_log]}
         return arrays, meta
@@ -540,6 +562,7 @@ class StreamingCoreset:
                   metric=meta["metric"], mode=meta["mode"],
                   dtype=getattr(jnp, meta["dtype"]), eps=meta["eps"])
         smm.n_seen = int(meta["n_seen"])
+        smm.generation = int(meta.get("generation", 0))
         smm._phase_log = [(int(n), float(d)) for n, d in meta["phase_log"]]
         n_prefix = int(meta["n_prefix"])
         if n_prefix:

@@ -55,11 +55,19 @@ from typing import Any, Dict, List, Optional, Tuple
 #                     (chaos drills / fault-injection matrix)
 #   checkpoints_written  CheckpointManager saves issued by a resilient run
 #   reducers_recovered   reducers that failed then succeeded on a retry
+#   sessions_active   rerank sessions opened in the serving SessionStore
+#                     (monotone opens; the live gauge is ``store.active``)
+#   rerank_batched    requests whose diverse slate came from a fused
+#                     multi-tenant batched dispatch (serving layer)
+#   coreset_reuses    rerank requests answered from a cached session slate
+#                     because absorbing the request's candidates left the
+#                     session core-set generation unchanged (no re-solve)
 COUNTER_NAMES = ("distance_evals", "bytes_swept", "host_syncs",
                  "device_dispatches", "pool_widenings", "sprint_segments",
                  "jit_recompiles", "points_absorbed", "merges", "retries",
                  "failures_injected", "checkpoints_written",
-                 "reducers_recovered")
+                 "reducers_recovered", "sessions_active", "rerank_batched",
+                 "coreset_reuses")
 
 ENV_VAR = "REPRO_TRACE"
 

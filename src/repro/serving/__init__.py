@@ -1,3 +1,7 @@
 from .engine import Request, ServingEngine, diverse_rerank
+from .rerank import (BatchedRerank, OnlineReranker, RerankResult, Session,
+                     SessionStore, rerank_batched, session_nbytes)
 
-__all__ = ["Request", "ServingEngine", "diverse_rerank"]
+__all__ = ["Request", "ServingEngine", "diverse_rerank",
+           "BatchedRerank", "OnlineReranker", "RerankResult", "Session",
+           "SessionStore", "rerank_batched", "session_nbytes"]

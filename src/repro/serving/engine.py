@@ -3,8 +3,19 @@ application: present k maximally-diverse results).
 
 ``ServingEngine`` drives prefill + decode over a fixed-capacity batch of
 request slots (continuous batching lite: slots are refilled from the queue as
-sequences finish).  ``diverse_rerank`` picks the k most diverse completions
-by remote-edge/clique over embedding space using the paper's machinery.
+sequences finish).  Diverse reranking plugs into that loop at two levels
+(see ``repro.serving.rerank`` and docs/serving.md):
+
+* ``rerank_group`` — after each continuous-batching group finishes decoding,
+  every request's candidate embeddings absorb into its session's streaming
+  core-set and the slates come back from ONE fused multi-tenant dispatch
+  (``OnlineReranker.rerank_many``);
+* ``generate_diverse`` — ``generate`` + ``rerank_group`` per group: the
+  end-to-end serve-then-diversify loop.
+
+``diverse_rerank`` is the legacy one-shot spelling (a ``DeprecationWarning``
+wrapper over ``repro.diversify``); ``ExecutionSpec(mode="serving")`` is the
+facade spelling of the stateless batched path.
 """
 from __future__ import annotations
 
@@ -24,13 +35,20 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 16
     out: Optional[np.ndarray] = None
+    # -- diverse-rerank fields (see rerank_group) --------------------------
+    session: Optional[str] = None        # session key (None = per-request)
+    candidates: Optional[np.ndarray] = None   # (n, d) candidate embeddings
+    slate: Optional[np.ndarray] = None        # (k, d) diverse slate
+    slate_reused: bool = False           # served from the cached certificate
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, rules: ShardingRules, params, *,
-                 batch: int = 4, capacity: int = 256, t_enc: int = 0):
+                 batch: int = 4, capacity: int = 256, t_enc: int = 0,
+                 reranker=None):
         self.cfg, self.rules, self.params = cfg, rules, params
         self.batch, self.capacity, self.t_enc = batch, capacity, t_enc
+        self.reranker = reranker     # repro.serving.OnlineReranker | None
         self._prefill = jax.jit(
             lambda p, b, c: M.prefill_fn(p, cfg, rules, b, c))
         self._decode = jax.jit(
@@ -70,6 +88,37 @@ class ServingEngine:
             gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
             for j, r in enumerate(group):
                 r.out = gen[j, : r.max_new_tokens]
+        return requests
+
+    # -- serving-time diversity (repro.serving.rerank) ----------------------
+    def rerank_group(self, requests: List[Request]) -> List[Request]:
+        """Diverse-rerank one continuous-batching group: every request with
+        ``candidates`` absorbs them into its session core-set and all the
+        changed sessions solve in one fused multi-tenant dispatch.  Slates
+        land on ``r.slate`` (``r.slate_reused`` marks certificate-reuse
+        hits).  Needs a ``reranker=`` (``repro.serving.OnlineReranker``)."""
+        if self.reranker is None:
+            raise ValueError("ServingEngine needs reranker= "
+                             "(repro.serving.OnlineReranker) to rerank")
+        live = [(f"req-{i}" if r.session is None else r.session, r)
+                for i, r in enumerate(requests) if r.candidates is not None]
+        if not live:
+            return requests
+        out = self.reranker.rerank_many({key: r.candidates
+                                         for key, r in live})
+        for key, r in live:
+            res = out[key]
+            r.slate = res.slate
+            r.slate_reused = res.reused
+        return requests
+
+    def generate_diverse(self, requests: List[Request]) -> List[Request]:
+        """``generate`` + ``rerank_group`` per continuous-batching group —
+        a decode step's worth of requests reranks as one fused call."""
+        for i in range(0, len(requests), self.batch):
+            group = requests[i:i + self.batch]
+            self.generate(group)
+            self.rerank_group(group)
         return requests
 
 

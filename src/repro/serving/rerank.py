@@ -1,0 +1,556 @@
+"""Serving-time diversity: session-scoped online rerank over streaming
+core-sets, plus the fused multi-tenant batched rerank.
+
+The paper's core-sets exist so that diversity maximization stays cheap when
+the data never stops arriving — and a serving stack is exactly that workload
+at request granularity.  This module makes diverse reranking a first-class
+per-request capability on two levels:
+
+* ``rerank_batched`` — the stateless hot path.  A decode step's worth of
+  concurrent requests (each with its own candidate-embedding batch)
+  dispatches as ONE fused call: the m=1 schedule engine
+  (``core.gmm._schedule_select_impl``, b=1 = exact sequential GMM = the
+  paper's α=2 sequential solver for the GMM-prefix measures) is ``vmap``-ed
+  over the request axis.  Ragged candidate sets are padded with the engine's
+  label sentinel (-1 = never selectable), so one compilation serves every
+  request mix of the same padded shape.
+
+* ``OnlineReranker`` + ``SessionStore`` — the stateful path.  Each session
+  (user / conversation / query context) keeps ONE ``StreamingCoreset`` (or
+  ``FairStreamingCoreset`` under a matroid constraint) that absorbs every
+  request's candidate batch sync-free and re-certifies incrementally: the
+  ``RadiusCertificate`` is carried across requests instead of re-solving
+  from scratch.  When a request's candidates are fully absorbed without
+  changing the core-set (the SMM ``generation`` token is unchanged), the
+  cached slate is returned outright (``coreset_reuses``).  Sessions are
+  evicted LRU under a byte budget (the ``memory_budget_bytes`` accounting
+  the planner already uses), and survive kills through the existing
+  ``CheckpointManager`` round-trip.
+
+Counters (``repro.obs``): ``sessions_active`` (sessions opened),
+``rerank_batched`` (requests served by a fused dispatch), ``coreset_reuses``
+(requests answered from the cached certificate/slate).
+
+>>> import numpy as np
+>>> from repro.serving import OnlineReranker
+>>> rng = np.random.default_rng(0)
+>>> rr = OnlineReranker(k=4, dim=8, kprime=16)
+>>> for step in range(3):                      # three requests, one session
+...     out = rr.rerank("user-1", rng.normal(size=(64, 8)).astype(np.float32))
+>>> out.slate.shape
+(4, 8)
+>>> out.cert.kind
+'streaming'
+>>> rr.store.active
+1
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.trace import count as _count, span as _span
+
+#: measures whose sequential α-approx solver is a GMM prefix — exactly the
+#: set the fused batched engine can answer per request (remote-clique runs
+#: a matching solver instead; see core.sequential).
+GMM_PREFIX_MEASURES = ("remote-edge", "remote-star", "remote-bipartition",
+                       "remote-tree", "remote-cycle")
+
+
+# --------------------------------------------------------------------------
+# fused multi-tenant batched rerank (stateless hot path)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "metric_name"))
+def _batched_select_impl(points, labels, starts, k: int, chunk: int,
+                         metric_name: str):
+    """vmap the m=1 schedule engine over the request axis: ``points`` is
+    (R, n, d), ``labels`` (R, n) with -1 marking pad rows, ``starts`` (R,).
+    Returns (idx (R, k), radius (R,), dm (R, k, k) slate pairwise)."""
+    from repro.core.gmm import _schedule_select_impl
+    from repro.core.metrics import get_metric
+
+    schedule = ((1, k),)        # b=1: exact sequential GMM per request
+
+    def one(pts, lab, st):
+        idx, radius, _, _, _ = _schedule_select_impl(
+            pts, lab, st[None], 1, k, schedule, chunk, metric_name, False)
+        slate = pts[idx[0]]
+        dm = get_metric(metric_name).pairwise(slate, slate)
+        return idx[0], radius[0], dm
+
+    return jax.vmap(one)(points, labels, starts)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedRerank:
+    """One fused dispatch's worth of per-request diverse slates."""
+    indices: np.ndarray         # (R, k) rows into each request's candidates
+    radii: np.ndarray           # (R,) anticover radius of each slate
+    values: np.ndarray          # (R,) diversity objective of each slate
+
+
+def _stack_ragged(batches: Sequence[np.ndarray]) -> Tuple[np.ndarray,
+                                                          np.ndarray]:
+    """Stack per-request candidate sets of possibly different lengths into
+    one (R, n_max, d) tensor + (R, n_max) engine labels (-1 = padding)."""
+    arrs = [np.atleast_2d(np.asarray(b, np.float32)) for b in batches]
+    d = arrs[0].shape[1]
+    n_max = max(a.shape[0] for a in arrs)
+    pts = np.zeros((len(arrs), n_max, d), np.float32)
+    lab = np.full((len(arrs), n_max), -1, np.int32)
+    for i, a in enumerate(arrs):
+        if a.shape[1] != d:
+            raise ValueError(f"request {i} has dim {a.shape[1]}, expected {d}")
+        pts[i, : a.shape[0]] = a
+        lab[i, : a.shape[0]] = 0
+    return pts, lab
+
+
+def rerank_batched(candidates, k: int, *, measure: str = "remote-edge",
+                   metric: str = "euclidean",
+                   chunk: int = 0) -> BatchedRerank:
+    """Diverse top-``k`` for a whole group of concurrent requests in ONE
+    fused dispatch.
+
+    ``candidates`` is a list of per-request ``(n_i, d)`` candidate-embedding
+    arrays (ragged allowed — shorter sets are padded with never-selectable
+    rows) or a single ``(R, n, d)`` tensor.  Each request gets an exact
+    sequential-GMM slate (the α=2 sequential solver for ``remote-edge`` and
+    the other GMM-prefix measures), computed by ``vmap``-ing the m=1
+    schedule engine over the request axis, so a decode step's worth of
+    requests costs one dispatch instead of R.
+
+    Returns ``BatchedRerank(indices (R, k), radii (R,), values (R,))``.
+
+    >>> import numpy as np
+    >>> from repro.serving import rerank_batched
+    >>> rng = np.random.default_rng(0)
+    >>> cands = [rng.normal(size=(32, 4)).astype(np.float32)
+    ...          for _ in range(8)]
+    >>> out = rerank_batched(cands, k=3)
+    >>> out.indices.shape
+    (8, 3)
+    >>> bool((out.values > 0).all())
+    True
+    """
+    from repro.core.measures import MEASURES, diversity
+    from repro.core.metrics import get_metric
+
+    if measure not in MEASURES:
+        raise ValueError(f"unknown measure {measure!r}")
+    if measure not in GMM_PREFIX_MEASURES:
+        raise ValueError(
+            f"rerank_batched solves per-request slates with the GMM-prefix "
+            f"engine; measure {measure!r} needs a matching solver — use "
+            f"repro.diversify(mode='batch') per request instead")
+    if hasattr(candidates, "ndim") and getattr(candidates, "ndim", 0) == 3:
+        pts = np.asarray(candidates, np.float32)
+        lab = np.zeros(pts.shape[:2], np.int32)
+    else:
+        pts, lab = _stack_ragged(list(candidates))
+    R, n, d = pts.shape
+    if not 1 <= k <= n:
+        raise ValueError(f"k={k} out of range for candidate sets of {n}")
+    if (lab >= 0).sum(axis=1).min() < k:
+        raise ValueError(f"every request needs >= k={k} candidates")
+    # pad n so the engine chunk divides it (mirrors gmm.pad_for_engine)
+    ch = max(min(chunk or n, n), 1)
+    pad = -(-n // ch) * ch - n
+    if pad:
+        pts = np.pad(pts, ((0, 0), (0, pad), (0, 0)))
+        lab = np.pad(lab, ((0, 0), (0, pad)), constant_values=-1)
+    starts = np.argmax(lab >= 0, axis=1).astype(np.int32)
+    with _span("serving.rerank_batched", requests=R):
+        idx, radii, dm = _batched_select_impl(
+            jnp.asarray(pts), jnp.asarray(lab), jnp.asarray(starts),
+            k, ch, get_metric(metric).name)
+        idx = np.asarray(idx)
+        radii = np.asarray(radii)
+        dm = np.asarray(dm)
+    _count("rerank_batched", R)
+    _count("device_dispatches")
+    _count("host_syncs")
+    values = np.asarray([diversity(measure, dm[r]) for r in range(R)],
+                        np.float64)
+    return BatchedRerank(indices=idx, radii=radii, values=values)
+
+
+# --------------------------------------------------------------------------
+# session store (LRU + byte budget)
+# --------------------------------------------------------------------------
+
+def session_nbytes(coreset) -> int:
+    """Deterministic per-session byte accounting: the SMM state arrays a
+    live session pins on device (same fp32 model as the planner's
+    ``memory_budget_bytes`` core-set prediction)."""
+    if hasattr(coreset, "_per_group"):        # FairStreamingCoreset
+        return sum(session_nbytes(g) for g in coreset._per_group)
+    cap, dim = coreset.cap, coreset.dim
+    k_slots = coreset.k if coreset.mode == "ext" else 1
+    # T + M (cap x dim fp32 each), delegates (cap x k_slots x dim), masks +
+    # counts (cap x ~6 B), threshold/phase scalars
+    return cap * dim * 4 * (2 + k_slots) + cap * 6 + 16
+
+
+@dataclasses.dataclass
+class Session:
+    """One live session: its streaming core-set plus the cached slate."""
+    key: str
+    coreset: object              # StreamingCoreset | FairStreamingCoreset
+    nbytes: int
+    requests: int = 0
+    cached_generation: int = -1
+    cached: Optional["RerankResult"] = None
+
+    @property
+    def generation(self) -> int:
+        cs = self.coreset
+        if hasattr(cs, "_per_group"):
+            return sum(g.generation for g in cs._per_group)
+        return cs.generation
+
+
+class SessionStore:
+    """LRU session table under a byte budget.
+
+    Every access moves the session to the MRU end; when the summed
+    ``session_nbytes`` accounting exceeds ``memory_budget_bytes``, LRU
+    sessions are evicted (their core-sets are simply dropped — a checkpointed
+    session can be restored, an unchunked one re-accumulates).  With no
+    budget the store only grows (callers own the lifecycle).
+    """
+
+    def __init__(self, memory_budget_bytes: Optional[int] = None):
+        self.memory_budget_bytes = memory_budget_bytes
+        self._sessions: "OrderedDict[str, Session]" = OrderedDict()
+        self.evictions = 0
+
+    @property
+    def active(self) -> int:
+        """Live sessions in the store (the gauge behind the monotone
+        ``sessions_active`` counter)."""
+        return len(self._sessions)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self._sessions.values())
+
+    def get(self, key: str) -> Optional[Session]:
+        sess = self._sessions.get(key)
+        if sess is not None:
+            self._sessions.move_to_end(key)
+        return sess
+
+    def put(self, sess: Session) -> None:
+        self._sessions[sess.key] = sess
+        self._sessions.move_to_end(sess.key)
+        self._evict_to_budget(keep=sess.key)
+
+    def pop(self, key: str) -> Optional[Session]:
+        return self._sessions.pop(key, None)
+
+    def keys(self):
+        return list(self._sessions.keys())
+
+    def _evict_to_budget(self, keep: Optional[str] = None) -> None:
+        if self.memory_budget_bytes is None:
+            return
+        while self.nbytes > self.memory_budget_bytes and len(self._sessions) > 1:
+            lru = next(iter(self._sessions))
+            if lru == keep:            # never evict the request being served
+                break
+            self._sessions.pop(lru)
+            self.evictions += 1
+
+
+# --------------------------------------------------------------------------
+# the online reranker
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RerankResult:
+    """One session rerank: the k most diverse points of the session's
+    cumulative candidate stream, with its carried certificate."""
+    slate: np.ndarray                    # (k, d)
+    cert: object                         # RadiusCertificate
+    reused: bool                         # True = served from the cached slate
+    generation: int                      # core-set generation of the slate
+    session: str
+    labels: Optional[np.ndarray] = None  # (k,) group ids (constrained only)
+
+
+class OnlineReranker:
+    """Per-session online diverse rerank: one streaming core-set per session,
+    absorbed sync-free, re-certified incrementally, solved only when the
+    core-set actually changed.
+
+    ``matroid=`` switches sessions to ``FairStreamingCoreset`` (quota-fair
+    slates via the constrained solver); otherwise the ``measure`` picks the
+    SMM mode exactly like the planner (clique-type measures keep delegates).
+    ``memory_budget_bytes`` bounds the session table (LRU eviction).
+
+    ``rerank`` serves one request; ``rerank_many`` serves a whole concurrent
+    group, fusing every changed plain-mode session's solve into one batched
+    engine dispatch (the session core-sets share the fixed (k'+1, d) state
+    shape, so they stack for free).
+    """
+
+    def __init__(self, k: int, dim: int, *, kprime: Optional[int] = None,
+                 measure: str = "remote-edge", metric: str = "euclidean",
+                 matroid=None, eps: Optional[float] = None,
+                 memory_budget_bytes: Optional[int] = None):
+        from repro.core.measures import MEASURES, NEEDS_INJECTIVE
+
+        if measure not in MEASURES:
+            raise ValueError(f"unknown measure {measure!r}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k, self.dim = int(k), int(dim)
+        self.kprime = max(2 * k, 32) if kprime is None else int(kprime)
+        if self.kprime < k:
+            raise ValueError("k' must be >= k")
+        self.measure, self.metric = measure, metric
+        self.matroid = matroid
+        if matroid is not None and matroid.k != k:
+            raise ValueError(f"matroid.k={matroid.k} != k={k}")
+        self.smm_mode = "ext" if measure in NEEDS_INJECTIVE else "plain"
+        self.eps = eps
+        self.store = SessionStore(memory_budget_bytes)
+        self.reuse_hits = 0
+        self.requests_served = 0
+
+    # -- sessions -----------------------------------------------------------
+    def _open(self, key: str) -> Session:
+        from repro.constrained.streaming import FairStreamingCoreset
+        from repro.core.smm import StreamingCoreset
+
+        if self.matroid is not None:
+            cs = FairStreamingCoreset(matroid=self.matroid,
+                                      kprime=self.kprime, dim=self.dim,
+                                      metric=self.metric, mode=self.smm_mode,
+                                      eps=self.eps)
+        else:
+            cs = StreamingCoreset(k=self.k, kprime=self.kprime, dim=self.dim,
+                                  metric=self.metric, mode=self.smm_mode,
+                                  eps=self.eps)
+        sess = Session(key=key, coreset=cs, nbytes=session_nbytes(cs))
+        self.store.put(sess)
+        _count("sessions_active")
+        return sess
+
+    def _absorb(self, key: str, candidates, labels=None) -> Session:
+        sess = self.store.get(key) or self._open(key)
+        cands = np.atleast_2d(np.asarray(candidates, np.float32))
+        if cands.shape[1] != self.dim:
+            raise ValueError(f"candidates have dim {cands.shape[1]}, "
+                             f"reranker was built for dim {self.dim}")
+        with _span("serving.absorb", session=key, n=int(cands.shape[0])):
+            if self.matroid is not None:
+                if labels is None:
+                    raise ValueError("constrained sessions need per-candidate "
+                                     "labels")
+                sess.coreset.update(cands, np.asarray(labels))
+            else:
+                sess.coreset.update(cands)
+        sess.requests += 1
+        self.requests_served += 1
+        return sess
+
+    # -- solving ------------------------------------------------------------
+    def _solve_single(self, sess: Session) -> RerankResult:
+        from repro.constrained.solver import solve_and_value
+        from repro.core.sequential import solve_on_coreset
+
+        if self.matroid is not None:
+            pts, lab = sess.coreset.finalize()
+            cert = sess.coreset.certificate()
+            sel, _ = solve_and_value(pts, lab, measure=self.measure,
+                                     matroid=self.matroid, metric=self.metric)
+            return RerankResult(slate=np.asarray(pts[sel]), cert=cert,
+                                reused=False, generation=sess.generation,
+                                session=sess.key, labels=np.asarray(lab[sel]))
+        cs = sess.coreset.finalize()
+        slate = solve_on_coreset(cs, self.k, self.measure, metric=self.metric)
+        return RerankResult(slate=np.asarray(slate), cert=cs.cert,
+                            reused=False, generation=sess.generation,
+                            session=sess.key)
+
+    def _solve_fused(self, sessions: List[Session]) -> List[RerankResult]:
+        """One batched engine dispatch for every changed plain-mode session:
+        their SMM states all hold (k'+1, d) centers, so the per-session
+        k-center slates stack into a single vmapped b=1 GMM."""
+        from repro.core.adaptive import RadiusCertificate, _ratio
+        from repro.core.metrics import get_metric
+
+        cap = self.kprime + 1
+        pts = np.zeros((len(sessions), cap, self.dim), np.float32)
+        lab = np.full((len(sessions), cap), -1, np.int32)
+        d_thrs = np.zeros((len(sessions),), np.float64)
+        for i, sess in enumerate(sessions):
+            smm = sess.coreset
+            if smm.state is not None:
+                pts[i] = np.asarray(smm.state.T)
+                lab[i, np.asarray(smm.state.t_valid)] = 0
+                d_thrs[i] = float(smm.state.d_thr)
+            else:                               # pre-boot: prefix buffer
+                pre = (np.concatenate(smm._prefix, axis=0) if smm._prefix
+                       else np.zeros((0, self.dim), np.float32))
+                pts[i, : pre.shape[0]] = pre
+                lab[i, : pre.shape[0]] = 0
+        starts = np.argmax(lab >= 0, axis=1).astype(np.int32)
+        with _span("serving.solve_fused", sessions=len(sessions)):
+            idx, scales, dm = _batched_select_impl(
+                jnp.asarray(pts), jnp.asarray(lab), jnp.asarray(starts),
+                self.k, cap, get_metric(self.metric).name)
+            idx = np.asarray(idx)
+            scales = np.asarray(scales, np.float64)
+            dm = np.asarray(dm)
+        _count("rerank_batched", len(sessions))
+        _count("device_dispatches")
+        _count("host_syncs")
+        out = []
+        for i, sess in enumerate(sessions):
+            smm = sess.coreset
+            radius = 4.0 * d_thrs[i] if smm.state is not None else 0.0
+            n_valid = int((lab[i] >= 0).sum())
+            scale = float(scales[i]) if n_valid >= self.k else 0.0
+            ratio = _ratio(radius, scale)
+            cert = RadiusCertificate(
+                kprime=self.kprime, radius=radius, scale=scale, ratio=ratio,
+                eps_target=smm.eps,
+                meets_target=(None if smm.eps is None
+                              else bool(ratio <= smm.eps)),
+                counts=tuple(n for n, _ in smm.phase_log),
+                radii=tuple(4.0 * t for _, t in smm.phase_log),
+                kind="streaming")
+            out.append(RerankResult(slate=pts[i][idx[i]], cert=cert,
+                                    reused=False, generation=sess.generation,
+                                    session=sess.key))
+        return out
+
+    def _can_fuse(self) -> bool:
+        return (self.matroid is None and self.smm_mode == "plain"
+                and self.measure in GMM_PREFIX_MEASURES)
+
+    def _finish(self, sess: Session, res: RerankResult) -> RerankResult:
+        sess.cached = res
+        sess.cached_generation = res.generation
+        return res
+
+    def _cached(self, sess: Session) -> Optional[RerankResult]:
+        if sess.cached is not None and sess.cached_generation == sess.generation:
+            _count("coreset_reuses")
+            self.reuse_hits += 1
+            return dataclasses.replace(sess.cached, reused=True)
+        return None
+
+    # -- the request surface ------------------------------------------------
+    def rerank(self, session: str, candidates, labels=None) -> RerankResult:
+        """Absorb one request's candidate batch into ``session`` and return
+        the k most diverse points of the session's cumulative stream.
+
+        The ``RadiusCertificate`` rides along on every result; when the
+        absorption left the core-set unchanged the previous slate (and its
+        certificate) is returned outright — ``coreset_reuses`` counts those.
+        """
+        sess = self._absorb(session, candidates, labels)
+        if sess.coreset.n_seen < self.k:
+            raise ValueError(f"session {session!r} has seen "
+                             f"{sess.coreset.n_seen} < k={self.k} candidates")
+        hit = self._cached(sess)
+        if hit is not None:
+            return hit
+        if self._can_fuse():
+            res = self._solve_fused([sess])[0]
+        else:
+            res = self._solve_single(sess)
+        return self._finish(sess, res)
+
+    def rerank_many(self, batches: Mapping[str, np.ndarray], labels=None
+                    ) -> Dict[str, RerankResult]:
+        """Serve a concurrent request group: absorb every session's batch,
+        then solve all CHANGED plain-mode sessions in one fused dispatch
+        (unchanged sessions are served from their cached slates).
+
+        ``batches`` maps session key -> candidate array; ``labels`` (same
+        keys) rides along for constrained sessions.
+        """
+        out: Dict[str, RerankResult] = {}
+        pending: List[Session] = []
+        for key, cands in batches.items():
+            sess = self._absorb(key, cands,
+                                None if labels is None else labels.get(key))
+            if sess.coreset.n_seen < self.k:
+                raise ValueError(f"session {key!r} has seen "
+                                 f"{sess.coreset.n_seen} < k={self.k} "
+                                 f"candidates")
+            hit = self._cached(sess)
+            if hit is not None:
+                out[key] = hit
+            else:
+                pending.append(sess)
+        if pending:
+            if self._can_fuse():
+                for sess, res in zip(pending, self._solve_fused(pending)):
+                    out[sess.key] = self._finish(sess, res)
+            else:
+                for sess in pending:
+                    out[sess.key] = self._finish(sess,
+                                                 self._solve_single(sess))
+        return out
+
+    # -- stats / lifecycle --------------------------------------------------
+    def stats(self) -> dict:
+        """Hit-rate / occupancy snapshot (the load harness reports these)."""
+        return {
+            "requests": self.requests_served,
+            "reuse_hits": self.reuse_hits,
+            "reuse_rate": (self.reuse_hits / self.requests_served
+                           if self.requests_served else 0.0),
+            "sessions_active": self.store.active,
+            "evictions": self.store.evictions,
+            "nbytes": self.store.nbytes,
+        }
+
+    def end_session(self, session: str) -> None:
+        """Drop a session (frees its byte-budget share immediately)."""
+        self.store.pop(session)
+
+    # -- checkpoint / resume ------------------------------------------------
+    # A session IS a StreamingCoreset, so kill-and-resume rides the existing
+    # CheckpointManager round-trip: the restored session finalizes to the
+    # same core-set and certificate as an uninterrupted one (bit-identical
+    # SMM state), asserted in tests/test_serving_rerank.py.
+
+    def save_session(self, session: str, manager, step: int) -> None:
+        """Checkpoint one session's core-set (constrained sessions are not
+        checkpointable yet, matching the planner's resilience rule)."""
+        sess = self.store.get(session)
+        if sess is None:
+            raise KeyError(f"no live session {session!r}")
+        if self.matroid is not None:
+            raise ValueError("checkpoint/resume is not yet supported for "
+                             "constrained sessions")
+        sess.coreset.save(manager, step)
+
+    def restore_session(self, session: str, manager,
+                        step: Optional[int] = None) -> bool:
+        """Rebuild a session from its checkpoint (replacing any live state).
+        Returns False when the manager holds no checkpoint."""
+        from repro.core.smm import StreamingCoreset
+
+        smm, got = StreamingCoreset.restore(manager, step)
+        if smm is None:
+            return False
+        sess = Session(key=session, coreset=smm, nbytes=session_nbytes(smm))
+        self.store.put(sess)
+        _count("sessions_active")
+        return True

@@ -20,6 +20,7 @@ DOCTEST_MODULES = [
     "repro.constrained.solver",  # constrained_solve
     "repro.data.selection",      # select_diverse
     "repro.serving.engine",      # diverse_rerank
+    "repro.serving.rerank",      # OnlineReranker / rerank_batched
     "repro.obs",                 # RunTrace / counters / exporters
 ]
 
@@ -60,3 +61,54 @@ def test_readme_exists_with_required_sections():
                    "Paper → code map", "BENCH_gmm.json", "hypothesis"):
         assert needle in text, f"README.md lost its '{needle}' section"
     assert (REPO / "docs" / "architecture.md").exists()
+
+
+def test_docs_index_covers_every_page():
+    """docs/README.md is the index: every docs page must be linked there."""
+    index = (REPO / "docs" / "README.md").read_text(encoding="utf-8")
+    for page in (REPO / "docs").glob("*.md"):
+        if page.name == "README.md":
+            continue
+        assert f"({page.name})" in index, \
+            f"docs/README.md does not link {page.name}"
+
+
+# -- relative links + anchors cannot rot ---------------------------------------
+
+_LINK_RE = re.compile(r"\[[^\]^!]*\]\(([^)\s]+)\)")
+_CODE_FENCE_RE = re.compile(r"```.*?```", flags=re.DOTALL)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slugification: lowercase, drop punctuation (keep
+    word chars, spaces, dashes), spaces -> dashes."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def _anchors_of(path: pathlib.Path):
+    text = _CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {_github_slug(m.group(1))
+            for m in re.finditer(r"^#{1,6}\s+(.+)$", text, flags=re.M)}
+
+
+ALL_DOC_PAGES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+@pytest.mark.parametrize("md", ALL_DOC_PAGES, ids=lambda p: p.name)
+def test_relative_links_resolve(md):
+    """Every relative link in README.md / docs/*.md points at a file that
+    exists, and every anchor at a heading that exists (GitHub slugs)."""
+    text = _CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        assert dest.exists(), f"{md.name}: broken link -> {target}"
+        if anchor:
+            assert dest.suffix == ".md", \
+                f"{md.name}: anchor on non-markdown target {target}"
+            assert anchor in _anchors_of(dest), \
+                f"{md.name}: dead anchor -> {target}"

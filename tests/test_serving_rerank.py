@@ -1,0 +1,351 @@
+"""Serving-time diversity (ISSUE 9): session-scoped online rerank,
+fused multi-tenant dispatch, the serving planner route, LRU eviction and
+kill-and-resume.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro
+from repro.checkpoint import CheckpointManager
+from repro.serving import (OnlineReranker, Request, ServingEngine,
+                           SessionStore, rerank_batched, session_nbytes)
+
+RNG = np.random.default_rng(99)
+
+
+def _chunks(n, d, count, seed=0, scale=1.0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    return [(offset + scale * rng.normal(size=(n, d))).astype(np.float32)
+            for _ in range(count)]
+
+
+# -- the stateless fused engine ------------------------------------------------
+
+class TestRerankBatched:
+    def test_batched_matches_single_request(self):
+        """vmapping over the request axis must not change any request's
+        slate: R=1 dispatches == rows of the R=8 dispatch."""
+        reqs = _chunks(64, 8, 8, seed=1)
+        many = rerank_batched(np.stack(reqs), k=5)
+        for i, r in enumerate(reqs):
+            one = rerank_batched(r[None], k=5)
+            assert np.array_equal(one.indices[0], many.indices[i])
+            # reduction order differs under vmap -> ulp-level tolerance
+            assert np.isclose(one.radii[0], many.radii[i], rtol=1e-6)
+
+    def test_ragged_padding_never_selected(self):
+        reqs = [RNG.normal(size=(n, 8)).astype(np.float32)
+                for n in (40, 64, 17, 23)]
+        out = rerank_batched(reqs, k=4)
+        for i, r in enumerate(reqs):
+            idx = out.indices[i]
+            assert idx.max() < len(r)                 # no sentinel rows
+            assert len(set(idx.tolist())) == 4        # distinct picks
+
+    def test_values_match_measure(self):
+        from repro.core.measures import diversity
+        from repro.core.metrics import get_metric
+
+        reqs = np.stack(_chunks(50, 8, 3, seed=2))
+        out = rerank_batched(reqs, k=4, measure="remote-star")
+        for i in range(3):
+            sel = reqs[i][out.indices[i]]
+            dm = np.asarray(get_metric("euclidean").pairwise(sel, sel))
+            assert np.isclose(out.values[i],
+                              float(diversity("remote-star", dm)), rtol=1e-5)
+
+
+# -- the serving planner route -------------------------------------------------
+
+class TestServingPlanner:
+    def test_auto_mode_and_execute(self):
+        batch = np.stack(_chunks(100, 16, 8, seed=3))
+        res = repro.diversify(batch, k=5)
+        assert res.plan.mode == "serving"
+        assert res.plan.requests == 8
+        assert res.solution.shape == (8, 5, 16)
+        assert res.indices.shape == (8, 5)
+        assert len(res.telemetry["values"]) == 8
+
+    def test_execute_matches_rerank_batched(self):
+        batch = np.stack(_chunks(60, 8, 4, seed=4))
+        res = repro.diversify(batch, k=4)
+        out = rerank_batched(batch, k=4)
+        assert np.array_equal(res.indices, out.indices)
+        assert np.isclose(res.value, float(np.mean(out.values)))
+
+    def test_explain_golden(self):
+        batch = np.zeros((8, 100, 16), np.float32)
+        p = repro.plan(repro.ProblemSpec(points=batch, k=5))
+        assert p.explain() == """\
+DiversityPlan
+  mode: serving (auto: (requests, candidates, d) tensor)
+  problem: k=5, measure=remote-edge, metric=euclidean, input=(8, 100, 16), constrained=no
+  rerank: fused multi-tenant vmap of the m=1 engine, 8 requests per dispatch
+  engine: b=1 (exact per-request GMM slate), chunk=0, use_pallas=False
+  layout: multi-tenant vmap, 8 requests x 100 candidates per dispatch
+  predicted slate: 8 x 5 rows, 2.5 KiB
+  solver: sequential alpha=2.0 (remote-edge), stateless — session reuse via serving.OnlineReranker"""
+
+    @pytest.mark.parametrize("spec_kw,exec_kw,msg", [
+        (dict(labels=np.zeros(50, int), quotas=[3, 2]), {}, "unconstrained"),
+        (dict(measure="remote-clique"), {}, "GMM-prefix"),
+        (dict(k=60), {}, "exceeds"),
+        ({}, dict(kprime=32), "no serving path"),
+        ({}, dict(b=4), "no serving path"),
+        ({}, dict(schedule=((2, 4),)), "no serving path"),
+        ({}, dict(smm_mode="ext"), "no serving path"),
+        ({}, dict(resilience=repro.ResiliencePolicy()), "nothing to retry"),
+    ])
+    def test_knobs_without_serving_path_fail_at_plan_time(self, spec_kw,
+                                                          exec_kw, msg):
+        spec = dict(points=np.zeros((4, 50, 8), np.float32), k=5)
+        spec.update(spec_kw)
+        with pytest.raises(ValueError, match=msg):
+            repro.plan(repro.ProblemSpec(**spec),
+                       repro.ExecutionSpec(**exec_kw))
+
+    def test_mode_shape_mismatches(self):
+        with pytest.raises(ValueError, match="3-D"):
+            repro.plan(repro.ProblemSpec(points=np.zeros((50, 8), np.float32),
+                                         k=5),
+                       repro.ExecutionSpec(mode="serving"))
+        with pytest.raises(ValueError, match="serving"):
+            repro.plan(repro.ProblemSpec(
+                points=np.zeros((4, 50, 8), np.float32), k=5),
+                repro.ExecutionSpec(mode="batch"))
+
+
+# -- session-scoped online rerank ----------------------------------------------
+
+class TestOnlineReranker:
+    def test_slate_and_certificate(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        res = rr.rerank("u", _chunks(64, 8, 1, seed=5)[0])
+        assert res.slate.shape == (4, 8)
+        assert res.cert.kind == "streaming"
+        assert res.cert.radius > 0 and not res.reused
+
+    def test_rerank_single_matches_many(self):
+        """rerank() and rerank_many() must be bit-identical: both route
+        plain-mode sessions through the same fused solve."""
+        chunks = _chunks(64, 8, 3, seed=6)
+        a = OnlineReranker(k=4, dim=8, kprime=16)
+        b = OnlineReranker(k=4, dim=8, kprime=16)
+        for c in chunks:
+            ra = a.rerank("u", c)
+            rb = b.rerank_many({"u": c})["u"]
+            assert np.array_equal(ra.slate, rb.slate)
+            assert ra.cert.radius == rb.cert.radius
+
+    def test_chunk_invariance_one_vs_many_requests(self):
+        """The SMM state is chunk-invariant, so one request carrying all
+        candidates and N requests carrying the same stream in pieces must
+        finalize to the identical slate and certificate."""
+        chunks = _chunks(50, 8, 4, seed=7)
+        whole = OnlineReranker(k=4, dim=8, kprime=16)
+        split = OnlineReranker(k=4, dim=8, kprime=16)
+        res_w = whole.rerank("u", np.concatenate(chunks))
+        for c in chunks:
+            res_s = split.rerank("u", c)
+        assert np.array_equal(res_w.slate, res_s.slate)
+        assert res_w.cert.radius == res_s.cert.radius
+        assert res_w.cert.scale == res_s.cert.scale
+
+    def test_certificate_reuse_on_absorbed_chunk(self):
+        """A chunk landing fully inside the certified radius leaves the
+        core-set unchanged -> the cached slate + certificate are served
+        without a solve (generation token unchanged)."""
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        base = _chunks(200, 8, 1, seed=8)[0]
+        first = rr.rerank("u", base)
+        # resample inside the already-covered ball: absorbs with no mutation
+        again = rr.rerank("u", base[:50] + 1e-4)
+        assert again.reused
+        assert np.array_equal(again.slate, first.slate)
+        assert again.cert.radius == first.cert.radius
+        assert rr.stats()["reuse_hits"] == 1
+
+    def test_far_point_invalidates_cache(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        first = rr.rerank("u", _chunks(100, 8, 1, seed=9)[0])
+        far = np.full((4, 8), 1e4, np.float32) * np.arange(1, 5)[:, None]
+        res = rr.rerank("u", far)
+        assert not res.reused
+        assert res.generation > first.generation
+
+    def test_sessions_are_independent(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        ca, cb = _chunks(60, 8, 1, seed=10)[0], _chunks(60, 8, 1, seed=11)[0]
+        ra = rr.rerank("a", ca)
+        rb = rr.rerank("b", cb)
+        solo = OnlineReranker(k=4, dim=8, kprime=16)
+        assert np.array_equal(solo.rerank("a", ca).slate, ra.slate)
+        solo2 = OnlineReranker(k=4, dim=8, kprime=16)
+        assert np.array_equal(solo2.rerank("b", cb).slate, rb.slate)
+
+    def test_needs_k_candidates(self):
+        rr = OnlineReranker(k=8, dim=4)
+        with pytest.raises(ValueError, match="k=8"):
+            rr.rerank("u", np.zeros((3, 4), np.float32))
+
+    def test_dim_mismatch(self):
+        rr = OnlineReranker(k=4, dim=8)
+        with pytest.raises(ValueError, match="dim"):
+            rr.rerank("u", np.zeros((10, 5), np.float32))
+
+
+# -- the session store ---------------------------------------------------------
+
+class TestSessionStore:
+    def test_lru_eviction_under_byte_budget(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("probe", _chunks(40, 8, 1, seed=12)[0])
+        per = rr.stats()["nbytes"]
+
+        rr = OnlineReranker(k=4, dim=8, kprime=16,
+                            memory_budget_bytes=3 * per)
+        for i in range(8):
+            rr.rerank(f"u{i}", _chunks(40, 8, 1, seed=20 + i)[0])
+        st = rr.stats()
+        assert st["sessions_active"] == 3
+        assert st["evictions"] == 5
+        assert st["nbytes"] <= 3 * per
+        # LRU: the newest three survive
+        assert set(rr.store.keys()) == {"u5", "u6", "u7"}
+
+    def test_touch_refreshes_lru_order(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("probe", _chunks(40, 8, 1, seed=12)[0])
+        per = rr.stats()["nbytes"]
+
+        rr = OnlineReranker(k=4, dim=8, kprime=16,
+                            memory_budget_bytes=2 * per)
+        c0, c1, c2 = _chunks(40, 8, 3, seed=30)
+        rr.rerank("a", c0)
+        rr.rerank("b", c1)
+        rr.rerank("a", c0[:20])           # touch a -> b becomes LRU
+        rr.rerank("c", c2)                # evicts b, not a
+        assert set(rr.store.keys()) == {"a", "c"}
+
+    def test_in_flight_session_never_evicted(self):
+        """A budget too small for even one session still serves the
+        request: eviction never removes the session being served."""
+        rr = OnlineReranker(k=4, dim=8, kprime=16, memory_budget_bytes=1)
+        res = rr.rerank("u", _chunks(40, 8, 1, seed=13)[0])
+        assert res.slate.shape == (4, 8)
+        assert rr.stats()["sessions_active"] == 1
+
+    def test_end_session_frees_budget(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("u", _chunks(40, 8, 1, seed=14)[0])
+        assert rr.stats()["nbytes"] > 0
+        rr.end_session("u")
+        assert rr.stats()["sessions_active"] == 0
+        assert rr.stats()["nbytes"] == 0
+
+    def test_evicted_session_reopens_cold(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("probe", _chunks(40, 8, 1, seed=12)[0])
+        per = rr.stats()["nbytes"]
+        rr = OnlineReranker(k=4, dim=8, kprime=16, memory_budget_bytes=per)
+        c = _chunks(40, 8, 1, seed=15)[0]
+        rr.rerank("a", c)
+        rr.rerank("b", _chunks(40, 8, 1, seed=16)[0])   # evicts a
+        res = rr.rerank("a", c)                          # reopens, solves
+        assert res.slate.shape == (4, 8) and not res.reused
+
+    def test_session_nbytes_model(self):
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("u", _chunks(40, 8, 1, seed=17)[0])
+        sess = rr.store.get("u")
+        assert sess.nbytes == session_nbytes(sess.coreset)
+        assert rr.store.nbytes == sess.nbytes
+
+
+# -- kill-and-resume -----------------------------------------------------------
+
+class TestKillAndResume:
+    def test_checkpoint_round_trip_is_bit_identical(self):
+        chunks = _chunks(64, 8, 4, seed=18)
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            rr = OnlineReranker(k=4, dim=8, kprime=16)
+            rr.rerank("u", chunks[0])
+            rr.rerank("u", chunks[1])
+            rr.save_session("u", mgr, step=2)
+
+            rr2 = OnlineReranker(k=4, dim=8, kprime=16)   # replacement pod
+            assert rr2.restore_session("u", mgr)
+            a = rr2.rerank("u", chunks[2])
+            b = rr.rerank("u", chunks[2])                 # uninterrupted
+            assert np.array_equal(a.slate, b.slate)
+            assert a.cert.radius == b.cert.radius
+            assert a.cert.scale == b.cert.scale
+
+    def test_restore_missing_returns_false(self):
+        with tempfile.TemporaryDirectory() as d:
+            rr = OnlineReranker(k=4, dim=8, kprime=16)
+            assert not rr.restore_session("u", CheckpointManager(d))
+
+    def test_save_unknown_session_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            rr = OnlineReranker(k=4, dim=8, kprime=16)
+            with pytest.raises(KeyError):
+                rr.save_session("ghost", CheckpointManager(d), step=0)
+
+
+# -- counters ------------------------------------------------------------------
+
+class TestServingCounters:
+    def test_counters_fire_under_trace(self):
+        from repro.obs.trace import RunTrace, activate
+
+        tr = RunTrace(enabled=True)
+        with activate(tr):
+            rr = OnlineReranker(k=4, dim=8, kprime=16)
+            base = _chunks(200, 8, 1, seed=19)[0]
+            rr.rerank("u", base)
+            rr.rerank("u", base[:50] + 1e-4)        # absorbed -> reuse
+            rr.rerank_many({"u": base[:50] + 2e-4,  # reuse again
+                            "v": _chunks(60, 8, 1, seed=21)[0]})
+        assert tr.counters["sessions_active"] == 2
+        assert tr.counters["coreset_reuses"] == 2
+        assert tr.counters["rerank_batched"] >= 2   # u's first + v's solve
+
+    def test_counters_silent_without_trace(self):
+        from repro.obs.trace import RunTrace, activate
+
+        rr = OnlineReranker(k=4, dim=8, kprime=16)
+        rr.rerank("u", _chunks(64, 8, 1, seed=22)[0])
+        tr = RunTrace(enabled=True)
+        with activate(tr):
+            pass
+        assert tr.counters["sessions_active"] == 0
+
+
+# -- engine integration --------------------------------------------------------
+
+class TestServingEngineIntegration:
+    def test_rerank_group_assigns_slates(self):
+        # rerank_group touches only the reranker, so no model is needed
+        eng = ServingEngine.__new__(ServingEngine)
+        eng.reranker = OnlineReranker(k=4, dim=8, kprime=16)
+        reqs = [Request(prompt=np.zeros(4, np.int32), session=f"u{i}",
+                        candidates=_chunks(50, 8, 1, seed=40 + i)[0])
+                for i in range(3)]
+        reqs.append(Request(prompt=np.zeros(4, np.int32)))  # no candidates
+        out = ServingEngine.rerank_group(eng, reqs)
+        for r in out[:3]:
+            assert r.slate.shape == (4, 8)
+        assert out[3].slate is None
+
+    def test_rerank_group_without_reranker_raises(self):
+        eng = ServingEngine.__new__(ServingEngine)
+        eng.reranker = None
+        with pytest.raises(ValueError, match="reranker"):
+            ServingEngine.rerank_group(eng, [Request(
+                prompt=np.zeros(4, np.int32),
+                candidates=np.zeros((10, 8), np.float32))])
