@@ -1,0 +1,141 @@
+"""Dynamic-index churn benchmark: incremental maintenance vs rebuild.
+
+For each churn fraction the same seeded schedule runs twice over ``R``
+rounds (each round deletes ``churn * n`` random live points, inserts as
+many fresh ones, and answers one ``k``-query):
+
+* ``rebuild``     — the reference leg: every round solves from scratch on
+  the current survivor set through the batch facade (what you'd do
+  without an index);
+* ``incremental`` — a single ``DynamicIndex`` absorbs the round's ops and
+  answers off its leveled cover.
+
+Emitted as ``BENCH_dynamic.json`` and gated by ``benchmarks/compare.py``:
+at ``churn <= 0.10`` the incremental leg must stay *faster* than the
+rebuild reference of its own run (normalized time < 1.0) and certify
+within 1.10x of its greedy radius (``radius_ratio_vs_rebuild``) — the
+acceptance claim of the dynamic subsystem, machine-portable by
+construction.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import repro
+from repro.dynamic import DynamicIndex
+
+CHURN_FRACS = (0.02, 0.05, 0.10, 0.25)
+
+
+def _schedule(n0: int, d: int, frac: float, rounds: int, seed: int = 17):
+    """The deterministic churn script: per round, (delete_ids, new_points)
+    against a replayed global id space (both legs see identical state)."""
+    rng = np.random.default_rng(seed)
+    boot = rng.normal(size=(n0, d)).astype(np.float32) * 10.0
+    c = max(1, int(frac * n0))
+    alive = list(range(n0))
+    next_id = n0
+    script = []
+    for _ in range(rounds):
+        kill_pos = rng.choice(len(alive), size=c, replace=False)
+        kill = sorted(alive[p] for p in kill_pos)
+        alive = [i for i in alive if i not in set(kill)]
+        fresh = rng.normal(size=(c, d)).astype(np.float32) * 10.0
+        alive.extend(range(next_id, next_id + c))
+        next_id += c
+        script.append((np.asarray(kill, np.int64), fresh))
+    return boot, script
+
+
+def run(quick: bool = True) -> List[Dict]:
+    n0 = 2 ** 13 if quick else 2 ** 16
+    d, k, kprime = 8, 8, 64
+    rounds = 6 if quick else 10
+
+    # warm the jit caches at the exact round shape (survivor count stays n0
+    # — each round deletes and inserts the same number) so neither leg pays
+    # compile time inside the timers
+    warm = np.random.default_rng(0).normal(size=(n0, d)).astype(np.float32)
+    repro.diversify(warm, k=k, execution=repro.ExecutionSpec(
+        mode="batch", kprime=kprime, b=1))
+    wdyn = DynamicIndex(dim=d, budget=kprime)
+    wdyn.insert(warm[:256])
+    wdyn.query(k)
+
+    rows: List[Dict] = []
+    for frac in CHURN_FRACS:
+        boot, script = _schedule(n0, d, frac, rounds)
+
+        # -- reference: from-scratch batch solve per churn round ----------
+        store, alive = boot.copy(), np.ones(n0, bool)
+        survivor_sets = []
+        t0 = time.perf_counter()
+        for kill, fresh in script:
+            alive[kill] = False
+            store = np.concatenate([store, fresh])
+            alive = np.concatenate([alive, np.ones(len(fresh), bool)])
+            survivor_sets.append(store[alive])
+            repro.diversify(survivor_sets[-1], k=k,
+                            execution=repro.ExecutionSpec(
+                                mode="batch", kprime=kprime, b=1))
+        t_rebuild = time.perf_counter() - t0
+
+        # -- incremental: one DynamicIndex across every round (boot build
+        # is setup, like the rebuild leg's pre-existing array) ------------
+        dyn = DynamicIndex(dim=d, budget=kprime)
+        dyn.insert(boot)
+        inc_scales = []
+        t0 = time.perf_counter()
+        for kill, fresh in script:
+            dyn.delete(kill)
+            dyn.insert(fresh)
+            inc_scales.append(float(dyn.query(k).cert.scale))
+        t_inc = time.perf_counter() - t0
+
+        # quality denominator (untimed): the exact greedy radius at k on
+        # each round's survivor set — same formulation as the acceptance
+        # test in tests/test_dynamic.py
+        from repro.core.gmm import gmm_schedule
+        exact = [float(gmm_schedule(s, k, ((1, k),)).radius)
+                 for s in survivor_sets]
+        ratio = max(i / max(r, 1e-9) for i, r in zip(inc_scales, exact))
+        shape = f"churn-{frac:g}"
+        rows.append({"shape": shape, "path": "rebuild", "churn": frac,
+                     "n": n0, "rounds": rounds, "k": k, "k'": kprime,
+                     "time_s": round(t_rebuild, 4),
+                     "radius_ratio_vs_rebuild": 1.0})
+        rows.append({"shape": shape, "path": "incremental", "churn": frac,
+                     "n": n0, "rounds": rounds, "k": k, "k'": kprime,
+                     "time_s": round(t_inc, 4),
+                     "radius_ratio_vs_rebuild": round(ratio, 4),
+                     "rebuilds": dyn.rebuilds})
+        print(f"[dynamic] churn={frac:g}: rebuild {t_rebuild:.3f}s, "
+              f"incremental {t_inc:.3f}s "
+              f"(x{t_rebuild / max(t_inc, 1e-9):.2f}), "
+              f"radius ratio {ratio:.3f}, rebuilds={dyn.rebuilds}")
+    return rows
+
+
+def emit_json(rows: List[Dict], path: str = "BENCH_dynamic.json") -> None:
+    import json
+    import platform
+
+    import jax
+
+    doc = {
+        "benchmark": "dynamic",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"[dynamic] wrote {path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    emit_json(run(quick=True))

@@ -65,6 +65,13 @@ SPECS = {
         "quality": None,
         "row_gates": "serving",
     },
+    "BENCH_dynamic.json": {
+        "key": ("shape", "path"),
+        "is_ref": lambda r: r["path"] == "rebuild",
+        "scope": "shape",
+        "quality": "radius_ratio_vs_rebuild",
+        "row_gates": "dynamic",
+    },
 }
 
 
@@ -160,7 +167,38 @@ def _serving_row_gates(key: str, fresh_row: dict, base_row: Optional[dict],
     return msgs
 
 
-ROW_GATES = {"sprint": _sprint_row_gates, "serving": _serving_row_gates}
+#: dynamic acceptance (ISSUE 10): at churn <= 10% the incremental index must
+#: stay FASTER than the from-scratch rebuild reference of its own run
+#: (normalized time < 1.0 — the machine-portable speedup claim) and certify
+#: within 1.10x of the exact greedy radius on each round's survivors.  High
+#: churn rows (> 10%) are report-only: periodic full rebuilds are the
+#: designed behavior there.
+DYNAMIC_NORM_LIMIT = 1.0
+DYNAMIC_RADIUS_LIMIT = 1.10
+
+
+def _dynamic_row_gates(key: str, fresh_row: dict, base_row: Optional[dict],
+                       fresh_norm: Optional[float]) -> List[str]:
+    if fresh_row.get("path") != "incremental" \
+            or fresh_row.get("churn", 1.0) > 0.10:
+        return []
+    msgs = []
+    if fresh_norm is not None and fresh_norm >= DYNAMIC_NORM_LIMIT:
+        msgs.append(
+            f"{key}: incremental normalized time {fresh_norm:.3f} >= "
+            f"{DYNAMIC_NORM_LIMIT} — no longer faster than rebuilding from "
+            f"scratch at low churn (the speedup IS the acceptance claim)")
+    rr = fresh_row.get("radius_ratio_vs_rebuild")
+    if rr is not None and rr > DYNAMIC_RADIUS_LIMIT:
+        msgs.append(
+            f"{key}: certified radius ratio {rr:.3f} > "
+            f"{DYNAMIC_RADIUS_LIMIT}x the exact greedy radius on the "
+            f"survivors (quality side of the dynamic acceptance claim)")
+    return msgs
+
+
+ROW_GATES = {"sprint": _sprint_row_gates, "serving": _serving_row_gates,
+             "dynamic": _dynamic_row_gates}
 
 
 def compare_doc(base: dict, fresh: dict, spec: dict, threshold: float,

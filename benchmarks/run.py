@@ -153,6 +153,16 @@ def main(argv=None) -> None:
                        "p99_ms", "qps"], "Serving rerank"))
 
     print("\n" + "=" * 72)
+    print("Dynamic index — incremental churn vs rebuild-from-scratch "
+          "(BENCH_dynamic.json)")
+    print("=" * 72)
+    from benchmarks import bench_dynamic
+    rows = bench_dynamic.run(quick=quick)
+    bench_dynamic.emit_json(rows, path="BENCH_dynamic.json")
+    print(table(rows, ["shape", "path", "n", "rounds", "time_s",
+                       "radius_ratio_vs_rebuild"], "Dynamic index"))
+
+    print("\n" + "=" * 72)
     print("Observability — traced representative runs (BENCH_trace.json)")
     print("=" * 72)
     emit_trace_artifact(quick=quick)

@@ -10,8 +10,11 @@ _API = ("diversify", "plan", "ProblemSpec", "ExecutionSpec", "Plan",
 # resilience surface (repro.distributed) re-exported for the common
 # ``ExecutionSpec(resilience=repro.ResiliencePolicy(...))`` spelling
 _RESILIENCE = ("ResiliencePolicy", "FailureInjector")
+# dynamic-mode surface (repro.dynamic) re-exported for the common
+# ``repro.diversify([repro.Insert(...), repro.Delete(...)], ...)`` spelling
+_DYNAMIC = ("DynamicIndex", "RebuildPolicy", "Insert", "Delete")
 
-__all__ = list(_API) + list(_RESILIENCE)
+__all__ = list(_API) + list(_RESILIENCE) + list(_DYNAMIC)
 
 
 def __getattr__(name):
@@ -22,4 +25,7 @@ def __getattr__(name):
     if name in _RESILIENCE:
         from repro import distributed
         return getattr(distributed, name)
+    if name in _DYNAMIC:
+        from repro import dynamic
+        return getattr(dynamic, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

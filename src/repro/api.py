@@ -22,11 +22,13 @@ variant of each.  This module is the declarative surface over all of them:
 The legacy entry points (``diversity_maximize``, ``simulate_mr``,
 ``fair_diversity_maximize``, ``select_diverse``, ``diverse_rerank``, ...)
 are thin bit-identical wrappers that emit one ``DeprecationWarning`` and
-route here; the facade itself never warns.  The spec deliberately leaves
-room for a future ``mode="dynamic"`` (fully dynamic / incremental updates
-in doubling metrics, Pellizzoni et al.): a ``DiversityResult`` plus the
-engine state it certifies is exactly the checkpoint such a path would
-resume from.
+route here; the facade itself never warns.  ``mode="dynamic"`` (fully
+dynamic insert/delete maintenance in doubling metrics, Pellizzoni et al.,
+``repro.dynamic``) auto-selects for update-stream inputs — a list of
+``repro.Insert``/``repro.Delete`` ops — and makes good on the checkpoint
+story: the ``DynamicIndex`` state a ``ResiliencePolicy(checkpoint_dir=...)``
+run saves through ``CheckpointManager`` resumes bit-identically mid-churn
+(deletions included).
 
 >>> import numpy as np
 >>> import repro
@@ -56,7 +58,7 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
-_MODES = ("auto", "batch", "streaming", "mapreduce", "serving")
+_MODES = ("auto", "batch", "streaming", "mapreduce", "serving", "dynamic")
 
 
 def _warn_legacy(name: str) -> None:
@@ -116,12 +118,16 @@ class ExecutionSpec:
     margin; ``True`` insists and raises if it cannot be; ``False`` keeps
     every block host-paced — see ``core.adaptive.resolve_sprint``).
     ``smm_mode`` overrides the streaming state layout (``plain``/``ext``/
-    ``gen``; None derives it from the measure).  ``resilience`` is an
-    optional ``repro.distributed.ResiliencePolicy`` governing how streaming
-    and mapreduce runs survive faults (per-reducer retry with backoff,
-    certified graceful degradation, streaming checkpoint/resume through
-    ``CheckpointManager``); the resolved policy shows in ``plan.explain()``
-    and the run's report lands in ``telemetry.extras["resilience"]``.
+    ``gen``; None derives it from the measure).  ``rebuild`` tunes dynamic
+    mode's maintenance (``"auto"`` = the ``repro.dynamic.RebuildPolicy``
+    defaults; pass a ``RebuildPolicy`` to pin level depth and the
+    churn thresholds that trigger a from-scratch rebuild).  ``resilience``
+    is an optional ``repro.distributed.ResiliencePolicy`` governing how
+    streaming, mapreduce and dynamic runs survive faults (per-unit retry
+    with backoff, certified graceful degradation, checkpoint/resume
+    through ``CheckpointManager``); the resolved policy shows in
+    ``plan.explain()`` and the run's report lands in
+    ``telemetry.extras["resilience"]``.
     """
     mode: str = "auto"
     mesh: Any = None
@@ -141,6 +147,7 @@ class ExecutionSpec:
     seed: int = 0
     swap_rounds: int = 10
     smm_mode: Optional[str] = None
+    rebuild: Any = "auto"
     tau: Optional[float] = None
     cliff: Optional[float] = None
     sprint: Any = "auto"
@@ -242,6 +249,7 @@ class Plan:
     n: Optional[int]
     d: Optional[int]
     requests: Optional[int] = None   # serving mode: fused requests per dispatch
+    updates: Optional[int] = None    # dynamic mode: ops in the update stream
 
     @property
     def trace(self):
@@ -281,6 +289,41 @@ class Plan:
                 f" ({self.problem.measure}), stateless — session reuse via"
                 " serving.OnlineReranker",
             ]
+            if actual:
+                lines.extend(self._explain_actual())
+            return "\n".join(lines)
+
+        if self.mode == "dynamic":
+            pol = k["rebuild"]
+            shape = (f"({self.n}, {self.d})" if self.updates == 1
+                     and self.n is not None else
+                     f"update-stream ({self.updates} ops, "
+                     f"d={self.d if self.d is not None else '?'})")
+            lines = [
+                "DiversityPlan",
+                f"  mode: dynamic ({self.reason})",
+                f"  problem: k={self.problem.k},"
+                f" measure={self.problem.measure},"
+                f" metric={self.problem.metric},"
+                f" input={shape}, constrained=no",
+                f"  index: leveled cover, {pol.levels} levels (radius"
+                f" halving), query = finest level <= {k['kprime']} centers",
+                f"  rebuild: {pol.describe()} (dirty levels re-certify"
+                " incrementally between rebuilds)",
+                f"  engine: b=1 (exact m=1 schedule on the level core-set),"
+                f" chunk={k['chunk']}, use_pallas={k['use_pallas']}",
+                f"  layout: {self.layout}",
+                f"  predicted coreset: <={self.coreset_rows} rows,"
+                f" <={_fmt_bytes(self.coreset_bytes)}"
+                if self.coreset_bytes is not None else
+                f"  predicted coreset: <={self.coreset_rows} rows",
+                f"  solver: sequential"
+                f" alpha={SEQ_ALPHA[self.problem.measure]}"
+                f" ({self.problem.measure})",
+            ]
+            if self.execution.resilience is not None:
+                lines.append(
+                    f"  resilience: {self.execution.resilience.describe()}")
             if actual:
                 lines.extend(self._explain_actual())
             return "\n".join(lines)
@@ -409,6 +452,7 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
     arr = _is_array(problem.points)
     ndim = int(problem.points.ndim) if arr else None
     requests = None
+    updates = None
     if arr and ndim == 3:
         # (requests, candidates, d) tensor — the serving-mode input shape
         requests = int(problem.points.shape[0])
@@ -418,6 +462,14 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
         n = int(problem.points.shape[0]) if arr else None
         d = (int(problem.points.shape[1]) if arr and ndim is not None
              and ndim > 1 else problem.dim)
+    if not arr:
+        # a materialized list of Insert/Delete ops is the dynamic-mode
+        # input; classification and d-recovery are pure (ops are concrete)
+        from repro.dynamic.ops import is_update_stream, stream_dim
+        if is_update_stream(problem.points):
+            updates = len(problem.points)
+            if d is None:
+                d = stream_dim(problem.points)
     itemsize = int(getattr(problem.points, "dtype", np.dtype(np.float32)
                            ).itemsize) if arr else 4
 
@@ -435,6 +487,8 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
             else:
                 raise ValueError("mode='mapreduce' needs mesh= or "
                                  "num_reducers > 1")
+    elif updates is not None:
+        mode, reason = "dynamic", "auto: update-stream input (insert/delete ops)"
     elif not arr:
         mode, reason = "streaming", "auto: chunk-iterator input"
     elif ndim == 3:
@@ -458,9 +512,19 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
                 f"memory budget {ex.memory_budget_bytes} B")
         else:
             mode, reason = "batch", "auto: in-memory array"
-    if not arr and mode != "streaming":
+    if updates is not None and mode != "dynamic":
+        raise ValueError(f"an update stream (Insert/Delete ops) only "
+                         f"supports mode='dynamic', got {mode!r}")
+    if not arr and updates is None and mode != "streaming":
         raise ValueError(f"a chunk-iterator source only supports "
                          f"mode='streaming', got {mode!r}")
+    if mode == "dynamic" and updates is None:
+        if not (arr and ndim == 2):
+            raise ValueError(
+                "mode='dynamic' needs an update stream (a list of "
+                "repro.Insert/repro.Delete ops) or an (n, d) array "
+                "(sugar for a one-insert stream)")
+        updates = 1                   # the single-insert sugar
     if mode == "serving" and requests is None:
         raise ValueError("mode='serving' needs a 3-D (requests, candidates, "
                          "d) array of per-request candidate embeddings")
@@ -493,6 +557,33 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
             raise ValueError("schedule= has no serving path")
         if ex.generalized or ex.smm_mode is not None:
             raise ValueError("generalized=/smm_mode= have no serving path")
+    rebuild_pol = None
+    if mode == "dynamic":
+        from repro.dynamic import resolve_rebuild
+        if constrained:
+            raise ValueError(
+                "mode='dynamic' is unconstrained — solve the surviving "
+                "points through a constrained batch/streaming run instead")
+        if not get_metric(problem.metric).is_metric:
+            raise ValueError(
+                f"metric {problem.metric!r} violates the triangle "
+                "inequality; the dynamic cover structure needs a true "
+                "metric")
+        if ex.b not in ("auto", 1):
+            raise ValueError("mode='dynamic' runs the exact b=1 engine on "
+                             "the level core-set; b= has no dynamic path")
+        if ex.schedule is not None:
+            raise ValueError("schedule= has no dynamic path")
+        if ex.generalized or ex.smm_mode is not None:
+            raise ValueError("generalized=/smm_mode= have no dynamic path")
+        if mesh is not None or (num_red or 0) > 1:
+            raise ValueError("mesh=/num_reducers= have no dynamic path (a "
+                             "dynamic index is one long-lived host "
+                             "structure)")
+        rebuild_pol = resolve_rebuild(ex.rebuild)
+    elif ex.rebuild not in ("auto", None):
+        raise ValueError(f"rebuild= tunes the dynamic index and has no "
+                         f"{mode} path")
     if mode == "mapreduce" and mesh is None:
         num_red = num_red or 1
     if constrained and (ex.generalized or ex.three_round):
@@ -547,6 +638,10 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
         kprime = max(2 * k, 32)
     if kprime == "auto" and mode == "streaming":
         kprime = max(2 * k, 32)       # SMM state is fixed-size
+    if kprime == "auto" and mode == "dynamic":
+        # the level-induced core-set budget: deletions erode the cover, so
+        # the dynamic default leaves more slack than the streaming state cap
+        kprime = max(2 * k, 64)
     if (isinstance(kprime, (int, np.integer)) and n is not None
             and mode == "batch"):
         # batch drivers clamp k' to n; streaming/MR resolve per shard
@@ -562,6 +657,19 @@ def plan(problem: ProblemSpec, execution: Optional[ExecutionSpec] = None
     knobs = {"kprime": kprime, "b": b, "chunk": chunk, "eps": eps,
              "schedule": ex.schedule, "use_pallas": use_pallas,
              "tau": tau, "cliff": cliff, "sprint": ex.sprint}
+
+    if mode == "dynamic":
+        kp = int(kprime)
+        knobs["rebuild"] = rebuild_pol
+        return Plan(
+            problem=problem, execution=ex, mode=mode, reason=reason,
+            constrained=False, matroid=None, variant="plain", mesh=None,
+            num_reducers=None, knobs=knobs,
+            layout=(f"host-maintained leveled cover, {rebuild_pol.levels} "
+                    f"levels, freeze cap {max(4 * kp, 256)} centers/level"),
+            kprime_plan=f"kprime={kp} (dynamic core-set budget)",
+            coreset_rows=kp, coreset_bytes=None if d is None else kp * d * 4,
+            n=n, d=d, updates=updates)
 
     if mode == "serving":
         # stateless fused slates: no core-set, no reducers — the predicted
@@ -921,6 +1029,82 @@ def _run_serving(plan_: Plan, tr) -> DiversityResult:
         plan=plan_)
 
 
+def _run_dynamic(plan_: Plan, tr) -> DiversityResult:
+    """Fold the update stream into a ``DynamicIndex`` (one resilience unit
+    per op, ``point="update:j"``), then answer one certified query on the
+    level-induced core-set.  With ``ResiliencePolicy(checkpoint_dir=...)``
+    the index state checkpoints every ``checkpoint_every`` ops and a
+    killed run resumes bit-identically: restore skips the already-applied
+    prefix and replays the rest (maintenance is deterministic)."""
+    from repro.dynamic import DynamicIndex, as_update_ops
+
+    p, kb = plan_.problem, plan_.knobs
+    pol = plan_.execution.resilience
+    ops = as_update_ops(p.points)
+    dyn: Optional[DynamicIndex] = None
+    t = time.perf_counter()
+    report = mgr = None
+    ops_done = 0             # ops already applied (restored on resume)
+    if pol is not None:
+        from repro.distributed.fault_tolerance import (ResilienceReport,
+                                                       run_unit)
+        report = ResilienceReport(scope="update", policy=pol.describe())
+        if pol.checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            mgr = CheckpointManager(pol.checkpoint_dir, keep_k=2)
+            dyn, step = DynamicIndex.restore(mgr)
+            if dyn is not None:
+                ops_done = step
+                report.resumed_from = step
+    for j, op in enumerate(ops):
+        if j < ops_done:
+            continue
+        if dyn is None:
+            dyn = DynamicIndex(dim=plan_.d, metric=p.metric,
+                               policy=kb["rebuild"],
+                               budget=int(kb["kprime"]))
+        if pol is None:
+            dyn.apply(op)
+        else:
+            run_unit(lambda: dyn.apply(op), pol, point=f"update:{j}",
+                     unit=j, report=report)
+        ops_done = j + 1
+        if mgr is not None and ops_done % pol.checkpoint_every == 0:
+            dyn.save(mgr, ops_done)
+            report.checkpoints_written += 1
+    if dyn is None or dyn.n_alive == 0:
+        raise ValueError("empty update stream")
+    t = tr.phase("updates", t)
+    q = dyn.query(p.k, budget=int(kb["kprime"]), measure=p.measure,
+                  eps=kb["eps"], chunk=kb["chunk"],
+                  use_pallas=kb["use_pallas"])
+    cert = q.cert
+    if report is not None and report.degraded:
+        # dropped updates: the index reflects the applied ops only — stamp
+        # the certificate with the op-level coverage accounting ("shards"
+        # reads "updates" for a dynamic run)
+        surv = tuple(i for i in range(ops_done)
+                     if i not in set(report.failed))
+        cert = dataclasses.replace(cert, degraded=True,
+                                   surviving_shards=surv,
+                                   total_shards=ops_done)
+    cs = q.coreset._replace(cert=cert)
+    t = tr.phase("query", t, sync=cs.points)
+    value = _value_of(q.solution, p.measure, p.metric)
+    tr.phase("value", t)
+    if report is not None:
+        tr.annotate(resilience=report.to_dict())
+    return DiversityResult(
+        solution=np.asarray(q.solution), value=value,
+        _indices=np.asarray(q.ids), labels=None, cert=cert,
+        coreset=cs,
+        telemetry=tr.annotate(mode="dynamic", n_live=dyn.n_alive,
+                              updates=len(ops), rebuilds=dyn.rebuilds,
+                              query_level=q.level,
+                              coreset_size=q.coreset.size),
+        plan=plan_)
+
+
 def _run_mapreduce(plan_: Plan, tr) -> DiversityResult:
     p, kb, ex = plan_.problem, plan_.knobs, plan_.execution
     eps = 0.1 if kb["eps"] is None else kb["eps"]
@@ -1031,6 +1215,8 @@ def _execute(plan_: Plan) -> DiversityResult:
                else _run_streaming)
     elif plan_.mode == "serving":
         run = _run_serving    # plan() rejects constrained serving
+    elif plan_.mode == "dynamic":
+        run = _run_dynamic    # plan() rejects constrained dynamic
     else:
         run = (_run_mapreduce_constrained if plan_.constrained
                else _run_mapreduce)

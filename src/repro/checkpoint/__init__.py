@@ -1,3 +1,3 @@
-from .manager import CheckpointError, CheckpointManager
+from .manager import SCHEMA_VERSION, CheckpointError, CheckpointManager
 
-__all__ = ["CheckpointError", "CheckpointManager"]
+__all__ = ["SCHEMA_VERSION", "CheckpointError", "CheckpointManager"]

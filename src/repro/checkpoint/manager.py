@@ -37,6 +37,13 @@ class CheckpointError(RuntimeError):
     truncated write on a non-atomic filesystem, or the wrong directory)."""
 
 
+# Version of the on-disk checkpoint layout (meta.json + arrays.npz keying).
+# Bump on incompatible layout changes; ``read_meta`` refuses checkpoints
+# written by a different schema so a stale directory fails loudly instead
+# of restoring garbage.  Checkpoints predating the field are schema 1.
+SCHEMA_VERSION = 1
+
+
 def _fsync_dir(path: str) -> None:
     """Fsync a directory so the rename/creation it contains is durable (on
     platforms whose dirs can't be opened for fsync, degrade gracefully)."""
@@ -83,7 +90,8 @@ class CheckpointManager:
         # materialize on host BEFORE handing to the writer thread so device
         # buffers can be donated/overwritten by the next step immediately
         arrays = _flatten(tree)
-        meta = {"step": int(step), "extra": extra or {}}
+        meta = {"step": int(step), "schema_version": SCHEMA_VERSION,
+                "extra": extra or {}}
         if blocking:
             self._write(step, arrays, meta)
         else:
@@ -172,11 +180,19 @@ class CheckpointManager:
         path = os.path.join(self.dir, f"step_{step:09d}", "meta.json")
         try:
             with open(path) as f:
-                return json.load(f)
+                meta = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
             raise CheckpointError(
                 f"checkpoint step {step}: unreadable meta.json at "
                 f"{path!r}: {e}") from e
+        found = meta.get("schema_version", 1)
+        if found != SCHEMA_VERSION:
+            raise CheckpointError(
+                f"checkpoint step {step} at {path!r} was written with "
+                f"schema_version={found}; this build reads "
+                f"schema_version={SCHEMA_VERSION} — re-create the "
+                "checkpoint (or restore with a matching build)")
+        return meta
 
     def restore_latest(self, template, *, shardings=None):
         step = self.latest_step()

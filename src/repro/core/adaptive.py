@@ -131,6 +131,12 @@ class RadiusCertificate:
     total_shards: Optional[int] = None
     points_covered: Optional[int] = None
     points_total: Optional[int] = None
+    # Dynamic-index churn accounting (kind="dynamic", ``repro.dynamic``):
+    # how many updates the leveled cover has absorbed incrementally since
+    # its last from-scratch rebuild, and how many of them were deletions —
+    # the drift the rebuild scheduler bounds.  None outside dynamic mode.
+    updates_since_rebuild: Optional[int] = None
+    deletions_absorbed: Optional[int] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -1,0 +1,21 @@
+"""Fully dynamic diversity: a leveled-cover index with certified queries.
+
+``mode="dynamic"`` of the facade runs here (see ``docs/dynamic.md``):
+
+* ``ops``     — the update-stream vocabulary (``Insert``/``Delete``);
+* ``levels``  — incremental leveled-cover maintenance (insertion folds,
+  deletion repair, lazy dirty-level re-certification);
+* ``rebuild`` — the ``RebuildPolicy`` scheduler deciding when repair
+  gives way to a from-scratch rebuild;
+* ``index``   — ``DynamicIndex``: insert/delete/query entry points,
+  certificate minting and the bit-identical checkpoint round-trip.
+"""
+from .index import DynamicIndex, DynamicQueryResult
+from .levels import LevelStructure
+from .ops import (Delete, Insert, as_update_ops, is_update_stream,
+                  stream_dim)
+from .rebuild import RebuildPolicy, resolve_rebuild
+
+__all__ = ["DynamicIndex", "DynamicQueryResult", "LevelStructure",
+           "Insert", "Delete", "RebuildPolicy", "as_update_ops",
+           "is_update_stream", "stream_dim", "resolve_rebuild"]

@@ -1,0 +1,428 @@
+"""The fully dynamic diversity index (``mode="dynamic"``).
+
+``DynamicIndex`` keeps a churning point set queryable: ``insert(points)``
+and ``delete(ids)`` maintain the leveled cover structure of
+``dynamic.levels`` incrementally, ``query(k)`` solves on the finest
+affordable level's centers — the *level-induced core-set* — via the
+existing m=1 schedule engine (``core.gmm.gmm_schedule`` →
+``_schedule_select_impl``) and returns a certified result.  The
+``RadiusCertificate`` it mints carries the level's measured cover radius
+as the proxy bound, the engine's anticover scale at ``k``, and the
+churn accounting (``updates_since_rebuild`` / ``deletions_absorbed``)
+that says how far the structure has drifted from its last from-scratch
+build.
+
+Every piece of state is deterministic given the update sequence, which
+is what makes ``state_dict()``/``save()``/``restore()`` (mirroring
+``core.smm.StreamingCoreset``) a *bit-identical* resume point: an index
+killed mid-churn and restored from its last checkpoint replays the
+remaining ops to exactly the structure — and exactly the certificate —
+an uninterrupted run produces.
+
+>>> import numpy as np
+>>> from repro.dynamic import DynamicIndex
+>>> rng = np.random.default_rng(0)
+>>> idx = DynamicIndex(dim=4)
+>>> ids = idx.insert(rng.normal(size=(200, 4)).astype(np.float32))
+>>> idx.delete(ids[:50])
+>>> q = idx.query(4)
+>>> q.solution.shape
+(4, 4)
+>>> q.cert.kind
+'dynamic'
+>>> q.cert.deletions_absorbed
+50
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.obs.trace import count as _count
+
+from .levels import LevelStructure
+from .ops import Delete, Insert
+from .rebuild import RebuildPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicQueryResult:
+    """One certified answer off the live index.
+
+    ``solution`` is the ``(k, d)`` picks, ``ids`` their stable point ids
+    (the handles ``insert`` returned), ``coreset`` the level-induced
+    ``core.coreset.Coreset`` the engine solved on, ``cert`` its
+    ``RadiusCertificate`` (kind="dynamic") and ``level`` the query level
+    (None when the index fell back to solving on the live points).
+    """
+    solution: np.ndarray
+    ids: np.ndarray
+    coreset: Any
+    cert: Any
+    level: Optional[int]
+
+
+class DynamicIndex:
+    """A leveled cover over a live point set with certified queries.
+
+    ``budget`` is the query core-set target (the planner passes the
+    resolved ``kprime``); levels that outgrow ``4 x budget`` centers are
+    frozen until the next rebuild (see ``dynamic.levels``).  ``policy``
+    (a ``RebuildPolicy``) decides when incremental repair gives way to a
+    from-scratch rebuild.  All maintenance is host-side and
+    deterministic; only ``query`` dispatches the jitted engine.
+    """
+
+    def __init__(self, dim: Optional[int] = None, *,
+                 metric: str = "euclidean",
+                 policy: Optional[RebuildPolicy] = None,
+                 budget: int = 256) -> None:
+        from repro.core.metrics import get_metric
+
+        m = get_metric(metric)
+        if not m.is_metric:
+            raise ValueError(
+                f"metric {m.name!r} violates the triangle inequality; the "
+                "dynamic cover structure needs a true metric")
+        self.metric = m.name
+        self.dim = None if dim is None else int(dim)
+        self.policy = policy or RebuildPolicy()
+        self.budget = int(budget)
+        self._pts = np.zeros((0, self.dim or 0), np.float32)
+        self._alive = np.zeros((0,), bool)
+        self._levels: Optional[LevelStructure] = None
+        self.inserts_total = 0
+        self.deletes_total = 0
+        self.updates_since_rebuild = 0
+        self.deletions_absorbed = 0
+        self.rebuilds = 0
+        self._phase_log: List[Tuple[str, float]] = []
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        """Rows ever inserted (= the next id)."""
+        return int(self._pts.shape[0])
+
+    @property
+    def n_alive(self) -> int:
+        return int(np.count_nonzero(self._alive))
+
+    @property
+    def booted(self) -> bool:
+        return self._levels is not None
+
+    @property
+    def phase_log(self) -> Tuple[Tuple[str, float], ...]:
+        """(event, stamp) re-certification log: boot/rebuild events with the
+        live count at that point (read-only copy)."""
+        return tuple(self._phase_log)
+
+    def _pair(self, a_ids: np.ndarray, b_ids: np.ndarray) -> np.ndarray:
+        """Metric distances between two id sets of the point store.
+
+        Host numpy throughout: maintenance calls this with ever-changing
+        shapes, and dispatching a jitted pairwise kernel would recompile
+        per shape (profiled at >50% of a churn round).  numpy is
+        deterministic, so checkpoint replay stays bit-identical."""
+        A, B = self._pts[a_ids], self._pts[b_ids]
+        if self.metric == "euclidean":
+            d2 = ((A * A).sum(1)[:, None] + (B * B).sum(1)[None, :]
+                  - 2.0 * (A @ B.T))
+            return np.sqrt(np.maximum(d2, 0.0, dtype=np.float32))
+        if self.metric == "manhattan":
+            out = np.empty((A.shape[0], B.shape[0]), np.float32)
+            for i in range(0, A.shape[0], 512):     # bound the broadcast
+                out[i:i + 512] = np.abs(
+                    A[i:i + 512, None, :] - B[None, :, :]).sum(-1)
+            return out
+        import jax.numpy as jnp
+        from repro.core.metrics import get_metric
+
+        return np.asarray(get_metric(self.metric).pairwise(
+            jnp.asarray(A), jnp.asarray(B)))
+
+    # -- updates -------------------------------------------------------------
+    def insert(self, points) -> np.ndarray:
+        """Insert a ``(b, d)`` batch; returns the assigned stable ids."""
+        pts = np.atleast_2d(np.asarray(points, np.float32))
+        if self.dim is None:
+            self.dim = int(pts.shape[1])
+            self._pts = np.zeros((0, self.dim), np.float32)
+        if pts.shape[1] != self.dim:
+            raise ValueError(f"insert batch has dim {pts.shape[1]}, "
+                             f"index holds dim {self.dim}")
+        start = self.n_rows
+        self._pts = np.concatenate([self._pts, pts], axis=0)
+        self._alive = np.concatenate(
+            [self._alive, np.ones((pts.shape[0],), bool)])
+        ids = np.arange(start, start + pts.shape[0], dtype=np.int64)
+        if self._levels is not None:
+            self._levels.ensure_rows(self.n_rows)
+            self._levels.insert(ids, self._alive)
+        elif self.n_alive >= 2:
+            self._boot()
+        self.inserts_total += pts.shape[0]
+        self.updates_since_rebuild += pts.shape[0]
+        _count("inserts_absorbed", pts.shape[0])
+        self._maybe_rebuild()
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone previously inserted points by id; repairs every active
+        level (deleted centers hand their orphans to survivors or promote
+        them) and re-certifies only the dirtied levels lazily."""
+        ids = np.unique(np.asarray(ids, np.int64))
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.n_rows:
+            raise ValueError(f"delete: unknown id {int(ids.min())}..."
+                             f"{int(ids.max())} (index holds "
+                             f"{self.n_rows} rows)")
+        if not self._alive[ids].all():
+            gone = ids[~self._alive[ids]]
+            raise ValueError(f"delete: id {int(gone[0])} is already deleted")
+        self._alive[ids] = False
+        if self._levels is not None:
+            self._levels.delete(ids, self._alive)
+        self.deletes_total += ids.size
+        self.deletions_absorbed += ids.size
+        self.updates_since_rebuild += ids.size
+        _count("deletes_absorbed", ids.size)
+        self._maybe_rebuild()
+
+    def apply(self, op: Union[Insert, Delete, tuple]) -> None:
+        """Apply one update-stream op (the facade's per-unit entry point)."""
+        from .ops import _as_op
+
+        norm = _as_op(op)
+        if norm is None:
+            raise ValueError(f"not an update op: {type(op).__name__}")
+        if isinstance(norm, Insert):
+            self.insert(norm.points)
+        else:
+            self.delete(norm.ids)
+
+    # -- rebuild scheduling --------------------------------------------------
+    def _boot(self) -> None:
+        """First build: fix the level radii off the boot set's diameter
+        (level 0 spans it; each level halves) and greedy-build the levels.
+        Later inserts beyond the boot diameter simply become extra level-0
+        centers — the cover invariant never needs a scale extension."""
+        ids = np.flatnonzero(self._alive)
+        # 2x the eccentricity of the first point upper-bounds the diameter
+        # (triangle inequality) in one O(n) pass — no n^2 boot matrix
+        d_top = 2.0 * float(self._pair(ids[:1], ids).max())
+        if d_top <= 0.0:
+            d_top = 1.0                      # all-identical boot set
+        radii = d_top / np.power(2.0, np.arange(self.policy.levels))
+        self._levels = LevelStructure(radii, self._pair,
+                                      max_centers=max(4 * self.budget, 256))
+        self._levels.ensure_rows(self.n_rows)
+        self._levels.rebuild(self._alive)
+        self.rebuilds += 1
+        self._phase_log.append(("boot", float(self.n_alive)))
+
+    def _maybe_rebuild(self) -> None:
+        if self._levels is None:
+            return
+        if not self.policy.should_rebuild(
+                updates_since_rebuild=self.updates_since_rebuild,
+                deletions_absorbed=self.deletions_absorbed,
+                n_alive=self.n_alive):
+            return
+        self._levels.ensure_rows(self.n_rows)
+        self._levels.rebuild(self._alive)
+        self.rebuilds += 1
+        self.updates_since_rebuild = 0
+        self.deletions_absorbed = 0
+        self._phase_log.append(("rebuild", float(self.n_alive)))
+
+    # -- query ---------------------------------------------------------------
+    def query(self, k: int, *, budget: Optional[int] = None,
+              measure: str = "remote-edge", eps: Optional[float] = None,
+              chunk: int = 0, use_pallas: bool = False
+              ) -> DynamicQueryResult:
+        """Solve diversity maximization over the live points.
+
+        Selects the finest level whose live center count fits ``budget``
+        (default: the index budget, clamped to it), runs the m=1 schedule
+        engine over those centers and certifies: ``radius`` is the level's
+        measured cover radius (every live point is within it of the
+        core-set), ``scale`` the engine's anticover radius at ``k``.
+        """
+        import jax.numpy as jnp
+        from repro.core.adaptive import RadiusCertificate, _ratio
+        from repro.core.coreset import Coreset
+        from repro.core.gmm import gmm_schedule
+        from repro.core.sequential import solve
+
+        n_alive = self.n_alive
+        if n_alive < k:
+            raise ValueError(f"index holds {n_alive} live points < k={k}")
+        budget = self.budget if budget is None else min(int(budget),
+                                                        self.budget)
+        lev = (None if self._levels is None
+               else self._levels.select_level(budget, k, self._alive))
+        counts: Tuple[int, ...] = ()
+        radii: Tuple[float, ...] = ()
+        if lev is None:
+            # un-booted or no affordable level: the live points themselves
+            ids = np.flatnonzero(self._alive)
+            cover = 0.0
+        else:
+            ids = self._levels.centers_of(lev, self._alive)
+            # the coarse->query trail re-certifies exactly the dirty levels
+            counts = tuple(self._levels.n_centers(j, self._alive)
+                           for j in range(lev + 1))
+            radii = tuple(self._levels.cover_radius(j, self._alive)
+                          for j in range(lev + 1))
+            cover = radii[-1]
+        core = np.asarray(self._pts[ids], np.float32)
+        # pad the core-set to one fixed bucket (masked rows are never
+        # selectable) so churning core-set sizes share one compiled engine
+        # shape instead of recompiling per query; the freeze cap bounds any
+        # level's center count, so only the un-booted live-points path can
+        # spill past it into power-of-two buckets
+        n_core = int(ids.size)
+        cap = (self._levels.max_centers if self._levels is not None
+               else max(4 * self.budget, 256))
+        n_pad = max(cap, 1 << max(0, n_core - 1).bit_length())
+        core_p = np.zeros((n_pad, core.shape[1]), np.float32)
+        core_p[:n_core] = core
+        res = gmm_schedule(core_p, k, ((1, k),), metric=self.metric,
+                           mask=np.arange(n_pad) < n_core,
+                           chunk=chunk, use_pallas=use_pallas)
+        scale = float(res.radius)
+        ratio = _ratio(cover, scale)
+        cert = RadiusCertificate(
+            kprime=int(ids.size), radius=float(cover), scale=scale,
+            ratio=ratio, eps_target=eps,
+            meets_target=None if eps is None else bool(ratio <= eps),
+            counts=counts, radii=radii, b_schedule=((1, k),),
+            kind="dynamic",
+            updates_since_rebuild=self.updates_since_rebuild,
+            deletions_absorbed=self.deletions_absorbed)
+        # host-built masks: jnp.ones at a fresh shape would compile a fill
+        # kernel per distinct core-set size under churn
+        cs = Coreset(points=jnp.asarray(core),
+                     valid=jnp.asarray(np.ones(ids.size, bool)),
+                     weights=jnp.asarray(np.ones(ids.size, np.int32)),
+                     radius=jnp.asarray(np.float32(cover)), cert=cert)
+        if measure == "remote-clique":
+            # injective-matching measure: the engine prefix is not the
+            # solver — run the α-approx sequential matching on the core-set
+            pick = solve(measure, core, k, metric=self.metric)
+        else:
+            pick = np.asarray(res.idx)[:k]
+        return DynamicQueryResult(solution=core[pick], ids=ids[pick],
+                                  coreset=cs, cert=cert, level=lev)
+
+    # -- checkpoint / resume -------------------------------------------------
+    # Maintenance is deterministic in the update sequence, so serializing
+    # the point store + level arrays + churn counters through
+    # CheckpointManager gives BIT-IDENTICAL resume: an index killed at
+    # update j and restored replays j.. to the same structure, picks and
+    # certificate as an uninterrupted run (tests/test_dynamic.py).
+
+    def state_dict(self):
+        """``(arrays, meta)`` snapshot of the entire index.  ``arrays`` is a
+        flat dict of numpy arrays; ``meta`` the host scalars + phase log
+        (JSON-able, stored in the checkpoint's meta.json)."""
+        booted = self._levels is not None
+        L = self.policy.levels
+        lv = self._levels
+        arrays = {
+            "points": self._pts,
+            "alive": self._alive,
+            "radii": (lv.radii if booted else np.zeros((L,), np.float32)),
+            "center": (lv.center if booted
+                       else np.zeros((L, self.n_rows), bool)),
+            "assign": (lv.assign if booted
+                       else np.full((L, self.n_rows), -1, np.int32)),
+            "adist": (lv.adist if booted
+                      else np.zeros((L, self.n_rows), np.float32)),
+            "dirty": (lv.dirty if booted else np.zeros((L,), bool)),
+            "frozen": (lv.frozen if booted else np.zeros((L,), bool)),
+            "cover": (lv.cover if booted else np.zeros((L,), np.float32)),
+        }
+        meta = {"dim": self.dim, "metric": self.metric,
+                "budget": self.budget,
+                "policy": {"levels": self.policy.levels,
+                           "max_deleted_frac": self.policy.max_deleted_frac,
+                           "max_updates": self.policy.max_updates},
+                "n_rows": self.n_rows, "booted": booted,
+                "inserts_total": self.inserts_total,
+                "deletes_total": self.deletes_total,
+                "updates_since_rebuild": self.updates_since_rebuild,
+                "deletions_absorbed": self.deletions_absorbed,
+                "rebuilds": self.rebuilds,
+                "recertifications": (lv.recertifications if booted else 0),
+                "phase_log": [[str(e), float(v)] for e, v in self._phase_log]}
+        return arrays, meta
+
+    def save(self, manager, step: int) -> None:
+        """Blocking checkpoint at ``step`` (for a dynamic run: update ops
+        applied so far) through a ``repro.checkpoint.CheckpointManager``."""
+        arrays, meta = self.state_dict()
+        manager.save(step, arrays, extra=meta, blocking=True)
+        _count("checkpoints_written")
+
+    @classmethod
+    def from_state_dict(cls, arrays, meta) -> "DynamicIndex":
+        pol = RebuildPolicy(**meta["policy"])
+        idx = cls(dim=meta["dim"], metric=meta["metric"], policy=pol,
+                  budget=int(meta["budget"]))
+        # np.array (not asarray): restored leaves may be device arrays whose
+        # numpy views are read-only — maintenance needs writable copies
+        idx._pts = np.array(arrays["points"], np.float32)
+        idx._alive = np.array(arrays["alive"], bool)
+        idx.inserts_total = int(meta["inserts_total"])
+        idx.deletes_total = int(meta["deletes_total"])
+        idx.updates_since_rebuild = int(meta["updates_since_rebuild"])
+        idx.deletions_absorbed = int(meta["deletions_absorbed"])
+        idx.rebuilds = int(meta["rebuilds"])
+        idx._phase_log = [(str(e), float(v)) for e, v in meta["phase_log"]]
+        if meta["booted"]:
+            lv = LevelStructure(np.array(arrays["radii"], np.float32),
+                                idx._pair,
+                                max_centers=max(4 * idx.budget, 256))
+            lv.center = np.array(arrays["center"], bool)
+            lv.assign = np.array(arrays["assign"], np.int32)
+            lv.adist = np.array(arrays["adist"], np.float32)
+            lv.dirty = np.array(arrays["dirty"], bool)
+            lv.frozen = np.array(arrays["frozen"], bool)
+            lv.cover = np.array(arrays["cover"], np.float32)
+            lv.recertifications = int(meta.get("recertifications", 0))
+            idx._levels = lv
+        return idx
+
+    @classmethod
+    def restore(cls, manager, step: Optional[int] = None):
+        """Rebuild a ``DynamicIndex`` from checkpoint ``step`` (default: the
+        latest).  Returns ``(index, step)``, or ``(None, None)`` when the
+        directory holds no checkpoint yet."""
+        if step is None:
+            step = manager.latest_step()
+            if step is None:
+                return None, None
+        meta = manager.read_meta(step)["extra"]
+        L = int(meta["policy"]["levels"])
+        n = int(meta["n_rows"])
+        d = int(meta["dim"]) if meta["dim"] is not None else 0
+        template = {
+            "points": np.zeros((n, d), np.float32),
+            "alive": np.zeros((n,), bool),
+            "radii": np.zeros((L,), np.float32),
+            "center": np.zeros((L, n), bool),
+            "assign": np.zeros((L, n), np.int32),
+            "adist": np.zeros((L, n), np.float32),
+            "dirty": np.zeros((L,), bool),
+            "frozen": np.zeros((L,), bool),
+            "cover": np.zeros((L,), np.float32),
+        }
+        arrays = manager.restore(step, template)
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        return cls.from_state_dict(arrays, meta), step

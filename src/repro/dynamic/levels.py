@@ -1,0 +1,235 @@
+"""Leveled cover maintenance for the dynamic index.
+
+The structure follows the cover-tree-style hierarchy of
+Pellizzoni–Pietracaprina–Pucci (arXiv 2302.07771) specialized to what the
+query path needs: ``L`` independent levels with geometrically halving radii
+``r_0 > r_1 > ... > r_{L-1}`` (level 0 spans the boot diameter).  Each
+*active* level ``l`` maintains two invariants over the live points:
+
+* **cover**: every live point is within ``r_l`` of its assigned center
+  (``assign``/``adist`` record the center id and the *measured* distance);
+* **packing**: centers are pairwise farther than ``r_l`` apart at creation
+  time (greedy insertion; deletions can only remove centers, never move
+  them closer together).
+
+In a metric of doubling dimension ``D`` the packing invariant bounds a
+level's center count by ``(diameter / r_l)^O(D)``, which is what makes the
+finest-affordable level a genuine core-set: the query engine solves on it,
+and the level's measured cover radius is the certificate's proxy bound.
+
+Maintenance is **host-side numpy over metric distances** and strictly
+deterministic (greedy passes in stable id order, no RNG), so replaying the
+same update sequence — or resuming it from a checkpoint of these arrays —
+reproduces the structure bit-for-bit.
+
+Levels whose center count outgrows ``max_centers`` are **frozen**: they
+could never be a query level (the query budget is far below the freeze
+cap), so maintaining their cover is pure waste.  Frozen levels are skipped
+by inserts/deletes and excluded from level selection until the next full
+rebuild reactivates whatever depth the live set affords.  Because center
+counts grow monotonically with level index, the active prefix is always
+contiguous: levels ``0..l_sat-1`` active, ``l_sat..L-1`` frozen.
+
+Re-certification is lazy and dirty-tracked: a level's measured cover
+radius is cached, stays a sound upper bound across pure absorptions and
+member-only deletions (the max can only shrink), and is re-measured only
+when the level is *dirtied* — its center set changed (new center promoted,
+center deleted and orphans repaired).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.obs.trace import count as _count
+
+Pairwise = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+
+class LevelStructure:
+    """The per-level cover state: ``(L, n)`` center mask, assignment and
+    measured assignment distance, plus per-level dirty/frozen flags and the
+    cached cover radius.  ``pair(a_ids, b_ids)`` is the metric distance
+    oracle the owning index closes over its point store."""
+
+    def __init__(self, radii: np.ndarray, pair: Pairwise,
+                 max_centers: int) -> None:
+        self.radii = np.asarray(radii, np.float32)
+        self.L = int(self.radii.shape[0])
+        self._pair = pair
+        self.max_centers = int(max_centers)
+        n = 0
+        self.center = np.zeros((self.L, n), bool)
+        # int32 assignment ids: plenty of headroom (n < 2^31) and the
+        # checkpoint round-trip stays exact with jax x64 disabled
+        self.assign = np.full((self.L, n), -1, np.int32)
+        self.adist = np.zeros((self.L, n), np.float32)
+        self.dirty = np.zeros((self.L,), bool)
+        self.frozen = np.zeros((self.L,), bool)
+        self.cover = np.zeros((self.L,), np.float32)
+        self.recertifications = 0
+
+    # -- storage -------------------------------------------------------------
+    def ensure_rows(self, n: int) -> None:
+        have = self.center.shape[1]
+        if n <= have:
+            return
+        pad = n - have
+        self.center = np.concatenate(
+            [self.center, np.zeros((self.L, pad), bool)], axis=1)
+        self.assign = np.concatenate(
+            [self.assign, np.full((self.L, pad), -1, np.int32)], axis=1)
+        self.adist = np.concatenate(
+            [self.adist, np.zeros((self.L, pad), np.float32)], axis=1)
+
+    def n_centers(self, lev: int, alive: np.ndarray) -> int:
+        return int(np.count_nonzero(self.center[lev] & alive))
+
+    def centers_of(self, lev: int, alive: np.ndarray) -> np.ndarray:
+        """Live center ids of one level, ascending (stable query order)."""
+        return np.flatnonzero(self.center[lev] & alive)
+
+    # -- cover maintenance ---------------------------------------------------
+    def _fold(self, lev: int, ids: np.ndarray) -> bool:
+        """Greedily fold ``ids`` (in the given order) into level ``lev``:
+        points within ``r_l`` of a live center are absorbed, the rest are
+        promoted to centers by a deterministic greedy pass that preserves
+        the packing invariant.  Returns True iff the center set changed."""
+        r = float(self.radii[lev])
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return False
+        cen = np.flatnonzero(self.center[lev])
+        far = ids
+        if cen.size:
+            D = self._pair(ids, cen)
+            j = np.argmin(D, axis=1)
+            dnear = D[np.arange(ids.size), j]
+            covered = dnear <= r
+            cov = ids[covered]
+            self.assign[lev, cov] = cen[j[covered]]
+            self.adist[lev, cov] = dnear[covered]
+            if cov.size and not self.dirty[lev]:
+                # pure absorption keeps the cached cover radius exact
+                self.cover[lev] = max(self.cover[lev],
+                                      float(dnear[covered].max()))
+            far = ids[~covered]
+        if far.size == 0:
+            return False
+        # greedy packing pass over the far points: accept a point as a new
+        # center unless an already-accepted one covers it.  One distance
+        # row per ACCEPTED center (their count is packing-bounded), never
+        # the far x far matrix — a coarse-level center death would
+        # otherwise re-fold nearly the whole live set quadratically.
+        mind = np.full(far.size, np.inf, np.float32)
+        near = np.full(far.size, -1, np.int64)
+        for i in range(far.size):
+            if mind[i] <= r:                   # an accepted center covers i
+                self.assign[lev, far[i]] = far[near[i]]
+                self.adist[lev, far[i]] = float(mind[i])
+                continue
+            self.center[lev, far[i]] = True
+            self.assign[lev, far[i]] = far[i]
+            self.adist[lev, far[i]] = 0.0
+            row = self._pair(far[i:i + 1], far)[0]
+            upd = row < mind
+            mind[upd] = row[upd]
+            near[upd] = i
+        self.dirty[lev] = True
+        return True
+
+    def _freeze_if_saturated(self, lev: int, alive: np.ndarray) -> bool:
+        """Freeze ``lev`` (and everything finer — counts only grow with
+        depth) once its center count outruns the freeze cap."""
+        if self.n_centers(lev, alive) > self.max_centers:
+            self.frozen[lev:] = True
+            return True
+        return False
+
+    def insert(self, ids: np.ndarray, alive: np.ndarray) -> None:
+        """Fold an inserted batch into every active level, freezing levels
+        that saturate past ``max_centers``."""
+        for lev in range(self.L):
+            if self.frozen[lev]:
+                break
+            self._fold(lev, ids)
+            if self._freeze_if_saturated(lev, alive):
+                break
+
+    def delete(self, dead: np.ndarray, alive: np.ndarray) -> None:
+        """Repair every active level after ``dead`` ids went tombstone.
+
+        Deleted members simply vanish (the cached cover radius stays a
+        sound upper bound).  Deleted *centers* dirty the level: their live
+        orphans are re-folded in ascending id order — reassigned when a
+        surviving center covers them, promoted otherwise.
+        """
+        dead = np.asarray(dead, np.int64)
+        for lev in range(self.L):
+            if self.frozen[lev]:
+                break
+            dead_centers = dead[self.center[lev, dead]]
+            if dead_centers.size == 0:
+                continue
+            self.center[lev, dead_centers] = False
+            orphaned = alive & np.isin(self.assign[lev], dead_centers)
+            self.assign[lev, dead_centers] = -1
+            self.dirty[lev] = True
+            self._fold(lev, np.flatnonzero(orphaned))
+            if self._freeze_if_saturated(lev, alive):
+                break
+
+    def rebuild(self, alive: np.ndarray) -> int:
+        """From-scratch greedy build of every level over the live points (in
+        ascending id order), reactivating frozen depth as far as the live
+        set affords.  Returns the number of levels (re)built."""
+        ids = np.flatnonzero(alive)
+        self.center[:, :] = False
+        self.assign[:, :] = -1
+        self.adist[:, :] = 0.0
+        self.dirty[:] = True
+        self.frozen[:] = False
+        built = 0
+        for lev in range(self.L):
+            self._fold(lev, ids)
+            built += 1
+            _count("level_rebuilds")
+            if self._freeze_if_saturated(lev, alive):
+                break
+        return built
+
+    # -- certification -------------------------------------------------------
+    def cover_radius(self, lev: int, alive: np.ndarray) -> float:
+        """Measured cover radius of one level (max live assignment
+        distance).  Dirty levels re-measure (and re-certify) lazily; clean
+        levels serve the cached sound upper bound."""
+        if self.dirty[lev]:
+            live = alive & (self.assign[lev] >= 0)
+            self.cover[lev] = (float(self.adist[lev, live].max())
+                               if live.any() else 0.0)
+            self.dirty[lev] = False
+            self.recertifications += 1
+        return float(self.cover[lev])
+
+    # -- query-level selection ----------------------------------------------
+    def select_level(self, budget: int, k: int,
+                     alive: np.ndarray) -> Optional[int]:
+        """The finest affordable level: among active levels with at most
+        ``budget`` live centers, the one with the most (ties -> finer);
+        when none of those reaches ``k`` centers, fall back to the coarsest
+        active level with at least ``k``.  None when no level qualifies
+        (the caller solves on the live points directly)."""
+        best, best_n = None, -1
+        fallback = None
+        for lev in range(self.L):
+            if self.frozen[lev]:
+                break
+            n_c = self.n_centers(lev, alive)
+            if n_c <= budget and n_c >= best_n:
+                best, best_n = lev, n_c
+            if fallback is None and n_c >= k:
+                fallback = lev
+        if best is not None and best_n >= k:
+            return best
+        return fallback

@@ -62,12 +62,20 @@ from typing import Any, Dict, List, Optional, Tuple
 #   coreset_reuses    rerank requests answered from a cached session slate
 #                     because absorbing the request's candidates left the
 #                     session core-set generation unchanged (no re-solve)
+#   inserts_absorbed  points folded into the dynamic index's leveled cover
+#                     (repro.dynamic, one per inserted row)
+#   deletes_absorbed  points tombstoned out of the dynamic index (deletion
+#                     repair reassigns/promotes their orphans)
+#   level_rebuilds    dynamic-index levels (re)built from scratch (boot and
+#                     every RebuildPolicy-triggered rebuild count each
+#                     level they construct)
 COUNTER_NAMES = ("distance_evals", "bytes_swept", "host_syncs",
                  "device_dispatches", "pool_widenings", "sprint_segments",
                  "jit_recompiles", "points_absorbed", "merges", "retries",
                  "failures_injected", "checkpoints_written",
                  "reducers_recovered", "sessions_active", "rerank_batched",
-                 "coreset_reuses")
+                 "coreset_reuses", "inserts_absorbed", "deletes_absorbed",
+                 "level_rebuilds")
 
 ENV_VAR = "REPRO_TRACE"
 

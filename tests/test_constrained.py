@@ -11,11 +11,10 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
+import repro
 from repro.constrained import (FairStreamingCoreset, brute_force_constrained,
-                               constrained_solve, fair_diversity_maximize,
-                               fair_streaming_diversity, feasible_greedy,
-                               grouped_coreset, local_search,
-                               simulate_fair_mr)
+                               constrained_solve, feasible_greedy,
+                               grouped_coreset, local_search)
 from repro.core.measures import diversity
 from repro.core.metrics import get_metric
 from repro.data import balanced_quotas, clustered_dataset, select_diverse
@@ -26,6 +25,15 @@ def _value(pts, idx, measure, metric="euclidean"):
     m = get_metric(metric)
     sub = jnp.asarray(np.asarray(pts)[np.asarray(idx)])
     return diversity(measure, np.asarray(m.pairwise(sub, sub)))
+
+
+def _diversify(pts, lab, quotas, measure="remote-edge", *, mode="batch",
+               **knobs):
+    """Constrained run through the one front door (``quotas=`` sugar)."""
+    return repro.diversify(
+        repro.ProblemSpec(points=pts, k=int(np.sum(quotas)), measure=measure,
+                          labels=lab, quotas=quotas),
+        repro.ExecutionSpec(mode=mode, **knobs))
 
 
 def _labelled(n, m, seed, dim=3):
@@ -45,8 +53,7 @@ def test_quotas_always_satisfied_single_machine(measure):
     for seed in range(4):
         pts, lab = _labelled(150, 3, seed)
         quotas = [2, 3, 1]
-        idx, _, _ = fair_diversity_maximize(pts, lab, quotas, measure,
-                                            kprime=16)
+        idx = _diversify(pts, lab, quotas, measure, kprime=16, b=1).indices
         assert len(idx) == 6
         assert len(set(idx.tolist())) == 6  # distinct points
         np.testing.assert_array_equal(np.bincount(lab[idx], minlength=3),
@@ -56,12 +63,11 @@ def test_quotas_always_satisfied_single_machine(measure):
 def test_quotas_satisfied_streaming_and_mr():
     pts, lab = _labelled(800, 4, seed=7)
     quotas = [1, 2, 2, 1]
-    sol, sol_lab = fair_streaming_diversity(pts, lab, quotas, kprime=24,
-                                            chunk=111)
-    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=4), quotas)
-    _, mr_lab, _ = simulate_fair_mr(pts, lab, quotas, num_reducers=4,
-                                    kprime=24)
-    np.testing.assert_array_equal(np.bincount(mr_lab, minlength=4), quotas)
+    st = _diversify(pts, lab, quotas, mode="streaming", kprime=24, chunk=111)
+    np.testing.assert_array_equal(np.bincount(st.labels, minlength=4), quotas)
+    mr = _diversify(pts, lab, quotas, mode="mapreduce", num_reducers=4,
+                    kprime=24, b=1)
+    np.testing.assert_array_equal(np.bincount(mr.labels, minlength=4), quotas)
 
 
 def test_infeasible_quota_raises():
@@ -74,8 +80,7 @@ def test_infeasible_quota_raises():
 def test_empty_group_with_zero_quota_ok():
     pts, lab = _labelled(60, 2, seed=1)
     lab3 = lab.copy()  # m=3 but group 2 never occurs
-    idx, _, _ = fair_diversity_maximize(pts, lab3, [2, 2, 0], "remote-edge",
-                                        kprime=12)
+    idx = _diversify(pts, lab3, [2, 2, 0], kprime=12, b=1).indices
     np.testing.assert_array_equal(np.bincount(lab3[idx], minlength=3),
                                   [2, 2, 0])
 
@@ -96,9 +101,9 @@ def test_matches_brute_force_n_le_10(measure):
         lab[:2] = [0, 1]
         quotas = [2, 2]
         opt, _ = brute_force_constrained(pts, lab, quotas, measure)
-        idx, got, _ = fair_diversity_maximize(pts, lab, quotas, measure,
-                                              kprime=n)
-        assert got == pytest.approx(opt, rel=1e-6)
+        res = _diversify(pts, lab, quotas, measure, kprime=n, b=1)
+        idx = res.indices
+        assert res.value == pytest.approx(opt, rel=1e-6)
         np.testing.assert_array_equal(np.bincount(lab[idx], minlength=2),
                                       quotas)
 
@@ -174,8 +179,7 @@ def test_coreset_path_close_to_full_solve_on_doubling_data():
         rng = np.random.default_rng(seed)
         lab = rng.integers(0, 3, size=2000)
         quotas = [3, 3, 2]
-        _, v_cs, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
-                                             kprime=32)
+        v_cs = _diversify(pts, lab, quotas, kprime=32, b=1).value
         full = constrained_solve(pts, lab, quotas, "remote-edge",
                                  exact_limit=0)
         v_full = _value(pts, full, "remote-edge")
@@ -191,12 +195,10 @@ def test_streaming_agrees_with_single_machine():
     rng = np.random.default_rng(11)
     lab = rng.integers(0, 3, size=3000)
     quotas = [2, 2, 2]
-    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
-                                         kprime=48)
-    sol, sol_lab = fair_streaming_diversity(pts, lab, quotas, kprime=48,
-                                            chunk=997)
-    v_st = _value(sol, np.arange(len(sol)), "remote-edge")
-    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=3), quotas)
+    v_sm = _diversify(pts, lab, quotas, kprime=48, b=1).value
+    st = _diversify(pts, lab, quotas, mode="streaming", kprime=48, chunk=997)
+    v_st = _value(st.solution, np.arange(len(st.solution)), "remote-edge")
+    np.testing.assert_array_equal(np.bincount(st.labels, minlength=3), quotas)
     assert v_st >= 0.75 * v_sm
 
 
@@ -211,8 +213,9 @@ def test_streaming_small_groups():
         smm.update(pts[i:i + 97], lab[i:i + 97])
     cpts, clab = smm.finalize()
     assert (clab == 1).sum() == 3
-    sol, sol_lab = fair_streaming_diversity(pts, lab, [3, 2], kprime=16)
-    np.testing.assert_array_equal(np.bincount(sol_lab, minlength=2), [3, 2])
+    st = _diversify(pts, lab, [3, 2], mode="streaming", kprime=16,
+                    chunk=4096)
+    np.testing.assert_array_equal(np.bincount(st.labels, minlength=2), [3, 2])
 
 
 def test_simulate_mr_agrees_with_single_machine():
@@ -220,14 +223,13 @@ def test_simulate_mr_agrees_with_single_machine():
     rng = np.random.default_rng(12)
     lab = rng.integers(0, 3, size=3200)
     quotas = [2, 2, 2]
-    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
-                                         kprime=48)
+    v_sm = _diversify(pts, lab, quotas, kprime=48, b=1).value
     for partition in ("contiguous", "random"):
-        _, mr_lab, v_mr = simulate_fair_mr(pts, lab, quotas, num_reducers=4,
-                                           kprime=48, partition=partition)
-        np.testing.assert_array_equal(np.bincount(mr_lab, minlength=3),
+        mr = _diversify(pts, lab, quotas, mode="mapreduce", num_reducers=4,
+                        kprime=48, b=1, partition=partition)
+        np.testing.assert_array_equal(np.bincount(mr.labels, minlength=3),
                                       quotas)
-        assert v_mr >= 0.75 * v_sm
+        assert mr.value >= 0.75 * v_sm
 
 
 _SUBPROC = textwrap.dedent("""
@@ -237,8 +239,8 @@ _SUBPROC = textwrap.dedent("""
     import numpy as np
     import jax
     import jax.numpy as jnp
-    from repro.constrained import (fair_diversity_maximize,
-                                   mr_fair_diversity, mr_grouped_coreset)
+    import repro
+    from repro.constrained import mr_grouped_coreset
     from repro.data import clustered_dataset
 
     mesh = jax.make_mesh((8,), ("data",))
@@ -248,15 +250,16 @@ _SUBPROC = textwrap.dedent("""
     quotas = [2, 2, 2]
     cs = mr_grouped_coreset(jnp.asarray(pts), jnp.asarray(lab), 3, 6, 32,
                             "remote-edge", mesh)
-    sol, sol_lab, val = mr_fair_diversity(jnp.asarray(pts), jnp.asarray(lab),
-                                          quotas, "remote-edge", mesh,
-                                          kprime=32)
-    _, v_sm, _ = fair_diversity_maximize(pts, lab, quotas, "remote-edge",
-                                         kprime=32)
+    prob = repro.ProblemSpec(points=pts, k=6, labels=lab, quotas=quotas)
+    mr = repro.diversify(prob, repro.ExecutionSpec(mode="mapreduce",
+                                                   mesh=mesh, kprime=32,
+                                                   b=1))
+    v_sm = repro.diversify(prob, repro.ExecutionSpec(mode="batch", kprime=32,
+                                                     b=1)).value
     print(json.dumps({
         "coreset_size": cs.size,
-        "labels": np.bincount(np.asarray(sol_lab), minlength=3).tolist(),
-        "val": float(val), "v_sm": float(v_sm),
+        "labels": np.bincount(np.asarray(mr.labels), minlength=3).tolist(),
+        "val": float(mr.value), "v_sm": float(v_sm),
     }))
 """)
 

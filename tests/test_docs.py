@@ -21,6 +21,8 @@ DOCTEST_MODULES = [
     "repro.data.selection",      # select_diverse
     "repro.serving.engine",      # diverse_rerank
     "repro.serving.rerank",      # OnlineReranker / rerank_batched
+    "repro.dynamic.index",       # DynamicIndex insert/delete/query
+
     "repro.obs",                 # RunTrace / counters / exporters
 ]
 

@@ -1,0 +1,317 @@
+"""Dynamic-index subsystem tests: update-op vocabulary, leveled-cover
+invariants under churn, deterministic replay, bit-identical checkpoint
+round-trips (state_dict and CheckpointManager), planner selection/rejection
+for ``mode="dynamic"``, end-to-end facade churn with certificate quality,
+kill-and-resume parity mirroring the streaming resilience harness, and the
+densest-cluster deletion re-certification bound."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+import repro
+from repro.api import ExecutionSpec, ProblemSpec, diversify, plan
+from repro.checkpoint import CheckpointError, CheckpointManager
+from repro.core.metrics import get_metric
+from repro.distributed import FailureInjector, ResiliencePolicy
+from repro.distributed.fault_tolerance import InjectedFailure
+from repro.dynamic import (Delete, DynamicIndex, Insert, RebuildPolicy,
+                           as_update_ops, is_update_stream)
+
+
+def _pts(n=400, d=5, seed=0, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32) * scale
+
+
+def _churn_ops(seed=3, n0=300, d=6, rounds=16):
+    """Mixed insert/delete stream over disjoint id ranges (every third op
+    deletes a block of 15 ids well below the running insert frontier)."""
+    rng = np.random.default_rng(seed)
+    ops = [Insert(rng.normal(size=(n0, d)).astype(np.float32) * 10)]
+    for j in range(rounds):
+        if j % 3 == 2:
+            ops.append(Delete(np.arange(j * 15, j * 15 + 15)))
+        else:
+            ops.append(Insert(rng.normal(size=(40, d)).astype(np.float32)
+                              * 10))
+    return ops
+
+
+def _coverage(points, picks):
+    """Max over ``points`` of the distance to the nearest pick."""
+    m = get_metric("euclidean")
+    D = np.asarray(m.pairwise(jnp.asarray(points), jnp.asarray(picks)))
+    return float(D.min(axis=1).max())
+
+
+# --------------------------------------------------------------------------
+# update-op vocabulary
+# --------------------------------------------------------------------------
+
+def test_update_ops_vocabulary():
+    pts = _pts(50)
+    assert not is_update_stream(pts)
+    assert not is_update_stream([pts])                  # chunk stream
+    assert is_update_stream([Insert(pts), ("delete", [0, 1])])
+    ops = as_update_ops(pts)                            # array sugar
+    assert len(ops) == 1 and isinstance(ops[0], Insert)
+    ops = as_update_ops([("insert", pts), Delete([3])])
+    assert isinstance(ops[0], Insert) and isinstance(ops[1], Delete)
+    with pytest.raises(ValueError, match="element 1"):
+        as_update_ops([Insert(pts), "nonsense"])
+
+
+# --------------------------------------------------------------------------
+# index basics + invariants
+# --------------------------------------------------------------------------
+
+def test_insert_delete_query_basics():
+    idx = DynamicIndex(dim=5, budget=32)
+    ids = idx.insert(_pts(200))
+    np.testing.assert_array_equal(ids, np.arange(200))
+    assert idx.n_alive == 200 and idx.booted
+    idx.delete(ids[:40])
+    assert idx.n_alive == 160
+    q = idx.query(6)
+    assert q.solution.shape == (6, 5)
+    assert len(set(q.ids.tolist())) == 6
+    assert np.all(q.ids >= 40)                          # only live ids
+    assert q.cert.kind == "dynamic"
+    assert q.cert.deletions_absorbed == 40
+    with pytest.raises(ValueError, match="already deleted"):
+        idx.delete([0])
+    with pytest.raises(ValueError, match="unknown id"):
+        idx.delete([10_000])
+
+
+def test_non_metric_rejected():
+    with pytest.raises(ValueError, match="triangle"):
+        DynamicIndex(dim=3, metric="sqeuclidean")
+
+
+def test_cover_invariant_under_churn():
+    """Every live point sits within the certified cover radius of the
+    query-level core-set — the certificate's proxy bound is sound."""
+    idx = DynamicIndex(dim=6, budget=48)
+    for op in _churn_ops():
+        idx.apply(op)
+    q = idx.query(8)
+    live = idx._pts[idx._alive]
+    assert _coverage(live, np.asarray(q.coreset.points)) <= \
+        q.cert.radius + 1e-4
+
+
+def test_query_determinism_and_roundtrip():
+    ops = _churn_ops(seed=5)
+    a, b = DynamicIndex(dim=6, budget=48), DynamicIndex(dim=6, budget=48)
+    for op in ops:
+        a.apply(op)
+        b.apply(op)
+    qa, qb = a.query(8), b.query(8)
+    np.testing.assert_array_equal(qa.solution, qb.solution)
+    assert qa.cert == qb.cert
+    # state_dict round-trip is bit-identical
+    c = DynamicIndex.from_state_dict(*a.state_dict())
+    qc = c.query(8)
+    np.testing.assert_array_equal(qa.solution, qc.solution)
+    assert qa.cert == qc.cert
+
+
+def test_rebuild_triggered_by_deletion_fraction():
+    pol = RebuildPolicy(max_deleted_frac=0.2)
+    idx = DynamicIndex(dim=5, policy=pol, budget=32)
+    ids = idx.insert(_pts(300))
+    idx.delete(ids[:100])                  # 100/300 > 0.2 -> rebuild
+    assert idx.rebuilds == 2               # boot + churn rebuild
+    assert idx.deletions_absorbed == 0     # reset by the rebuild
+    assert [e for e, _ in idx.phase_log] == ["boot", "rebuild"]
+
+
+# --------------------------------------------------------------------------
+# checkpoint round-trip + schema versioning
+# --------------------------------------------------------------------------
+
+def test_manager_save_restore_bit_identical(tmp_path):
+    idx = DynamicIndex(dim=6, budget=48)
+    ops = _churn_ops(seed=7)
+    for op in ops[:10]:
+        idx.apply(op)
+    mgr = CheckpointManager(str(tmp_path))
+    idx.save(mgr, 10)
+    back, step = DynamicIndex.restore(mgr)
+    assert step == 10
+    for op in ops[10:]:
+        idx.apply(op)
+        back.apply(op)
+    qa, qb = idx.query(8), back.query(8)
+    np.testing.assert_array_equal(qa.solution, qb.solution)
+    assert qa.cert == qb.cert
+
+
+def test_checkpoint_schema_version_mismatch(tmp_path):
+    idx = DynamicIndex(dim=5, budget=32)
+    idx.insert(_pts(100))
+    mgr = CheckpointManager(str(tmp_path))
+    idx.save(mgr, 1)
+    meta_path = os.path.join(str(tmp_path), "step_000000001", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["schema_version"] = 999
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointError, match="schema_version=999"):
+        DynamicIndex.restore(mgr)
+    # pre-versioning checkpoints (no field) stay readable as schema 1
+    del meta["schema_version"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    back, step = DynamicIndex.restore(mgr)
+    assert step == 1 and back.n_alive == 100
+
+
+# --------------------------------------------------------------------------
+# planner: selection, explain, rejections
+# --------------------------------------------------------------------------
+
+def test_planner_auto_selects_dynamic():
+    p = plan(ProblemSpec(points=_churn_ops(), k=8))
+    assert p.mode == "dynamic"
+    assert "update-stream" in p.reason
+    assert p.updates == 17
+    text = p.explain()
+    assert "leveled cover" in text and "rebuild" in text
+
+
+def test_planner_single_array_sugar():
+    p = plan(ProblemSpec(points=_pts(200), k=6),
+             ExecutionSpec(mode="dynamic"))
+    assert p.mode == "dynamic" and p.updates == 1
+    res = p.execute()
+    assert res.solution.shape == (6, 5)
+    assert res.cert.kind == "dynamic"
+
+
+def test_planner_rejections():
+    ops = _churn_ops()
+    with pytest.raises(ValueError, match="dynamic"):
+        plan(ProblemSpec(points=ops, k=8), ExecutionSpec(mode="batch"))
+    lab = np.zeros(10, np.int64)
+    with pytest.raises(ValueError):
+        plan(ProblemSpec(points=ops, k=4, labels=lab, quotas=[2, 2]))
+    with pytest.raises(ValueError, match="rebuild"):
+        plan(ProblemSpec(points=_pts(100), k=4),
+             ExecutionSpec(mode="batch", rebuild=RebuildPolicy()))
+    with pytest.raises(ValueError):
+        plan(ProblemSpec(points=ops, k=8),
+             ExecutionSpec(mode="dynamic", num_reducers=4))
+
+
+# --------------------------------------------------------------------------
+# facade end-to-end + resilience (kill / resume / degrade)
+# --------------------------------------------------------------------------
+
+def test_facade_churn_certified_close_to_batch():
+    """The acceptance bound: a churned dynamic run's certified anticover
+    radius is within 1.10x of the from-scratch greedy radius at ``k`` on
+    the surviving points."""
+    ops = _churn_ops(seed=3)
+    res = diversify(ProblemSpec(points=ops, k=8),
+                    ExecutionSpec(mode="dynamic", kprime=48))
+    assert res.cert.kind == "dynamic"
+    assert res.telemetry["mode"] == "dynamic"
+    # replay on host to get the survivor set
+    idx = DynamicIndex(dim=6, budget=48)
+    for op in ops:
+        idx.apply(op)
+    survivors = idx._pts[idx._alive]
+    from repro.core.gmm import gmm_schedule
+    exact = float(gmm_schedule(survivors, 8, ((1, 8),)).radius)
+    assert res.cert.scale <= 1.10 * exact
+
+
+def test_kill_resume_matches_uninterrupted(tmp_path):
+    ops = _churn_ops(seed=3)
+    prob = ProblemSpec(points=ops, k=8)
+    ex = lambda pol=None: ExecutionSpec(mode="dynamic", kprime=48,
+                                        resilience=pol, trace=True)
+    base = diversify(prob, ex())
+
+    kill = ResiliencePolicy(on_failure="raise", checkpoint_dir=str(tmp_path),
+                            checkpoint_every=4,
+                            injector=FailureInjector(fail_at=("update:11",)))
+    with pytest.raises(InjectedFailure):
+        diversify(prob, ex(kill))
+
+    resume = ResiliencePolicy(checkpoint_dir=str(tmp_path),
+                              checkpoint_every=4)
+    res = diversify(prob, ex(resume))
+    np.testing.assert_array_equal(np.asarray(base.solution),
+                                  np.asarray(res.solution))
+    np.testing.assert_array_equal(base.indices, res.indices)
+    assert res.cert == base.cert
+    rs = res.telemetry["resilience"]
+    assert rs["resumed_from"] is not None       # picked up mid-churn
+    assert res.telemetry["counters"]["checkpoints_written"] >= 1
+
+
+def test_degrade_drops_update_and_stamps_cert():
+    ops = _churn_ops(seed=3)
+    # drop a DELETE op (op 3 of the stream): the index keeps those points
+    pol = ResiliencePolicy(on_failure="degrade",
+                           injector=FailureInjector(fail_at=("update:3",)))
+    res = diversify(ProblemSpec(points=ops, k=8),
+                    ExecutionSpec(mode="dynamic", kprime=48, resilience=pol))
+    assert res.cert.degraded
+    assert res.cert.total_shards == len(ops)
+    assert 3 not in res.cert.surviving_shards
+    assert res.telemetry["resilience"]["failed"] == [3]
+
+
+def test_counters_emitted():
+    ops = _churn_ops(seed=9)
+    res = diversify(ProblemSpec(points=ops, k=8),
+                    ExecutionSpec(mode="dynamic", kprime=48, trace=True))
+    c = res.telemetry["counters"]
+    assert c["inserts_absorbed"] >= 300
+    assert c["deletes_absorbed"] >= 15
+    assert c["level_rebuilds"] >= 1             # the boot build
+    assert c.get("checkpoints_written", 0) == 0   # no policy, no saves
+
+
+# --------------------------------------------------------------------------
+# densest-cluster deletion: re-certification stays near exact
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_densest_cluster_delete_recertifies(seed):
+    """Delete the densest cluster outright; the dynamic answer and the
+    auto-b re-certified batch answer on the survivors must both cover the
+    survivors within 1.10x of the exact greedy (b=1, k'=k) radius."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(5, 4)).astype(np.float32) * 50.0
+    dense = (centers[0] +
+             rng.normal(size=(150, 4)).astype(np.float32) * 0.5)
+    rest = np.concatenate([
+        c + rng.normal(size=(60, 4)).astype(np.float32) * 2.0
+        for c in centers[1:]])
+    pts = np.concatenate([dense, rest]).astype(np.float32)
+
+    idx = DynamicIndex(dim=4, budget=48)
+    ids = idx.insert(pts)
+    idx.delete(ids[:150])                       # the whole dense cluster
+    q = idx.query(6)
+    survivors = pts[150:]
+
+    from repro.core.gmm import gmm_schedule
+    exact = float(gmm_schedule(survivors, 6, ((1, 6),)).radius)
+    assert q.cert.scale <= 1.10 * exact
+    assert q.cert.deletions_absorbed == 150
+    # auto-b controller (tau/cliff defaults) re-certifies on the survivors
+    auto = diversify(survivors, k=6,
+                     execution=ExecutionSpec(mode="batch", kprime=48,
+                                             b="auto"))
+    assert auto.cert is not None
+    assert auto.cert.scale <= 1.10 * exact

@@ -7,11 +7,11 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
+import repro
 from repro.constrained import (LaminarMatroid, PartitionMatroid,
                                TransversalMatroid, as_matroid,
                                brute_force_constrained, constrained_solve,
-                               fair_diversity_maximize, feasible_greedy,
-                               local_search)
+                               feasible_greedy, local_search)
 from repro.core.metrics import get_metric
 
 
@@ -149,7 +149,9 @@ def test_laminar_solution_feasible():
     pts = rng.normal(size=(300, 3)).astype(np.float32)
     lab = rng.integers(0, 4, size=300)
     lam = LaminarMatroid(4, [([0, 1], 2), ([2, 3], 2), ([0, 1, 2, 3], 3)])
-    idx, _, _ = fair_diversity_maximize(pts, lab, matroid=lam, kprime=16)
+    idx = repro.diversify(
+        repro.ProblemSpec(points=pts, k=lam.k, labels=lab, matroid=lam),
+        repro.ExecutionSpec(mode="batch", kprime=16, b=1)).indices
     assert len(idx) == 3 == len(set(idx.tolist()))
     assert lam.independence_oracle(lab[idx])
 
